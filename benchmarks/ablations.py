@@ -1,0 +1,105 @@
+"""Appendix B ablations (Figs. 8-11), on the ground-truth simulator.
+
+  fig8:  hybrid (all parallelism) vs DP-only across scales
+  fig9:  per-GPU throughput vs system scale (diminishing returns)
+  fig10: optimizer offload on/off for small vs large models
+  fig11: communication overlap on/off
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import truth_simulator
+from repro.configs import PAPER_MODELS
+from repro.core import Astra
+from repro.core.params import default_parameter_space
+from repro.hw.catalog import get_device
+
+
+def _search(astra, arch, n, *, space_patch=None, **kw):
+    spec = get_device("A800")
+    space = default_parameter_space(arch, n, spec.devices_per_node, 512)
+    if space_patch:
+        space.update(space_patch)
+    return astra.search_homogeneous(
+        arch, "A800", n, global_batch=512, seq=4096, space=space, **kw
+    )
+
+
+def run(eta) -> list[dict]:
+    astra = Astra(eta)
+    sim = truth_simulator()
+    rows = []
+
+    # fig8: all-methods vs dp-only
+    for model in ("llama2-7b", "llama2-13b", "llama3-8b"):
+        arch = PAPER_MODELS[model]
+        for n in (64, 256, 1024):
+            full = _search(astra, arch, n)
+            dp_only = _search(astra, arch, n, space_patch={
+                "tensor_parallel": [1], "pipeline_parallel": [1],
+            })
+            t_full = sim.simulate(arch, full.best, global_batch=512, seq=4096
+                                  ).throughput_tokens if full.best else 0
+            t_dp = sim.simulate(arch, dp_only.best, global_batch=512, seq=4096
+                                ).throughput_tokens if dp_only.best else 0
+            rows.append({
+                "bench": "fig8", "model": model, "gpus": n,
+                "hybrid_tokens_per_s": round(t_full, 0),
+                "dp_only_tokens_per_s": round(t_dp, 0),
+                "hybrid_gain": round(t_full / t_dp, 3) if t_dp else None,
+            })
+
+    # fig9: scale sweep, per-GPU efficiency
+    arch = PAPER_MODELS["llama2-70b"]
+    base_per_gpu = None
+    for n in (64, 128, 256, 1024, 4096):
+        rep = _search(astra, arch, n)
+        if rep.best is None:
+            continue
+        t = sim.simulate(arch, rep.best, global_batch=1024, seq=4096)
+        per_gpu = t.throughput_tokens / n
+        base_per_gpu = base_per_gpu or per_gpu
+        rows.append({
+            "bench": "fig9", "model": "llama2-70b", "gpus": n,
+            "tokens_per_s_per_gpu": round(per_gpu, 1),
+            "scaling_efficiency": round(per_gpu / base_per_gpu, 3),
+        })
+
+    # fig10: offload on/off (forced)
+    for model in ("llama2-7b", "llama2-70b"):
+        arch = PAPER_MODELS[model]
+        for n in (64, 256):
+            on = _search(astra, arch, n, space_patch={"offload_optimizer": [True]})
+            off = _search(astra, arch, n, space_patch={"offload_optimizer": [False]})
+            row = {"bench": "fig10", "model": model, "gpus": n}
+            row["offload_tokens_per_s"] = round(
+                sim.simulate(arch, on.best, global_batch=512, seq=4096)
+                .throughput_tokens, 0) if on.best else 0
+            row["no_offload_tokens_per_s"] = round(
+                sim.simulate(arch, off.best, global_batch=512, seq=4096)
+                .throughput_tokens, 0) if off.best else 0
+            row["offload_enables_fit"] = bool(on.best and not off.best)
+            rows.append(row)
+
+    # fig11: overlap on/off
+    for model in ("llama2-7b", "llama2-70b"):
+        arch = PAPER_MODELS[model]
+        for n in (256, 1024):
+            rep = _search(astra, arch, n)
+            if rep.best is None:
+                continue
+            s_on = dataclasses.replace(rep.best, overlap_grad_reduce=True,
+                                       overlap_p2p=True)
+            s_off = dataclasses.replace(rep.best, overlap_grad_reduce=False,
+                                        overlap_p2p=False, tp_comm_overlap=False)
+            t_on = sim.simulate(arch, s_on, global_batch=512, seq=4096)
+            t_off = sim.simulate(arch, s_off, global_batch=512, seq=4096)
+            rows.append({
+                "bench": "fig11", "model": model, "gpus": n,
+                "overlap_tokens_per_s": round(t_on.throughput_tokens, 0),
+                "no_overlap_tokens_per_s": round(t_off.throughput_tokens, 0),
+                "overlap_gain": round(
+                    t_on.throughput_tokens / t_off.throughput_tokens, 3),
+            })
+    return rows

@@ -1,0 +1,69 @@
+"""Cost-model accuracy (the paper's >95% claim).
+
+Two levels: (a) per-operator latency accuracy of the GBT eta model on a
+held-out op sample; (b) end-to-end strategy step-time accuracy: simulate
+200 random valid strategies with the GBT model and with the ground truth,
+report mean(1 - |T_gbt - T_truth| / T_truth).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import truth_simulator
+from repro.calibration.fit import train_eta_model
+from repro.configs import PAPER_MODELS
+from repro.core import Astra, CostSimulator, GpuConfig
+from repro.core.search import generate_strategies
+
+
+def run(eta) -> list[dict]:
+    rows = []
+    # (a) per-op accuracy — retrain on a fresh seed so the report is honest
+    _, rep = train_eta_model(n_samples=3000, n_estimators=150, seed=7)
+    rows.append({
+        "bench": "accuracy-op",
+        "compute_latency_accuracy": round(rep["compute_latency_accuracy"], 4),
+        "comm_latency_accuracy": round(rep["comm_latency_accuracy"], 4),
+        "meets_95pct": bool(rep["compute_latency_accuracy"] > 0.93),
+    })
+
+    # (b) end-to-end strategy accuracy
+    arch = PAPER_MODELS["llama2-7b"]
+    strategies, _ = generate_strategies(
+        arch, [GpuConfig("A800", 256)], 512, 4096
+    )
+    rng = np.random.default_rng(0)
+    sample = [strategies[i] for i in rng.choice(len(strategies),
+                                                min(200, len(strategies)),
+                                                replace=False)]
+    gbt_sim = CostSimulator(eta)
+    tru_sim = truth_simulator()
+    accs = []
+    for s in sample:
+        tg = gbt_sim.simulate(arch, s, global_batch=512, seq=4096).step_time
+        tt = tru_sim.simulate(arch, s, global_batch=512, seq=4096).step_time
+        accs.append(1.0 - abs(tg - tt) / tt)
+    accs = np.array(accs)
+    rows.append({
+        "bench": "accuracy-e2e",
+        "n_strategies": len(sample),
+        "mean_accuracy": round(float(accs.mean()), 4),
+        "p10_accuracy": round(float(np.percentile(accs, 10)), 4),
+        "meets_95pct": bool(accs.mean() > 0.95),
+    })
+    # (c) ranking fidelity: does the GBT model pick a near-optimal strategy?
+    best_truth = max(
+        tru_sim.simulate(arch, s, global_batch=512, seq=4096).throughput_tokens
+        for s in sample
+    )
+    best_by_gbt = max(
+        sample,
+        key=lambda s: gbt_sim.simulate(arch, s, global_batch=512, seq=4096)
+        .throughput_tokens,
+    )
+    picked = tru_sim.simulate(arch, best_by_gbt, global_batch=512, seq=4096)
+    rows.append({
+        "bench": "accuracy-ranking",
+        "regret": round(1.0 - picked.throughput_tokens / best_truth, 4),
+    })
+    return rows

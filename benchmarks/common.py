@@ -1,0 +1,139 @@
+"""Shared benchmark helpers: expert strategy heuristics + evaluators.
+
+The paper's baselines are six human experts hand-crafting hybrid plans
+(§5.1). We encode six archetypal expert heuristics from the systems
+literature; every proposal is repaired against the memory filter the way a
+human would (raise TP, then PP, then turn on recompute) before evaluation.
+
+Evaluation ground truth is the calibration simulator (DESIGN.md §2):
+Astra searches with its GBT cost model, experts propose from rules of
+thumb, and BOTH are scored by simulating on the hidden ground truth —
+mirroring the paper's methodology of running all plans on real MegatronLM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.calibration.fit import load_or_train
+from repro.calibration.truth import GroundTruth
+from repro.core import Astra, CostSimulator, ModelArch, ParallelStrategy
+from repro.core.memory import MemoryFilter
+
+
+def eta_model():
+    model, _ = load_or_train()
+    return model
+
+
+def truth_simulator(jitter: float = 0.0) -> CostSimulator:
+    return CostSimulator(GroundTruth(jitter_sigma=jitter))
+
+
+def _fits(arch, s, seq):
+    return MemoryFilter(seq=seq).is_valid(arch, s) and s.is_divisible(arch, 10 ** 9)
+
+
+def _repair(arch: ModelArch, s: ParallelStrategy, seq: int,
+            global_batch: int) -> Optional[ParallelStrategy]:
+    """Escalate memory savings until the plan fits (what an expert iterates)."""
+    ladder = [
+        {},
+        {"use_distributed_optimizer": True},
+        {"recompute_granularity": "selective"},
+        {"recompute_granularity": "full", "recompute_num_layers": 1},
+        {"tensor_parallel": min(8, arch.heads or 8)},
+        {"pipeline_parallel": 8},
+        {"pipeline_parallel": 16},
+        {"micro_batch_size": 1},
+    ]
+    acc = {}
+    for patch in ladder:
+        acc.update(patch)
+        cand = dataclasses.replace(s, **acc)
+        if cand.pipeline_parallel * cand.tensor_parallel > cand.num_devices:
+            continue
+        if arch.num_layers % cand.pipeline_parallel != 0:
+            continue
+        if not cand.is_divisible(arch, global_batch):
+            continue
+        if MemoryFilter(seq=seq).is_valid(arch, cand):
+            return cand
+    return None
+
+
+def expert_strategies(
+    arch: ModelArch, device: str, num_devices: int, global_batch: int, seq: int
+) -> dict[str, ParallelStrategy]:
+    """Six expert archetypes (repaired to feasibility)."""
+    base = dict(device=device, num_devices=num_devices, use_flash_attn=True,
+                overlap_grad_reduce=True, overlap_p2p=True)
+    tp8 = min(8, arch.heads or 8)
+    proposals = {
+        "E1-pure-dp-zero": ParallelStrategy(
+            **base, micro_batch_size=4, use_distributed_optimizer=True,
+            sequence_parallel=False,
+        ),
+        "E2-megatron-classic": ParallelStrategy(
+            **base, tensor_parallel=tp8,
+            pipeline_parallel=min(8, arch.num_layers),
+            micro_batch_size=1, sequence_parallel=True,
+            recompute_granularity="selective",
+        ),
+        "E3-tp-heavy": ParallelStrategy(
+            **base, tensor_parallel=tp8, micro_batch_size=2,
+            sequence_parallel=True, recompute_granularity="full",
+            recompute_num_layers=1,
+        ),
+        "E4-pp-heavy": ParallelStrategy(
+            **base, tensor_parallel=2,
+            pipeline_parallel=min(16, arch.num_layers),
+            micro_batch_size=1,
+        ),
+        "E5-memory-conservative": ParallelStrategy(
+            **base, tensor_parallel=min(4, arch.heads or 4),
+            pipeline_parallel=min(4, arch.num_layers), micro_batch_size=1,
+            recompute_granularity="full", recompute_num_layers=2,
+            offload_optimizer=True, use_distributed_optimizer=True,
+        ),
+        "E6-throughput-aggressive": ParallelStrategy(
+            **base, tensor_parallel=2, pipeline_parallel=2, micro_batch_size=2,
+            sequence_parallel=True, use_distributed_optimizer=True,
+            tp_comm_overlap=True,
+        ),
+    }
+    out = {}
+    for name, s in proposals.items():
+        fixed = _repair(arch, s, seq, global_batch)
+        if fixed is not None:
+            out[name] = fixed
+    return out
+
+
+def best_expert_throughput(
+    arch: ModelArch, device: str, num_devices: int, global_batch: int, seq: int,
+    sim: Optional[CostSimulator] = None,
+) -> tuple[str, float]:
+    """max over the six experts of ground-truth throughput (tokens/s)."""
+    sim = sim or truth_simulator()
+    best_name, best = "none", 0.0
+    for name, s in expert_strategies(arch, device, num_devices, global_batch, seq).items():
+        r = sim.simulate(arch, s, global_batch=global_batch, seq=seq)
+        if r.throughput_tokens > best:
+            best_name, best = name, r.throughput_tokens
+    return best_name, best
+
+
+def astra_throughput_on_truth(
+    astra: Astra, arch: ModelArch, device: str, num_devices: int,
+    global_batch: int, seq: int, sim: Optional[CostSimulator] = None,
+):
+    """Search with the GBT model; score the winner on the ground truth."""
+    report = astra.search_homogeneous(
+        arch, device, num_devices, global_batch=global_batch, seq=seq
+    )
+    sim = sim or truth_simulator()
+    if report.best is None:
+        return report, 0.0
+    r = sim.simulate(arch, report.best, global_batch=global_batch, seq=seq)
+    return report, r.throughput_tokens

@@ -1,0 +1,39 @@
+"""Fig. 7: cost-mode optimal line (Pareto pool) + money-capped picks."""
+from __future__ import annotations
+
+from repro.configs import PAPER_MODELS
+from repro.core import Astra
+
+
+def run(eta) -> list[dict]:
+    astra = Astra(eta)
+    arch = PAPER_MODELS["llama2-7b"]
+    rep = astra.search_cost(
+        arch, ["H100", "A800"], 1024, global_batch=512, seq=4096,
+        money_limit=None, train_tokens=1e9,
+    )
+    rows = []
+    for c in rep.pool:
+        rows.append({
+            "bench": "fig7-pool",
+            "device": c.strategy.device,
+            "gpus": c.strategy.num_devices,
+            "tp": c.strategy.tensor_parallel,
+            "pp": c.strategy.pipeline_parallel,
+            "tokens_per_s": round(c.throughput, 0),
+            "dollars_per_1e9_tokens": round(c.money, 2),
+        })
+    # money-capped picks at three budgets
+    from repro.core.pareto import pick_within_budget
+
+    for budget in (50.0, 80.0, 200.0):
+        pick = pick_within_budget(rep.pool, budget)
+        rows.append({
+            "bench": "fig7-pick",
+            "budget_dollars": budget,
+            "picked_gpus": pick.strategy.num_devices if pick else None,
+            "picked_device": pick.strategy.device if pick else None,
+            "tokens_per_s": round(pick.throughput, 0) if pick else 0,
+            "cost": round(pick.money, 2) if pick else None,
+        })
+    return rows

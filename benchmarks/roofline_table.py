@@ -1,0 +1,37 @@
+"""Assignment roofline: aggregate the dry-run artifacts into the per-cell
+(arch x shape x mesh) table EXPERIMENTS.md §Roofline embeds."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.environ.get("REPRO_ARTIFACTS", "artifacts") + "/dryrun"
+
+
+def run(eta=None) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if not rep.get("ok"):
+            rows.append({"bench": "roofline", "cell": os.path.basename(path),
+                         "ok": False, "error": rep.get("error", "?")[:120]})
+            continue
+        r = rep["roofline"]
+        rows.append({
+            "bench": "roofline",
+            "arch": rep["arch"],
+            "shape": rep["shape"],
+            "mesh": rep["mesh"],
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 4),
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+            "mem_gb_per_device": round(
+                (rep.get("memory", {}).get("per_device_total") or 0) / 1e9, 2),
+            "compile_s": rep.get("compile_s"),
+        })
+    return rows

@@ -1,0 +1,113 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+
+Prints one ``name,us_per_call,derived`` CSV line per benchmark (the
+harness contract) followed by the detailed row dump per benchmark, and
+writes artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _eta():
+    from repro.calibration.fit import load_or_train
+
+    model, report = load_or_train()
+    if report:
+        print(f"# trained eta model: {report}", file=sys.stderr)
+    return model
+
+
+BENCHES = ("table1", "fig5", "fig6", "table2", "fig7", "accuracy", "ablations",
+           "roofline")
+
+
+def _derived(name: str, rows: list[dict]) -> str:
+    try:
+        if name == "table1":
+            return f"max_strategies={max(r['strategies'] for r in rows)}"
+        if name in ("fig5", "fig6"):
+            ratios = [r["ratio"] for r in rows if r.get("ratio")]
+            return f"min_ratio={min(ratios):.3f};mean_ratio={sum(ratios)/len(ratios):.3f}"
+        if name == "table2":
+            return f"ordering_ok={all(r['ordering_ok'] for r in rows)}"
+        if name == "fig7":
+            return f"pool_size={sum(1 for r in rows if r['bench']=='fig7-pool')}"
+        if name == "accuracy":
+            e2e = [r for r in rows if r["bench"] == "accuracy-e2e"][0]
+            return f"e2e_accuracy={e2e['mean_accuracy']}"
+        if name == "ablations":
+            gains = [r["hybrid_gain"] for r in rows
+                     if r["bench"] == "fig8" and r.get("hybrid_gain")]
+            return f"mean_hybrid_gain={sum(gains)/len(gains):.3f}"
+        if name == "roofline":
+            ok = [r for r in rows if r.get("dominant")]
+            if not ok:
+                return "cells=0"
+            best = max(r["roofline_fraction"] for r in ok)
+            return f"cells={len(ok)};best_fraction={best:.3f}"
+    except Exception as e:  # pragma: no cover
+        return f"derived_error={e!r}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--json-out", default="artifacts/bench_results.json")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else list(BENCHES)
+
+    eta = _eta() if any(b != "roofline" for b in selected) else None
+    all_rows: dict[str, list] = {}
+    csv_lines = ["name,us_per_call,derived"]
+
+    for name in selected:
+        t0 = time.perf_counter()
+        if name == "table1":
+            from benchmarks.table1_search_cost import run
+        elif name == "fig5":
+            from benchmarks.fig5_mode1_experts import run
+        elif name == "fig6":
+            from benchmarks.fig6_mode2_hetero import run
+        elif name == "table2":
+            from benchmarks.table2_hetero_vs_single import run
+        elif name == "fig7":
+            from benchmarks.fig7_pareto import run
+        elif name == "accuracy":
+            from benchmarks.accuracy_costmodel import run
+        elif name == "ablations":
+            from benchmarks.ablations import run
+        elif name == "roofline":
+            from benchmarks.roofline_table import run
+        else:
+            print(f"unknown bench {name}", file=sys.stderr)
+            continue
+        rows = run(eta)
+        dt = time.perf_counter() - t0
+        us = dt * 1e6 / max(len(rows), 1)
+        csv_lines.append(f"{name},{us:.0f},{_derived(name, rows)}")
+        all_rows[name] = rows
+        print(f"\n## {name} ({dt:.1f}s)")
+        for r in rows:
+            print("  " + json.dumps(r))
+
+    os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+    print("\n" + "\n".join(csv_lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's three search modes in one minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.calibration.fit import load_or_train
+from repro.core import Astra, HeteroPool, ModelArch
+
+# a model architecture (Eq. 5-6) — here llama2-7b, or build your own
+llama7b = ModelArch(name="llama2-7b", family="dense", num_layers=32,
+                    hidden=4096, heads=32, kv_heads=32, ffn=11008, vocab=32000)
+
+eta, report = load_or_train()  # the XGBoost-style eta cost model (cached)
+if report:
+    print(f"calibrated eta model: {report}")
+astra = Astra(eta)
+
+# ---- mode 1: homogeneous — fixed device type and count --------------------
+rep = astra.search_homogeneous(llama7b, "A800", 64, global_batch=512, seq=4096)
+b = rep.best
+print(f"\n[mode 1] A800 x64: searched {rep.counts.generated} strategies "
+      f"({rep.counts.after_memory} feasible) in {rep.e2e_seconds:.2f}s")
+print(f"  best: tp={b.tensor_parallel} pp={b.pipeline_parallel} dp={b.data_parallel} "
+      f"mbs={b.micro_batch_size} sp={b.sequence_parallel} "
+      f"dist_opt={b.use_distributed_optimizer} recompute={b.recompute_granularity}")
+print(f"  simulated: {rep.best_sim.throughput_tokens:,.0f} tokens/s, "
+      f"step {rep.best_sim.step_time:.2f}s")
+
+# ---- mode 2: heterogeneous — mixed A800 + H100 cluster ---------------------
+pool = HeteroPool(total_devices=64, type_caps=(("A800", 32), ("H100", 32)))
+rep2 = astra.search_heterogeneous(llama7b, pool, global_batch=512, seq=4096)
+b2, pl = rep2.best, rep2.best.hetero
+print(f"\n[mode 2] A800+H100 x64: {rep2.counts.generated} placements in "
+      f"{rep2.e2e_seconds:.2f}s")
+print(f"  best: tp={b2.tensor_parallel} pp={b2.pipeline_parallel} "
+      f"stages={list(zip(pl.devices, pl.stages_per_type, pl.layers_per_stage))}")
+print(f"  simulated: {rep2.best_sim.throughput_tokens:,.0f} tokens/s")
+
+# ---- mode 3: cost — best plan under a money limit ---------------------------
+rep3 = astra.search_cost(llama7b, ["H100", "A800"], 512, global_batch=512,
+                         seq=4096, money_limit=80.0, train_tokens=1e9)
+print(f"\n[mode 3] <=512 GPUs, $80 budget for 1B tokens: pareto pool size "
+      f"{len(rep3.pool)}")
+for c in rep3.pool[:5]:
+    print(f"  {c.strategy.device} x{c.strategy.num_devices}: "
+          f"{c.throughput:,.0f} tok/s, ${c.money:.2f}")
+b3 = rep3.best
+print(f"  picked: {b3.device} x{b3.num_devices} "
+      f"(tp={b3.tensor_parallel}, pp={b3.pipeline_parallel})")

@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill + decode over the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen3-8b --tokens 24
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import lm
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    arch = get_reduced(args.arch)
+    cfg = lm.ModelCfg(dtype=jnp.float32, attn_impl="xla", ssm_impl="xla")
+    params = lm.init_params(arch, jax.random.PRNGKey(0))
+    engine = ServeEngine(arch, cfg, params,
+                         max_len=args.prompt_len + args.tokens + 8)
+
+    prompts = np.random.default_rng(0).integers(
+        0, arch.vocab, size=(args.batch, args.prompt_len)
+    ).astype(np.int32)
+
+    t0 = time.time()
+    result = engine.generate(prompts, max_new_tokens=args.tokens,
+                             temperature=args.temperature, seed=1)
+    dt = time.time() - t0
+    total_new = args.batch * args.tokens
+    print(f"arch={arch.name} ({arch.total_params()/1e6:.1f}M params, "
+          f"family={arch.family})")
+    print(f"batched generate: {args.batch} requests x {args.tokens} tokens "
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(result.tokens[:2]):
+        print(f"  req{i}: prompt={row[:args.prompt_len].tolist()[:8]}... "
+              f"generated={row[args.prompt_len:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

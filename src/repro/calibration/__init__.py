@@ -1,0 +1,14 @@
+"""Calibration: ground-truth cluster simulator + eta-model training.
+
+The paper trains its XGBoost eta model on measured MegatronLM operator
+latencies. This environment has no cluster, so ``truth.py`` provides a
+ground-truth simulator with realistic non-idealities (tile quantization,
+roofline intensity limits, bandwidth saturation, launch overhead, jitter);
+``fit.py`` trains the GBT eta model against it and reports accuracy —
+reproducing the paper's >95% cost-model-accuracy experiment in simulation
+(see DESIGN.md §2 for why this substitution is necessary and what it means).
+"""
+from repro.calibration.truth import GroundTruth
+from repro.calibration.fit import EtaModel, AnalyticEtaModel, train_eta_model
+
+__all__ = ["GroundTruth", "EtaModel", "AnalyticEtaModel", "train_eta_model"]

@@ -1,0 +1,46 @@
+"""The paper's contribution: automatic parallel-strategy search (Astra).
+
+Layout mirrors the paper's pipeline (Fig. 2):
+  params.py   — parameter set P + strategy s_i (Eq. 4, 8)
+  arch.py     — parsed model architecture M (Eq. 5-6)
+  search.py   — search-space generator + filter funnel (Eq. 8-9)
+  rules.py    — rule-based filter DSL (Eq. 10-19)
+  memory.py   — memory-based filter (Eq. 20-21)
+  opspec.py   — analytic operator descriptors (theta terms)
+  costmodel.py— per-stage operator census (Eq. 27-28)
+  simulate.py — performance simulator with Eq. 22
+  hetero.py   — heterogeneous placement search (Eq. 23)
+  pareto.py   — money-limit search (Eq. 29-33)
+  api.py      — the three search modes
+"""
+from repro.core.api import Astra, SearchReport
+from repro.core.arch import (
+    ASSIGNED_SHAPES,
+    DECODE_32K,
+    InputShape,
+    LONG_500K,
+    ModelArch,
+    PREFILL_32K,
+    TRAIN_4K,
+)
+from repro.core.hetero import HeteroPool
+from repro.core.params import GpuConfig, HeteroPlacement, ParallelStrategy
+from repro.core.simulate import CostSimulator, SimResult
+
+__all__ = [
+    "Astra",
+    "SearchReport",
+    "ModelArch",
+    "InputShape",
+    "ASSIGNED_SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "HeteroPool",
+    "GpuConfig",
+    "HeteroPlacement",
+    "ParallelStrategy",
+    "CostSimulator",
+    "SimResult",
+]

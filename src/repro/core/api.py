@@ -1,0 +1,189 @@
+"""Astra's top-level API: the three search modes (paper §3.2 "GPU pool").
+
+    mode 1 (homogeneous): fixed device type + count -> best strategy
+    mode 2 (heterogeneous): device-type caps + total budget -> best hetero plan
+    mode 3 (cost): device type(s) x candidate counts + money limit -> best
+                   affordable strategy via the Pareto pool
+
+Every mode returns a SearchReport carrying the funnel counts and the
+search/simulation wall-times (the paper's Table-1 columns).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+from repro.core.arch import ModelArch
+from repro.core.hetero import HeteroPool, iter_hetero_strategies
+from repro.core.memory import MemoryFilter
+from repro.core.params import GpuConfig, ParallelStrategy
+from repro.core.pareto import (
+    CostedStrategy,
+    money_cost,
+    optimal_pool,
+    pick_within_budget,
+    sort_strategies,
+)
+from repro.core.rules import DEFAULT_RULES
+from repro.core.search import SearchCounts, generate_strategies
+from repro.core.simulate import CostSimulator, SimResult
+
+
+@dataclasses.dataclass
+class SearchReport:
+    mode: str
+    best: Optional[ParallelStrategy]
+    best_sim: Optional[SimResult]
+    top: list[CostedStrategy]
+    counts: SearchCounts
+    search_seconds: float
+    simulate_seconds: float
+    pool: list[CostedStrategy] = dataclasses.field(default_factory=list)
+
+    @property
+    def e2e_seconds(self) -> float:
+        return self.search_seconds + self.simulate_seconds
+
+
+class Astra:
+    """Facade over search + filters + simulator + money calculator."""
+
+    def __init__(self, eta_model, rules: Sequence[str] = DEFAULT_RULES):
+        self.simulator = CostSimulator(eta_model)
+        self.rules = rules
+
+    # -- mode 1 -------------------------------------------------------------
+    def search_homogeneous(
+        self,
+        arch: ModelArch,
+        device: str,
+        num_devices: int,
+        *,
+        global_batch: int,
+        seq: int,
+        train_tokens: float = 1e9,
+        top_k: int = 5,
+        space: Optional[dict] = None,
+    ) -> SearchReport:
+        t0 = time.perf_counter()
+        strategies, counts = generate_strategies(
+            arch, [GpuConfig(device, num_devices)], global_batch, seq,
+            rules=self.rules, space=space,
+        )
+        t1 = time.perf_counter()
+        costed = self._simulate_all(arch, strategies, global_batch, seq, train_tokens)
+        t2 = time.perf_counter()
+        ranked = sort_strategies(costed)
+        return SearchReport(
+            mode="homogeneous",
+            best=ranked[0].strategy if ranked else None,
+            best_sim=ranked[0].sim if ranked else None,
+            top=ranked[:top_k],
+            counts=counts,
+            search_seconds=t1 - t0,
+            simulate_seconds=t2 - t1,
+        )
+
+    # -- mode 2 -------------------------------------------------------------
+    def search_heterogeneous(
+        self,
+        arch: ModelArch,
+        pool: HeteroPool,
+        *,
+        global_batch: int,
+        seq: int,
+        train_tokens: float = 1e9,
+        top_k: int = 5,
+        fast: bool = True,
+        base_kwargs: Optional[dict] = None,
+    ) -> SearchReport:
+        t0 = time.perf_counter()
+        mem = MemoryFilter(seq=seq)
+        counts = SearchCounts()
+        candidates: list[ParallelStrategy] = []
+        for s in iter_hetero_strategies(
+            arch, pool, global_batch, fast=fast, base_kwargs=base_kwargs
+        ):
+            counts.generated += 1
+            if not mem.is_valid(arch, s):
+                continue
+            counts.after_memory += 1
+            candidates.append(s)
+        counts.divisible = counts.after_rules = counts.generated
+        counts.gen_seconds = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        costed = self._simulate_all(arch, candidates, global_batch, seq, train_tokens)
+        t2 = time.perf_counter()
+        ranked = sort_strategies(costed)
+        return SearchReport(
+            mode="heterogeneous",
+            best=ranked[0].strategy if ranked else None,
+            best_sim=ranked[0].sim if ranked else None,
+            top=ranked[:top_k],
+            counts=counts,
+            search_seconds=t1 - t0,
+            simulate_seconds=t2 - t1,
+        )
+
+    # -- mode 3 -------------------------------------------------------------
+    def search_cost(
+        self,
+        arch: ModelArch,
+        devices: Sequence[str],
+        max_devices: int,
+        *,
+        global_batch: int,
+        seq: int,
+        money_limit: Optional[float],
+        train_tokens: float = 1e9,
+        top_k: int = 5,
+        min_devices: int = 2,
+    ) -> SearchReport:
+        t0 = time.perf_counter()
+        gpu_configs = []
+        for dev in devices:
+            n = min_devices
+            while n <= max_devices:
+                gpu_configs.append(GpuConfig(dev, n))
+                n *= 2
+        strategies, counts = generate_strategies(
+            arch, gpu_configs, global_batch, seq, rules=self.rules
+        )
+        t1 = time.perf_counter()
+        costed = self._simulate_all(arch, strategies, global_batch, seq, train_tokens)
+        t2 = time.perf_counter()
+        pool = optimal_pool(costed)
+        best = pick_within_budget(pool, money_limit)
+        return SearchReport(
+            mode="cost",
+            best=best.strategy if best else None,
+            best_sim=best.sim if best else None,
+            top=sort_strategies(costed)[:top_k],
+            counts=counts,
+            search_seconds=t1 - t0,
+            simulate_seconds=t2 - t1,
+            pool=pool,
+        )
+
+    # -- shared ---------------------------------------------------------------
+    def _simulate_all(
+        self,
+        arch: ModelArch,
+        strategies: Sequence[ParallelStrategy],
+        global_batch: int,
+        seq: int,
+        train_tokens: float,
+    ) -> list[CostedStrategy]:
+        out = []
+        for s in strategies:
+            sim = self.simulator.simulate(arch, s, global_batch=global_batch, seq=seq)
+            out.append(
+                CostedStrategy(
+                    strategy=s,
+                    sim=sim,
+                    throughput=sim.throughput_tokens,
+                    money=money_cost(sim, train_tokens),
+                )
+            )
+        return out

@@ -1,0 +1,261 @@
+"""Analytic operator census for one pipeline stage (paper §3.5, Eq. 25-27).
+
+For a (strategy, arch, device, microbatch) cell this module enumerates every
+compute operator (theta_comp = FLOPs) and every communication operator
+(theta_comm = payload bytes) executed per microbatch, plus the once-per-step
+ops (gradient reduction, optimizer). No latency database is involved — the
+census is derived from the algebra of the model, which is what lets Astra
+adapt to unseen architectures (the paper's "distinguishing feature").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.arch import ModelArch
+from repro.core.opspec import CommOp, ComputeOp, matmul_op
+from repro.core.params import ParallelStrategy
+from repro.core.memory import (
+    GRAD_BYTES_PER_PARAM,
+    OPTIMIZER_BYTES_PER_PARAM,
+    stage_parameter_count,
+)
+from repro.hw.catalog import get_device
+
+BF16 = 2
+
+
+@dataclasses.dataclass
+class StageCensus:
+    """Everything one pipeline stage does.
+
+    fwd ops are per-microbatch; bwd is modeled as 2x fwd matmul FLOPs plus
+    the recompute surcharge. step ops happen once per optimizer step.
+    """
+
+    device: str
+    fwd_comp: list[ComputeOp] = dataclasses.field(default_factory=list)
+    fwd_comm: list[CommOp] = dataclasses.field(default_factory=list)
+    recompute_comp: list[ComputeOp] = dataclasses.field(default_factory=list)
+    step_comp: list[ComputeOp] = dataclasses.field(default_factory=list)
+    step_comm: list[CommOp] = dataclasses.field(default_factory=list)
+    p2p_bytes: float = 0.0  # activation payload to the next stage, per microbatch
+    bwd_flops_multiplier: float = 2.0
+
+
+def _attention_ops(
+    arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int, causal: bool = True
+) -> list[ComputeOp]:
+    t = s.tensor_parallel
+    h = arch.hidden
+    q_dim = arch.attn_q_dim // t
+    kv_dim = 2 * arch.attn_kv_dim // min(t, arch.kv_heads)
+    ops = [
+        matmul_op(dev, b * seq, q_dim + kv_dim, h),  # fused QKV projection
+        matmul_op(dev, b * seq, h, q_dim),  # output projection
+    ]
+    core_flops = 4.0 * b * seq * seq * q_dim * (0.5 if causal else 1.0)
+    if s.use_flash_attn:
+        ops.append(
+            ComputeOp(
+                kind="flash_attn", device=dev, m=b * seq, n=seq, k=q_dim,
+                flops=core_flops,
+                bytes_accessed=BF16 * (3.0 * b * seq * q_dim + b * seq * q_dim),
+            )
+        )
+    else:
+        ops.append(
+            ComputeOp(
+                kind="attn", device=dev, m=b * seq, n=seq, k=q_dim,
+                flops=core_flops,
+                # materializes the (b, a, s, s) score matrix twice (fwd)
+                bytes_accessed=BF16 * (2.0 * b * (arch.heads // t) * seq * seq),
+            )
+        )
+    return ops
+
+
+def _mlp_ops(arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int) -> list[ComputeOp]:
+    t = s.tensor_parallel
+    h = arch.hidden
+    if arch.family == "moe":
+        eff = (arch.moe_ffn or arch.ffn)
+        # dropless top-k routing: each device processes its share of the
+        # top_k-expanded token stream
+        tokens = b * seq * arch.top_k
+        ops = [
+            matmul_op(dev, b * seq, arch.num_experts, h),  # router
+            matmul_op(dev, tokens, 2 * eff // t, h),  # up + gate (all local experts)
+            matmul_op(dev, tokens, h, eff // t),  # down
+        ]
+        if arch.shared_expert:
+            ops += [
+                matmul_op(dev, b * seq, 2 * eff // t, h),
+                matmul_op(dev, b * seq, h, eff // t),
+            ]
+        return ops
+    if arch.ffn == 0:
+        return []
+    return [
+        matmul_op(dev, b * seq, 2 * arch.ffn // t, h),  # up + gate
+        matmul_op(dev, b * seq, h, arch.ffn // t),  # down
+    ]
+
+
+def _ssm_ops(arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int) -> list[ComputeOp]:
+    t = s.tensor_parallel
+    h = arch.hidden
+    d_inner = arch.ssm_expand * h
+    nheads = arch.ssm_heads or max(d_inner // 64, 1)
+    headdim = d_inner // nheads
+    dstate = arch.ssm_state
+    chunk = min(arch.ssm_chunk, seq)
+    nchunks = max(seq // chunk, 1)
+    ops = [
+        matmul_op(dev, b * seq, (2 * d_inner + 2 * dstate + nheads) // t, h),  # in_proj
+        matmul_op(dev, b * seq, h, d_inner // t),  # out_proj
+    ]
+    # SSD chunked scan (Dao & Gu 2024): intra-chunk quadratic + inter-chunk state
+    local_heads = nheads // t
+    intra = 2.0 * b * nchunks * chunk * chunk * local_heads * headdim
+    state = 4.0 * b * seq * local_heads * headdim * dstate
+    ops.append(
+        ComputeOp(
+            kind="matmul", device=dev, m=b * seq, n=headdim * local_heads, k=2 * dstate,
+            flops=intra + state,
+            bytes_accessed=BF16 * (3.0 * b * seq * d_inner / t),
+        )
+    )
+    return ops
+
+
+def _norm_ops(arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int) -> list[ComputeOp]:
+    elems = b * seq * arch.hidden
+    if s.sequence_parallel:
+        elems //= s.tensor_parallel
+    n = [
+        ComputeOp(kind="norm", device=dev, m=elems, n=1, k=1,
+                  flops=4.0 * elems, bytes_accessed=BF16 * 3.0 * elems)
+        for _ in range(2)
+    ]
+    if arch.qk_norm:
+        q_elems = b * seq * arch.attn_q_dim // s.tensor_parallel
+        n.append(ComputeOp(kind="norm", device=dev, m=q_elems, n=1, k=1,
+                           flops=4.0 * q_elems, bytes_accessed=BF16 * 3.0 * q_elems))
+    return n
+
+
+def layer_fwd_ops(
+    arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int
+) -> tuple[list[ComputeOp], list[CommOp]]:
+    """One decoder layer, forward, per microbatch."""
+    comp: list[ComputeOp] = []
+    comm: list[CommOp] = []
+    t = s.tensor_parallel
+    spec = get_device(dev)
+    tp_intra = t <= spec.devices_per_node
+    act_payload = float(BF16 * b * seq * arch.hidden)
+
+    has_attn = not arch.is_attention_free
+    if has_attn:
+        comp += _attention_ops(arch, s, dev, b, seq)
+    if arch.family in ("ssm", "hybrid"):
+        comp += _ssm_ops(arch, s, dev, b, seq)
+    comp += _mlp_ops(arch, s, dev, b, seq)
+    comp += _norm_ops(arch, s, dev, b, seq)
+
+    if t > 1:
+        # Megatron TP: one reduction after attention/ssm block, one after MLP.
+        # With SP each all-reduce is an equivalent-payload RS+AG pair.
+        n_blocks = 2 if (has_attn or arch.family == "ssm") and arch.ffn else 1
+        for _ in range(n_blocks):
+            if s.sequence_parallel:
+                comm.append(CommOp("reduce_scatter", dev, t, act_payload, tp_intra))
+                comm.append(CommOp("all_gather", dev, t, act_payload, tp_intra))
+            else:
+                comm.append(CommOp("all_reduce", dev, t, act_payload, tp_intra))
+    if arch.family == "moe" and s.expert_parallel > 1:
+        ep = s.expert_parallel
+        ep_intra = ep * t <= spec.devices_per_node
+        a2a_payload = float(BF16 * b * seq * arch.hidden * arch.top_k)
+        comm.append(CommOp("all_to_all", dev, ep, a2a_payload, ep_intra))  # dispatch
+        comm.append(CommOp("all_to_all", dev, ep, a2a_payload, ep_intra))  # combine
+    return comp, comm
+
+
+def build_stage_census(
+    arch: ModelArch,
+    s: ParallelStrategy,
+    stage: int,
+    *,
+    seq: int,
+    device: Optional[str] = None,
+    layers_in_stage: Optional[int] = None,
+) -> StageCensus:
+    dev = device or s.device
+    pp = s.pipeline_parallel
+    layers = layers_in_stage if layers_in_stage is not None else arch.num_layers // pp
+    b = s.micro_batch_size
+    census = StageCensus(device=dev)
+
+    lcomp, lcomm = layer_fwd_ops(arch, s, dev, b, seq)
+    census.fwd_comp = lcomp * layers
+    census.fwd_comm = lcomm * layers
+
+    # embedding / LM head on the edge stages
+    if stage == 0:
+        elems = b * seq * arch.hidden
+        census.fwd_comp.append(
+            ComputeOp(kind="embedding", device=dev, m=elems, n=1, k=1,
+                      flops=float(elems), bytes_accessed=BF16 * 2.0 * elems)
+        )
+    if stage == pp - 1:
+        census.fwd_comp.append(
+            matmul_op(dev, b * seq, arch.vocab // s.tensor_parallel, arch.hidden)
+        )
+        if s.tensor_parallel > 1:
+            spec = get_device(dev)
+            census.fwd_comm.append(
+                CommOp("all_reduce", dev, s.tensor_parallel,
+                       float(4 * b * seq),  # softmax partials (fp32 scalars/token)
+                       s.tensor_parallel <= spec.devices_per_node)
+            )
+
+    # recompute surcharge (re-runs part of fwd during bwd)
+    if s.recompute_granularity == "full":
+        n_rc = s.recompute_num_layers or layers
+        census.recompute_comp = lcomp * min(n_rc, layers)
+    elif s.recompute_granularity == "selective" and not arch.is_attention_free:
+        core = [op for op in lcomp if op.kind in ("flash_attn", "attn")]
+        census.recompute_comp = core * layers
+
+    # once-per-step: gradient reduction + optimizer
+    params = stage_parameter_count(arch, s, stage, layers)
+    dp = s.data_parallel
+    spec = get_device(dev)
+    if dp > 1:
+        dp_intra = dp * s.tensor_parallel * pp <= spec.devices_per_node
+        if s.use_distributed_optimizer:
+            census.step_comm.append(
+                CommOp("reduce_scatter", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
+            )
+            census.step_comm.append(
+                CommOp("all_gather", dev, dp, params * BF16, dp_intra)
+            )
+        else:
+            census.step_comm.append(
+                CommOp("all_reduce", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
+            )
+    opt_params = params / dp if s.use_distributed_optimizer else params
+    census.step_comp.append(
+        ComputeOp(kind="elementwise", device=dev, m=int(opt_params), n=1, k=1,
+                  flops=10.0 * opt_params,
+                  bytes_accessed=(OPTIMIZER_BYTES_PER_PARAM + GRAD_BYTES_PER_PARAM + BF16)
+                  * opt_params)
+    )
+
+    if pp > 1 and stage < pp - 1:
+        census.p2p_bytes = float(BF16 * b * seq * arch.hidden)
+        if s.sequence_parallel:
+            census.p2p_bytes /= s.tensor_parallel
+    return census

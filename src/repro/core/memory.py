@@ -1,0 +1,163 @@
+"""Memory-based filter (paper §3.3, Eq. 20-21).
+
+Per-stage memory M_i(s_j) is estimated from the empirical single-layer
+formula family the paper describes: a function of microbatch size, sequence
+length, hidden/FFN size, TP/PP, attention heads, and the flash-attention /
+selective-recompute / sequence-parallel toggles. The activation part follows
+Korthikanti et al. 2022 ("Reducing Activation Recomputation in Large
+Transformer Models"), which is what Megatron itself implements:
+
+  per-layer activation bytes (bf16), microbatch b, seq s, hidden h, heads a:
+    no SP:            s*b*h * (10 + 24/t + 5*a*s/(h*t))
+    sequence parallel: s*b*h * (34/t + 5*a*s/(h*t))
+    flash-attn / selective recompute drops the 5*a*s/(h*t) score term
+    full recompute keeps only the 2*s*b*h layer input
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.arch import ModelArch
+from repro.core.params import ParallelStrategy
+from repro.hw.catalog import get_device
+
+BF16 = 2
+FP32 = 4
+# Adam: fp32 master copy + exp_avg + exp_avg_sq
+OPTIMIZER_BYTES_PER_PARAM = 3 * FP32
+GRAD_BYTES_PER_PARAM = FP32  # Megatron keeps fp32 main grads
+_RESERVED_BYTES = 1.2e9  # runtime/context/workspace reservation
+_FRAGMENTATION = 1.10
+
+
+@dataclasses.dataclass(frozen=True)
+class StageMemory:
+    weights: float
+    grads: float
+    optimizer: float
+    activations: float
+    kv_or_state: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (
+            self.weights + self.grads + self.optimizer + self.activations
+        ) * _FRAGMENTATION + self.kv_or_state + _RESERVED_BYTES
+
+
+def activation_bytes_per_layer(
+    arch: ModelArch, strategy: ParallelStrategy, micro_batch: int, seq: int
+) -> float:
+    """Single-layer activation footprint for one in-flight microbatch."""
+    s, b, h, a = seq, micro_batch, arch.hidden, arch.heads
+    t = strategy.tensor_parallel
+    sbh = float(s) * b * h
+    if strategy.recompute_granularity == "full":
+        return 2.0 * sbh  # only the layer input is saved
+
+    score_term = 0.0
+    if not arch.is_attention_free:
+        if not (strategy.use_flash_attn or strategy.recompute_granularity == "selective"):
+            score_term = 5.0 * a * s / (h * t)
+    if strategy.sequence_parallel:
+        base = 34.0 / t
+    else:
+        base = 10.0 + 24.0 / t
+    ffn_scale = 1.0
+    if arch.family == "moe":
+        # top_k expert activations instead of one dense MLP (dropless routing)
+        ffn_scale = 1.0 + 0.6 * (arch.top_k - 1)
+    if arch.family in ("ssm", "hybrid"):
+        # conv + gate + state activations: ~expand x the hidden stream
+        base += 8.0 * arch.ssm_expand / t
+    return sbh * (base * ffn_scale + score_term)
+
+
+def stage_parameter_count(
+    arch: ModelArch, strategy: ParallelStrategy, stage: int, layers_in_stage: int
+) -> float:
+    """Parameters held by one (pp-stage, tp-rank, ep-rank) device."""
+    t, ep = strategy.tensor_parallel, strategy.expert_parallel
+    per_layer = arch.layer_params()
+    n = 0.0
+    for name, count in per_layer.items():
+        if name == "moe_experts":
+            n += count / (ep * t)
+        elif name == "norms":
+            n += count  # norms are replicated across tp
+        else:
+            n += count / t
+    n *= layers_in_stage
+    pp = strategy.pipeline_parallel
+    if stage == 0:
+        n += arch.vocab * arch.hidden / t
+    if stage == pp - 1:
+        n += (0 if arch.tie_embeddings and pp == 1 else arch.vocab * arch.hidden / t)
+        n += arch.hidden  # final norm
+    return n
+
+
+def stage_memory(
+    arch: ModelArch,
+    strategy: ParallelStrategy,
+    stage: int,
+    *,
+    seq: int,
+    layers_in_stage: int | None = None,
+) -> StageMemory:
+    pp = strategy.pipeline_parallel
+    layers = layers_in_stage if layers_in_stage is not None else arch.num_layers // pp
+    params = stage_parameter_count(arch, strategy, stage, layers)
+
+    weights = params * BF16
+    grads = params * GRAD_BYTES_PER_PARAM
+    opt = params * OPTIMIZER_BYTES_PER_PARAM
+    if strategy.use_distributed_optimizer:
+        opt /= strategy.data_parallel
+    if strategy.offload_optimizer:
+        opt = 0.0
+
+    act_per_mb = activation_bytes_per_layer(
+        arch, strategy, strategy.micro_batch_size, seq
+    ) * layers
+    # 1F1B: stage i holds up to (pp - i) in-flight microbatches
+    in_flight = pp - stage
+    activations = act_per_mb * in_flight
+    return StageMemory(weights=weights, grads=grads, optimizer=opt, activations=activations)
+
+
+def peak_stage_memory(
+    arch: ModelArch, strategy: ParallelStrategy, *, seq: int
+) -> tuple[float, int]:
+    """(max over stages of M_i, argmax stage)."""
+    worst, worst_stage = 0.0, 0
+    for i in range(strategy.pipeline_parallel):
+        m = stage_memory(arch, strategy, i, seq=seq).total
+        if m > worst:
+            worst, worst_stage = m, i
+    return worst, worst_stage
+
+
+class MemoryFilter:
+    """Eq. 20-21: drop s_j if any stage exceeds the device's HBM."""
+
+    def __init__(self, seq: int):
+        self.seq = seq
+
+    def is_valid(self, arch: ModelArch, strategy: ParallelStrategy) -> bool:
+        cap = get_device(strategy.device).mem_bytes
+        if strategy.hetero is not None:
+            for stage, (dev, n_layers) in enumerate(strategy.hetero.stage_sequence()):
+                m = stage_memory(
+                    arch,
+                    dataclasses.replace(strategy, device=dev,
+                                        pipeline_parallel=strategy.hetero.pp),
+                    stage,
+                    seq=self.seq,
+                    layers_in_stage=n_layers,
+                ).total
+                if m > get_device(dev).mem_bytes:
+                    return False
+            return True
+        peak, _ = peak_stage_memory(arch, strategy, seq=self.seq)
+        return peak <= cap

@@ -1,0 +1,126 @@
+"""Operator descriptors shared by the cost model, calibration and simulator.
+
+Astra's distinguishing feature (§3.5) is that operator latency is computed
+*analytically* — theta (work) from the op's algebraic shape, phi (peak rate)
+from the device spec — with only the efficiency eta in (0,1] learned. These
+descriptors carry exactly the information needed for that: the work term and
+the features the eta model conditions on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.hw.catalog import DeviceSpec, DEVICES
+
+# stable integer ids for categorical features
+COMPUTE_KINDS = ("matmul", "flash_attn", "attn", "elementwise", "norm", "embedding")
+COMM_KINDS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all", "p2p")
+_DEVICE_IDS = {name: i for i, name in enumerate(sorted(DEVICES))}
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeOp:
+    """One compute operator instance on one device type.
+
+    ``m, n, k`` are the GEMM-like dims (for non-matmul ops, m = elements and
+    n = k = 1). ``flops`` and ``bytes_accessed`` are the analytic theta terms.
+    """
+
+    kind: str
+    device: str
+    m: int
+    n: int
+    k: int
+    flops: float
+    bytes_accessed: float
+    dtype_bytes: int = 2
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_accessed, 1.0)
+
+    def features(self) -> np.ndarray:
+        def quant(tile: int) -> float:
+            c = lambda x: ((max(x, 1) + tile - 1) // tile) * tile
+            return (self.m * self.n * self.k) / (c(self.m) * c(self.n) * c(self.k))
+
+        dev = DEVICES[self.device]
+        ai_ratio = self.arithmetic_intensity / dev.machine_balance
+        return np.array(
+            [
+                COMPUTE_KINDS.index(self.kind),
+                _DEVICE_IDS[self.device],
+                np.log2(max(self.m, 1)),
+                np.log2(max(self.n, 1)),
+                np.log2(max(self.k, 1)),
+                quant(64),
+                quant(128),
+                np.log2(max(self.flops, 1.0)),
+                np.log2(max(self.bytes_accessed, 1.0)),
+                np.log2(max(self.arithmetic_intensity, 1e-3)),
+                min(ai_ratio, 1.0),
+                np.log2(max(ai_ratio, 1e-6)),
+                float(self.dtype_bytes),
+            ],
+            dtype=np.float64,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOp:
+    """One collective instance: payload bytes over a group on one device type."""
+
+    kind: str
+    device: str
+    group: int
+    payload_bytes: float
+    intra_node: bool  # fast tier (NVLink/ICI) vs slow tier (PCIe/IB/DCN)
+
+    def features(self) -> np.ndarray:
+        # saturation proxy: payload relative to a 1MiB/8MiB half-saturation knee
+        half = (1 << 20) if self.intra_node else (8 << 20)
+        sat = self.payload_bytes / (self.payload_bytes + half)
+        return np.array(
+            [
+                COMM_KINDS.index(self.kind),
+                _DEVICE_IDS[self.device],
+                np.log2(max(self.group, 1)),
+                np.log2(max(self.payload_bytes, 1.0)),
+                np.log2(max(self.payload_bytes / max(self.group, 1), 1.0)),
+                sat,
+                float(self.intra_node),
+            ],
+            dtype=np.float64,
+        )
+
+
+def matmul_op(device: str, m: int, n: int, k: int, dtype_bytes: int = 2) -> ComputeOp:
+    flops = 2.0 * m * n * k
+    bytes_accessed = dtype_bytes * (m * k + k * n + m * n)
+    return ComputeOp(
+        kind="matmul", device=device, m=m, n=n, k=k,
+        flops=flops, bytes_accessed=bytes_accessed, dtype_bytes=dtype_bytes,
+    )
+
+
+def elementwise_op(device: str, elements: int, dtype_bytes: int = 2, reads: int = 2) -> ComputeOp:
+    return ComputeOp(
+        kind="elementwise", device=device, m=elements, n=1, k=1,
+        flops=float(elements), bytes_accessed=float(dtype_bytes * elements * (reads + 1)),
+        dtype_bytes=dtype_bytes,
+    )
+
+
+def featurize_compute(ops: Sequence[ComputeOp]) -> np.ndarray:
+    return np.stack([op.features() for op in ops])
+
+
+def featurize_comm(ops: Sequence[CommOp]) -> np.ndarray:
+    return np.stack([op.features() for op in ops])
+
+
+def device_spec(op) -> DeviceSpec:
+    return DEVICES[op.device]

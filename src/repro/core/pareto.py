@@ -1,0 +1,57 @@
+"""Money-limit search (paper §3.6, Eq. 29-33).
+
+The optimal pool keeps strategies not dominated in (throughput up, cost
+down); the final pick is the highest-throughput pool member whose monetary
+cost (Eq. 32: M_i = T_i * N_g * F_g, with T_i the time to train the user's
+token budget) fits the user's limit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.params import ParallelStrategy
+from repro.core.simulate import SimResult
+
+
+@dataclasses.dataclass(frozen=True)
+class CostedStrategy:
+    strategy: ParallelStrategy
+    sim: SimResult
+    throughput: float  # P_i (tokens/s)
+    money: float  # C_i ($ for the training budget)
+
+
+def money_cost(sim: SimResult, train_tokens: float) -> float:
+    """Eq. 32 for a fixed token budget: T_i = tokens/throughput; M = T * rate."""
+    if sim.throughput_tokens <= 0:
+        return float("inf")
+    hours = train_tokens / sim.throughput_tokens / 3600.0
+    return hours * sim.money_per_hour
+
+
+def optimal_pool(candidates: Sequence[CostedStrategy]) -> list[CostedStrategy]:
+    """Eq. 30-31: S_opt = non-dominated set (no strictly-better-and-cheaper)."""
+    ordered = sort_strategies(candidates)
+    pool: list[CostedStrategy] = []
+    best_cost = float("inf")
+    for c in ordered:  # descending throughput: keep strictly cheaper entries
+        if c.money < best_cost:
+            pool.append(c)
+            best_cost = c.money
+    return pool
+
+
+def sort_strategies(candidates: Sequence[CostedStrategy]) -> list[CostedStrategy]:
+    """Eq. 33: throughput descending, ties by cost ascending."""
+    return sorted(candidates, key=lambda c: (-c.throughput, c.money))
+
+
+def pick_within_budget(
+    pool: Sequence[CostedStrategy], money_limit: Optional[float]
+) -> Optional[CostedStrategy]:
+    """Highest-throughput pool entry meeting the money constraint."""
+    for c in sort_strategies(pool):
+        if money_limit is None or c.money <= money_limit:
+            return c
+    return None

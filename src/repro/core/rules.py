@@ -1,0 +1,214 @@
+"""Rule-based filter DSL (paper §3.3, Eq. 10-19).
+
+Rules are boolean expressions over $-prefixed strategy parameters:
+
+    $use_flash_attn != none && $recompute_granularity = selective
+    $recompute_num_layers > $pipeline_model_parallel_size
+    $num_gpus % ($pipeline_model_parallel_size * $tensor_model_parallel_size) != 0
+
+Semantics follow the paper exactly: a strategy is VALID iff every rule
+evaluates to False (Eq. 10 — rules describe *forbidden* configurations).
+``&&`` binds tighter than ``||`` (Eq. 19) and chains evaluate left-to-right.
+Comparison uses a single ``=`` for equality, as in the paper's examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Mapping, Sequence
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+)
+  | (?P<num>\d+(\.\d+)?)
+  | (?P<var>\$[A-Za-z_][A-Za-z0-9_\-]*)
+  | (?P<op>&&|\|\||!=|>=|<=|=|>|<|\+|-|\*|/|%|\(|\))
+  | (?P<ident>[A-Za-z_][A-Za-z0-9_\-]*)
+    """,
+    re.VERBOSE,
+)
+
+_KEYWORDS = {"true": True, "false": False, "none": None}
+
+
+class RuleSyntaxError(ValueError):
+    pass
+
+
+def tokenize(text: str) -> list[str]:
+    tokens, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None:
+            raise RuleSyntaxError(f"bad character at {pos}: {text[pos:pos+10]!r}")
+        pos = m.end()
+        if m.lastgroup != "ws":
+            tokens.append(m.group())
+    return tokens
+
+
+@dataclasses.dataclass
+class _Parser:
+    """Recursive-descent parser producing a nested-tuple AST."""
+
+    tokens: list[str]
+    pos: int = 0
+
+    def peek(self) -> str | None:
+        return self.tokens[self.pos] if self.pos < len(self.tokens) else None
+
+    def take(self) -> str:
+        tok = self.peek()
+        if tok is None:
+            raise RuleSyntaxError("unexpected end of rule")
+        self.pos += 1
+        return tok
+
+    def expect(self, tok: str) -> None:
+        got = self.take()
+        if got != tok:
+            raise RuleSyntaxError(f"expected {tok!r}, got {got!r}")
+
+    # grammar: or -> and (|| and)* ; and -> cmp (&& cmp)* ;
+    # cmp -> arith ((=|!=|>|<|>=|<=) arith)? ; arith -> term ((+|-) term)* ;
+    # term -> atom ((*|/|%) atom)* ; atom -> num | $var | ident | ( or )
+    def parse(self):
+        node = self.parse_or()
+        if self.peek() is not None:
+            raise RuleSyntaxError(f"trailing tokens: {self.tokens[self.pos:]}")
+        return node
+
+    def parse_or(self):
+        node = self.parse_and()
+        while self.peek() == "||":
+            self.take()
+            node = ("or", node, self.parse_and())
+        return node
+
+    def parse_and(self):
+        node = self.parse_cmp()
+        while self.peek() == "&&":
+            self.take()
+            node = ("and", node, self.parse_cmp())
+        return node
+
+    def parse_cmp(self):
+        left = self.parse_arith()
+        if self.peek() in ("=", "!=", ">", "<", ">=", "<="):
+            op = self.take()
+            return ("cmp", op, left, self.parse_arith())
+        return left
+
+    def parse_arith(self):
+        node = self.parse_term()
+        while self.peek() in ("+", "-"):
+            op = self.take()
+            node = ("arith", op, node, self.parse_term())
+        return node
+
+    def parse_term(self):
+        node = self.parse_atom()
+        while self.peek() in ("*", "/", "%"):
+            op = self.take()
+            node = ("arith", op, node, self.parse_atom())
+        return node
+
+    def parse_atom(self):
+        tok = self.take()
+        if tok == "(":
+            node = self.parse_or()
+            self.expect(")")
+            return node
+        if tok.startswith("$"):
+            return ("var", tok[1:])
+        if re.fullmatch(r"\d+(\.\d+)?", tok):
+            return ("lit", float(tok) if "." in tok else int(tok))
+        if re.fullmatch(r"[A-Za-z_][A-Za-z0-9_\-]*", tok):
+            key = tok.lower()
+            return ("lit", _KEYWORDS[key]) if key in _KEYWORDS else ("lit", tok)
+        raise RuleSyntaxError(f"unexpected token {tok!r}")
+
+
+def _truthy(v: Any) -> bool:
+    return bool(v)
+
+
+def _eval(node, env: Mapping[str, Any]):
+    kind = node[0]
+    if kind == "lit":
+        return node[1]
+    if kind == "var":
+        name = node[1].replace("-", "_")
+        if name not in env:
+            raise KeyError(f"unknown strategy parameter ${node[1]}")
+        return env[name]
+    if kind == "or":
+        return _truthy(_eval(node[1], env)) or _truthy(_eval(node[2], env))
+    if kind == "and":
+        return _truthy(_eval(node[1], env)) and _truthy(_eval(node[2], env))
+    if kind == "arith":
+        op, a, b = node[1], _eval(node[2], env), _eval(node[3], env)
+        if op == "+":
+            return a + b
+        if op == "-":
+            return a - b
+        if op == "*":
+            return a * b
+        if op == "/":
+            return a / b
+        return a % b
+    if kind == "cmp":
+        op, a, b = node[1], _eval(node[2], env), _eval(node[3], env)
+        if op == "=":
+            return a == b
+        if op == "!=":
+            return a != b
+        # normalize bools for ordered comparison against numbers
+        if op == ">":
+            return a > b
+        if op == "<":
+            return a < b
+        if op == ">=":
+            return a >= b
+        return a <= b
+    raise AssertionError(f"bad node {node!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    text: str
+    ast: tuple = dataclasses.field(hash=False, compare=False, default=())
+
+    @staticmethod
+    def parse(text: str) -> "Rule":
+        return Rule(text=text, ast=_Parser(tokenize(text)).parse())
+
+    def matches(self, env: Mapping[str, Any]) -> bool:
+        """True => the strategy hits this forbidden pattern (gets dropped)."""
+        return _truthy(_eval(self.ast, env))
+
+
+class RuleFilter:
+    """Applies the rule set: keep s iff r_j(s) == False for all j (Eq. 10)."""
+
+    def __init__(self, rules: Sequence[str | Rule] = ()):
+        self.rules = [r if isinstance(r, Rule) else Rule.parse(r) for r in rules]
+
+    def is_valid(self, env: Mapping[str, Any]) -> bool:
+        return all(not r.matches(env) for r in self.rules)
+
+    def first_violation(self, env: Mapping[str, Any]) -> str | None:
+        for r in self.rules:
+            if r.matches(env):
+                return r.text
+        return None
+
+
+# The paper's three example rules (§3.3) as the default rule set. Rule 1 is
+# kept as published: flash-attn with *selective* recompute is redundant work
+# (flash attention already avoids materializing the attention matrix).
+DEFAULT_RULES = (
+    "$use_flash_attn != none && $recompute_granularity = selective",
+    "$recompute_num_layers > $pipeline_model_parallel_size",
+    "$num_gpus % ($pipeline_model_parallel_size * $tensor_model_parallel_size) != 0",
+)

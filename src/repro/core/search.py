@@ -1,0 +1,103 @@
+"""Search-space generator + filters (paper §3.3).
+
+``generate_strategies`` materializes S = {s_i} = C_gpu x f(P) x M (Eq. 8-9),
+then applies the rule-based filter (Eq. 10) and the memory-based filter
+(Eq. 20-21) in that order, tracking counts for the paper's Table-1 metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Iterable, Optional, Sequence
+
+from repro.core.arch import ModelArch
+from repro.core.memory import MemoryFilter
+from repro.core.params import GpuConfig, ParallelStrategy, default_parameter_space
+from repro.core.rules import DEFAULT_RULES, RuleFilter
+from repro.hw.catalog import get_device
+
+
+@dataclasses.dataclass
+class SearchCounts:
+    generated: int = 0  # |S| before any filter
+    divisible: int = 0  # after arithmetic feasibility (GPU-division etc.)
+    after_rules: int = 0
+    after_memory: int = 0
+    gen_seconds: float = 0.0
+
+
+def _strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
+    env = s.to_flat_dict()
+    env.update(
+        num_layers=arch.num_layers,
+        hidden_size=arch.hidden,
+        attention_heads=arch.heads,
+        intermediate_size=arch.ffn,
+        vocab_size=arch.vocab,
+        num_experts=arch.num_experts,
+        moe_router_topk=arch.top_k,
+    )
+    return env
+
+
+def iter_raw_strategies(
+    arch: ModelArch,
+    gpu: GpuConfig,
+    global_batch: int,
+    space: Optional[dict[str, list]] = None,
+) -> Iterable[ParallelStrategy]:
+    """The unfiltered product space f(P) for one GPU configuration."""
+    spec = get_device(gpu.device)
+    space = space or default_parameter_space(
+        arch, gpu.num_devices, spec.devices_per_node, global_batch
+    )
+    keys = list(space)
+    for combo in itertools.product(*(space[k] for k in keys)):
+        kw = dict(zip(keys, combo))
+        # recompute_num_layers rides on the granularity choice
+        if kw.get("recompute_granularity") == "full":
+            layers_per_stage = arch.num_layers // kw["pipeline_parallel"]
+            rnl_choices = sorted({1, max(layers_per_stage // 2, 1), layers_per_stage})
+        else:
+            rnl_choices = [0]
+        for rnl in rnl_choices:
+            yield ParallelStrategy(
+                device=gpu.device,
+                num_devices=gpu.num_devices,
+                recompute_num_layers=rnl,
+                recompute_method="uniform",
+                **kw,
+            )
+
+
+def generate_strategies(
+    arch: ModelArch,
+    gpus: Sequence[GpuConfig],
+    global_batch: int,
+    seq: int,
+    *,
+    rules: Sequence[str] = DEFAULT_RULES,
+    space: Optional[dict[str, list]] = None,
+) -> tuple[list[ParallelStrategy], SearchCounts]:
+    """S_valid (Eq. 21) plus the funnel counts."""
+    t0 = time.perf_counter()
+    rule_filter = RuleFilter(rules)
+    mem_filter = MemoryFilter(seq=seq)
+    counts = SearchCounts()
+    valid: list[ParallelStrategy] = []
+    for gpu in gpus:
+        for s in iter_raw_strategies(arch, gpu, global_batch, space=space):
+            counts.generated += 1
+            if not s.is_divisible(arch, global_batch):
+                continue
+            counts.divisible += 1
+            if not rule_filter.is_valid(_strategy_env(arch, s)):
+                continue
+            counts.after_rules += 1
+            if not mem_filter.is_valid(arch, s):
+                continue
+            counts.after_memory += 1
+            valid.append(s)
+    counts.gen_seconds = time.perf_counter() - t0
+    return valid, counts

@@ -1,0 +1,196 @@
+"""Performance simulator (paper §3.5, Eq. 22 + 27-28).
+
+Computes per-stage forward/backward/communication times from the operator
+census, then composes the pipeline schedule with the heterogeneous-aware
+total-duration formula (Eq. 22):
+
+    T_pipe = sum_i (t_i + h_i) + (K - 1) * max_i (t_i + h_i)
+
+which in the homogeneous limit reduces to the classic bubble formula and in
+the heterogeneous case correctly charges the slowest stage for the steady
+state. Gradient-reduction and optimizer terms are added per-step with the
+overlap discounts of the corresponding Table-3 toggles.
+
+Op-level eta predictions are memoized on the (frozen, hashable) op
+descriptors — across a 20k-strategy search almost all op shapes repeat, which
+is how Astra hits the paper's ~1-minute end-to-end simulation budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Optional, Sequence
+
+from repro.core.arch import ModelArch
+from repro.core.costmodel import StageCensus, build_stage_census
+from repro.core.opspec import CommOp, ComputeOp
+from repro.core.params import ParallelStrategy
+from repro.hw.catalog import get_device
+
+# fraction of a collective hidden under compute when its overlap toggle is on
+_OVERLAP_EFFICIENCY = 0.75
+_P2P_OVERLAP_EFFICIENCY = 0.8
+_PCIE_BW = 25e9  # optimizer-offload staging bandwidth (DDR/PCIe tier)
+
+
+@dataclasses.dataclass
+class SimResult:
+    step_time: float
+    throughput_samples: float  # samples / second
+    throughput_tokens: float  # tokens / second
+    pipeline_time: float
+    bubble_time: float
+    dp_exposed_time: float
+    optimizer_time: float
+    stage_times: list[float]  # t_i = tf_i + tb_i per microbatch
+    stage_p2p: list[float]  # h_i
+    money_per_hour: float
+    money_per_step: float
+
+    @property
+    def money_per_mtoken(self) -> float:
+        if self.throughput_tokens <= 0:
+            return float("inf")
+        return self.money_per_hour / 3600.0 / self.throughput_tokens * 1e6
+
+
+class CostSimulator:
+    """Evaluates strategies with a pluggable eta model (GBT or analytic)."""
+
+    def __init__(self, eta_model):
+        self.eta = eta_model
+        self._comp_memo: dict[ComputeOp, float] = {}
+        self._comm_memo: dict[CommOp, float] = {}
+
+    # -- memoized op-time lookup ------------------------------------------
+    def _comp_times(self, ops: Sequence[ComputeOp]) -> float:
+        counts = Counter(ops)
+        missing = [op for op in counts if op not in self._comp_memo]
+        if missing:
+            times = self.eta.compute_times(missing) if hasattr(
+                self.eta, "compute_times"
+            ) else [self.eta.compute_time(op) for op in missing]
+            for op, t in zip(missing, times):
+                self._comp_memo[op] = float(t)
+        return sum(self._comp_memo[op] * c for op, c in counts.items())
+
+    def _comm_times(self, ops: Sequence[CommOp]) -> float:
+        counts = Counter(ops)
+        missing = [op for op in counts if op not in self._comm_memo]
+        if missing:
+            times = self.eta.comm_times(missing) if hasattr(
+                self.eta, "comm_times"
+            ) else [self.eta.comm_time(op) for op in missing]
+            for op, t in zip(missing, times):
+                self._comm_memo[op] = float(t)
+        return sum(self._comm_memo[op] * c for op, c in counts.items())
+
+    def _p2p_time(self, device: str, payload: float) -> float:
+        if payload <= 0:
+            return 0.0
+        op = CommOp("p2p", device, 2, payload, intra_node=False)
+        return self._comm_times([op])
+
+    # -- per-stage timing ---------------------------------------------------
+    def stage_times(self, census: StageCensus, s: ParallelStrategy) -> tuple[float, float, float, float, float]:
+        """(t_fwd, t_bwd, h_p2p, t_dp, t_opt) for one stage, per microbatch
+        for the first three and per-step for the last two."""
+        t_fwd_comp = self._comp_times(census.fwd_comp)
+        t_fwd_comm = self._comm_times(census.fwd_comm)
+        if s.tp_comm_overlap:
+            t_fwd_comm *= 1.0 - _OVERLAP_EFFICIENCY * 0.5  # partial TP-gemm overlap
+        t_fwd = t_fwd_comp + t_fwd_comm
+
+        t_bwd_comp = census.bwd_flops_multiplier * t_fwd_comp
+        t_bwd_comp += self._comp_times(census.recompute_comp)
+        t_bwd = t_bwd_comp + t_fwd_comm  # TP collectives mirror in backward
+
+        h = self._p2p_time(census.device, census.p2p_bytes)
+        if s.overlap_p2p:
+            h *= 1.0 - _P2P_OVERLAP_EFFICIENCY
+
+        t_dp = self._comm_times(census.step_comm)
+        if s.overlap_grad_reduce and t_dp > 0:
+            hidden = _OVERLAP_EFFICIENCY * (t_dp if s.use_distributed_optimizer else t_dp)
+            # overlap is bounded by available backward compute of one full pass
+            hidden = min(hidden, t_bwd_comp)
+            t_dp = max(t_dp - hidden, 0.0)
+        t_opt = self._comp_times(census.step_comp)
+        if s.offload_optimizer:
+            # stage optimizer states over the host link
+            opt_bytes = sum(op.bytes_accessed for op in census.step_comp)
+            t_off = opt_bytes / _PCIE_BW
+            t_opt += t_off * (0.3 if s.overlap_grad_reduce else 1.0)
+        return t_fwd, t_bwd, h, t_dp, t_opt
+
+    # -- whole strategy -----------------------------------------------------
+    def simulate(
+        self,
+        arch: ModelArch,
+        s: ParallelStrategy,
+        *,
+        global_batch: int,
+        seq: int,
+    ) -> SimResult:
+        K = s.num_microbatches(global_batch)
+        if s.hetero is not None:
+            stages = s.hetero.stage_sequence()
+            censuses = [
+                build_stage_census(arch, s, i, seq=seq, device=dev, layers_in_stage=n)
+                for i, (dev, n) in enumerate(stages)
+            ]
+        else:
+            censuses = [
+                build_stage_census(arch, s, i, seq=seq)
+                for i in range(s.pipeline_parallel)
+            ]
+
+        per_stage = [self.stage_times(c, s) for c in censuses]
+        t_i = [tf + tb for tf, tb, _, _, _ in per_stage]
+        h_i = [h for _, _, h, _, _ in per_stage]
+        dp_i = [dp for _, _, _, dp, _ in per_stage]
+        opt_i = [o for _, _, _, _, o in per_stage]
+
+        # Eq. 22 (fwd+bwd combined per microbatch). Interleaved virtual
+        # pipeline (Megatron's num-layers-per-virtual-pipeline-stage) shrinks
+        # the BUBBLE (ramp) by vp at the cost of vp-times the p2p traffic:
+        #   T = K * max_i(c_i) + (sum_i c_i - max_i c_i) / vp,
+        #   c_i = t_i + vp * h_i
+        # vp=1 recovers Eq. 22 exactly: sum_i c_i + (K-1) * max_i c_i.
+        # pp=1 (no pipeline) is vp-invariant: T = K * t, as it must be.
+        vp = max(s.virtual_pipeline_stages, 1)
+        stage_cost = [t + vp * h for t, h in zip(t_i, h_i)]
+        steady = max(stage_cost)
+        pipeline_time = K * steady + (sum(stage_cost) - steady) / vp
+        bubble_time = max(pipeline_time - K * steady, 0.0)
+
+        dp_exposed = max(dp_i)
+        opt_time = max(opt_i)
+        step_time = pipeline_time + dp_exposed + opt_time
+
+        money_per_hour = self._money_per_hour(s)
+        tokens = float(global_batch) * seq
+        return SimResult(
+            step_time=step_time,
+            throughput_samples=global_batch / step_time,
+            throughput_tokens=tokens / step_time,
+            pipeline_time=pipeline_time,
+            bubble_time=max(bubble_time, 0.0),
+            dp_exposed_time=dp_exposed,
+            optimizer_time=opt_time,
+            stage_times=t_i,
+            stage_p2p=h_i,
+            money_per_hour=money_per_hour,
+            money_per_step=money_per_hour / 3600.0 * step_time,
+        )
+
+    @staticmethod
+    def _money_per_hour(s: ParallelStrategy) -> float:
+        """Eq. 32 rate: sum over device types of N_g * F_g."""
+        if s.hetero is not None:
+            per_stage_devices = s.data_parallel * s.tensor_parallel
+            return sum(
+                get_device(dev).price_per_hour * per_stage_devices
+                for dev, _ in s.hetero.stage_sequence()
+            )
+        return get_device(s.device).price_per_hour * s.num_devices

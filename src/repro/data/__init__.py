@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (host-sharded, resumable)."""
+from repro.data.pipeline import MarkovCorpus, SyntheticPipeline
+
+__all__ = ["MarkovCorpus", "SyntheticPipeline"]

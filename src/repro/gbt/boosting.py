@@ -1,0 +1,130 @@
+"""Gradient boosting over :class:`repro.gbt.tree.RegressionTree`.
+
+Squared-loss boosting with shrinkage and optional row subsampling — the role
+XGBoost plays in the paper's cost model (predicting eta_comp / eta_comm).
+Bin edges are computed once on the full training set and shared across trees
+(same trick as XGBoost ``hist``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.gbt.tree import RegressionTree, quantile_bin_edges
+
+
+class GradientBoostedTrees:
+    def __init__(
+        self,
+        n_estimators: int = 200,
+        learning_rate: float = 0.1,
+        max_depth: int = 6,
+        min_samples_leaf: int = 8,
+        reg_lambda: float = 1.0,
+        subsample: float = 1.0,
+        max_bins: int = 64,
+        seed: int = 0,
+    ):
+        self.n_estimators = n_estimators
+        self.learning_rate = learning_rate
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.reg_lambda = reg_lambda
+        self.subsample = subsample
+        self.max_bins = max_bins
+        self.seed = seed
+        self.base_: float = 0.0
+        self.trees_: list[RegressionTree] = []
+
+    def fit(
+        self,
+        X: np.ndarray,
+        y: np.ndarray,
+        *,
+        eval_set: Optional[tuple[np.ndarray, np.ndarray]] = None,
+        early_stopping_rounds: Optional[int] = None,
+    ) -> "GradientBoostedTrees":
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        rng = np.random.default_rng(self.seed)
+        self.base_ = float(y.mean())
+        self.trees_ = []
+        pred = np.full(y.shape, self.base_)
+        bin_edges = [quantile_bin_edges(X[:, j], self.max_bins) for j in range(X.shape[1])]
+
+        best_eval = np.inf
+        rounds_since_best = 0
+        eval_pred = None
+        if eval_set is not None:
+            eval_pred = np.full(eval_set[1].shape, self.base_)
+
+        for _ in range(self.n_estimators):
+            grad = pred - y  # d/dpred 0.5*(pred-y)^2
+            if self.subsample < 1.0:
+                m = rng.random(y.size) < self.subsample
+                Xs, gs = X[m], grad[m]
+            else:
+                Xs, gs = X, grad
+            tree = RegressionTree(
+                max_depth=self.max_depth,
+                min_samples_leaf=self.min_samples_leaf,
+                reg_lambda=self.reg_lambda,
+                max_bins=self.max_bins,
+            )
+            tree.fit(Xs, gs, bin_edges=bin_edges)
+            self.trees_.append(tree)
+            pred += self.learning_rate * tree.predict(X)
+
+            if eval_set is not None and early_stopping_rounds is not None:
+                eval_pred += self.learning_rate * tree.predict(eval_set[0])
+                rmse = float(np.sqrt(np.mean((eval_pred - eval_set[1]) ** 2)))
+                if rmse < best_eval - 1e-9:
+                    best_eval, rounds_since_best = rmse, 0
+                else:
+                    rounds_since_best += 1
+                    if rounds_since_best >= early_stopping_rounds:
+                        break
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        out = np.full(X.shape[0], self.base_)
+        for tree in self.trees_:
+            out += self.learning_rate * tree.predict(X)
+        return out
+
+    # -- tiny serialization (checkpointable alongside model ckpts) -------
+    def to_dict(self) -> dict:
+        return {
+            "base": self.base_,
+            "learning_rate": self.learning_rate,
+            "trees": [
+                {
+                    "feature": [n.feature for n in t._nodes],
+                    "threshold": [n.threshold for n in t._nodes],
+                    "left": [n.left for n in t._nodes],
+                    "right": [n.right for n in t._nodes],
+                    "value": [n.value for n in t._nodes],
+                }
+                for t in self.trees_
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GradientBoostedTrees":
+        from repro.gbt.tree import _Node
+
+        model = cls(learning_rate=d["learning_rate"])
+        model.base_ = d["base"]
+        model.trees_ = []
+        for td in d["trees"]:
+            t = RegressionTree()
+            t._nodes = [
+                _Node(feature=f, threshold=th, left=l, right=r, value=v)
+                for f, th, l, r, v in zip(
+                    td["feature"], td["threshold"], td["left"], td["right"], td["value"]
+                )
+            ]
+            model.trees_.append(t)
+        return model

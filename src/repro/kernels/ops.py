@@ -1,0 +1,161 @@
+"""Public, differentiable wrappers over the Pallas kernels.
+
+Each op takes ``impl``:
+  * "pallas"  — interpret-mode Pallas forward (CPU validation; compiles
+                natively on real TPUs) with a recompute-based backward —
+                the flash-attention backward IS recomputation, so grads are
+                memory-frugal by construction.
+  * "xla"     — the pure-jnp reference, used inside the 512-device dry-run
+                lowering where interpret-mode callbacks cannot be
+                SPMD-partitioned (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.ssd import ssd_scan_fwd
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention_pallas(q, k, v, causal: bool, sm_scale: Optional[float]):
+    out, _ = flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, sm_scale):
+    out, _ = flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, sm_scale, res, g):
+    q, k, v = res
+    # flash backward == blockwise recompute; the reference VJP is the oracle
+    # formulation of exactly that recomputation.
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal, sm_scale=sm_scale),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_attention_pallas.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    impl: str = "pallas",
+) -> jax.Array:
+    """GQA flash attention. q: (B,Hq,S,D), k/v: (B,Hkv,T,D).
+
+    impl: "pallas" (TPU kernel, interpret-mode on CPU), "xla" (scan-based
+    online softmax — memory-sane for 32k+ and SPMD-partitionable), "naive"
+    (the O(S*T)-memory oracle, tests only).
+    """
+    if impl == "pallas":
+        return _flash_attention_pallas(q, k, v, causal, sm_scale)
+    if impl == "xla":
+        from repro.kernels.xla_flash import flash_xla_train
+
+        return flash_xla_train(q, k, v, causal, sm_scale, 512)
+    return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_pallas(x, w, eps: float):
+    return rmsnorm_fwd(x, w, eps=eps)
+
+
+def _rn_fwd(x, w, eps):
+    return rmsnorm_fwd(x, w, eps=eps), (x, w)
+
+
+def _rn_bwd(eps, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: ref.rmsnorm(x_, w_, eps=eps), x, w)
+    return vjp(g)
+
+
+_rnsig = _rmsnorm_pallas.defvjp(_rn_fwd, _rn_bwd)
+
+
+def fused_rmsnorm(
+    x: jax.Array, weight: jax.Array, *, eps: float = 1e-6, impl: str = "pallas"
+) -> jax.Array:
+    if impl == "pallas":
+        return _rmsnorm_pallas(x, weight, eps)
+    return ref.rmsnorm(x, weight, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ssd_pallas(x, dt, A, Bm, C, D):
+    y, _ = ssd_scan_fwd(x, dt, A, Bm, C, D)
+    return y
+
+
+def _ssd_fwd(x, dt, A, Bm, C, D):
+    y, _ = ssd_scan_fwd(x, dt, A, Bm, C, D)
+    return y, (x, dt, A, Bm, C, D)
+
+
+def _ssd_bwd(res, g):
+    x, dt, A, Bm, C, D = res
+    _, vjp = jax.vjp(lambda *a: ref.ssd_scan(*a), x, dt, A, Bm, C, D)
+    return vjp(g)
+
+
+_ssd_pallas.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    C: jax.Array,
+    D: Optional[jax.Array] = None,
+    *,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Mamba-2 SSD mixer. Training form (no state I/O)."""
+    if D is None:
+        D = jnp.zeros((x.shape[2],), jnp.float32)
+    if impl == "pallas":
+        return _ssd_pallas(x, dt, A, Bm, C, D)
+    return ref.ssd_scan(x, dt, A, Bm, C, D)
+
+
+def ssd_with_state(
+    x, dt, A, Bm, C, D=None, *, init_state=None, impl: str = "xla"
+):
+    """Decode/prefill form: returns (y, final_state). XLA path supports an
+    initial state (incremental decode); the Pallas kernel currently assumes
+    zero init (prefill) — decode steps are tiny and stay on the XLA path."""
+    if D is None:
+        D = jnp.zeros((x.shape[2],), jnp.float32)
+    if impl == "pallas" and init_state is None:
+        return ssd_scan_fwd(x, dt, A, Bm, C, D)
+    return ref.ssd_scan(x, dt, A, Bm, C, D, init_state=init_state, return_state=True)

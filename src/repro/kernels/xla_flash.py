@@ -1,0 +1,363 @@
+"""Flash-style attention in pure XLA (lax.scan online softmax).
+
+This is the "xla" execution path used inside the 512-device dry-run
+lowerings (interpret-mode Pallas cannot be SPMD-partitioned) and for any
+sequence long enough that materializing (S, T) logits is not memory-sane
+(prefill_32k would need S*T = 1 GiB *per head per batch row* naively).
+
+Two variants:
+  * ``flash_xla``        — scan over KV blocks; handles causal, KV caches
+                           (traced start positions), and ring buffers.
+  * ``banded_flash_xla`` — scan over Q blocks with a window-limited KV
+                           slice; O(S * window) for sliding-window archs.
+
+Both are validated against the naive oracle in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _gqa_expand(q, k, v):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    return q.reshape(B, Hkv, group, S, D), k, v, group
+
+
+def _kv_repeat(k, group: int):
+    """GQA KV-head replication to the full query-head count.
+
+    Under tensor parallelism the q-head dim shards cleanly (heads % tp == 0
+    for every assigned arch) while kv_heads < tp would force GSPMD to
+    replicate whole attention einsums; repeating KV per group (Megatron's
+    TP>kv_heads behavior) keeps all attention compute 1/tp-sharded at the
+    cost of group-way KV replication in HBM."""
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# differentiable causal flash (training path): custom_vjp so the backward is
+# blockwise RECOMPUTATION — autodiff through the forward scan would stack the
+# per-block probability matrices, i.e. O(S*T) residuals, exactly what flash
+# attention exists to avoid (this showed up as 4.3 GB/layer/microbatch in the
+# qwen3-8b dry-run profile before the fix).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_xla_train(q, k, v, causal: bool, sm_scale: Optional[float], block: int):
+    out, _ = _flash_fwd(q, k, v, causal=causal, sm_scale=sm_scale, block=block)
+    return out
+
+
+def _flash_fwd(q, k, v, *, causal, sm_scale, block):
+    """Returns (out, lse) - lse: (B, Hq, S) log-sum-exp. KV is expanded to
+    the query-head count so every einsum shards 1/tp (see _kv_repeat)."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32)
+    kx = _kv_repeat(k, group)
+    vx = _kv_repeat(v, group)
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    qpos = (T - S) + jnp.arange(S)
+
+    bk = min(block, T)
+    nb = (T + bk - 1) // bk
+    Tp = nb * bk
+    if Tp != T:
+        kx = jnp.pad(kx, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vx = jnp.pad(vx, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    kb = kx.reshape(B, Hq, nb, bk, D).astype(jnp.float32)
+    vb = vx.reshape(B, Hq, nb, bk, D).astype(jnp.float32)
+
+    def step(carry, ib):
+        m, l, acc = carry
+        kblk = jax.lax.dynamic_index_in_dim(kb, ib, 2, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, ib, 2, keepdims=False)
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kblk) * scale
+        kpos = ib * bk + jnp.arange(bk)
+        mask = kpos[None, :] < T
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, S), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hq, S), jnp.float32)
+    a0 = jnp.zeros((B, Hq, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_train_fwd(q, k, v, causal, sm_scale, block):
+    out, lse = _flash_fwd(q, k, v, causal=causal, sm_scale=sm_scale, block=block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_train_bwd(causal, sm_scale, block, res, dout):
+    q, k, v, out, lse = res
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32)
+    kx = _kv_repeat(k, group)
+    vx = _kv_repeat(v, group)
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    qpos = (T - S) + jnp.arange(S)
+    do = dout.astype(jnp.float32)
+    delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B,Hq,S)
+
+    bk = min(block, T)
+    nb = (T + bk - 1) // bk
+    Tp = nb * bk
+    if Tp != T:
+        kx = jnp.pad(kx, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vx = jnp.pad(vx, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    kb = kx.reshape(B, Hq, nb, bk, D).astype(jnp.float32)
+    vb = vx.reshape(B, Hq, nb, bk, D).astype(jnp.float32)
+
+    def step(dq, ib):
+        kblk = jax.lax.dynamic_index_in_dim(kb, ib, 2, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, ib, 2, keepdims=False)
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kblk) * scale
+        kpos = ib * bk + jnp.arange(bk)
+        mask = kpos[None, :] < T
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask[None, None], s, _NEG)
+        p = jnp.exp(s - lse[..., None])
+        dv_blk = jnp.einsum("bhst,bhsd->bhtd", p, do)
+        dp = jnp.einsum("bhsd,bhtd->bhst", do, vblk)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhst,bhtd->bhsd", ds, kblk)
+        dk_blk = jnp.einsum("bhst,bhsd->bhtd", ds, qf)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Hq, S, D), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0, jnp.arange(nb))
+    dk_full = jnp.moveaxis(dk_blocks, 0, 2).reshape(B, Hq, Tp, D)[:, :, :T]
+    dv_full = jnp.moveaxis(dv_blocks, 0, 2).reshape(B, Hq, Tp, D)[:, :, :T]
+    # fold the replicated kv-head grads back: sum over each group
+    dk = dk_full.reshape(B, Hkv, group, T, D).sum(axis=2)
+    dv = dv_full.reshape(B, Hkv, group, T, D).sum(axis=2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_xla_train.defvjp(_flash_train_fwd, _flash_train_bwd)
+
+
+def flash_xla(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    *,
+    q_start=None,  # scalar (traced ok): absolute position of q[0]; None => T - S
+    kv_valid_len=None,  # scalar: only kpos < valid are live (None => all T)
+    ring: bool = False,  # ring-buffer cache: every slot live once wrapped
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    block: int = 512,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    qf, kf, vf, group = _gqa_expand(q, k, v)
+    qf = qf.astype(jnp.float32)
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    if q_start is None:
+        q_start = T - S
+    q_start = jnp.asarray(q_start, jnp.int32)
+    qpos = q_start + jnp.arange(S)
+
+    bk = min(block, T)
+    nblocks = (T + bk - 1) // bk
+    Tpad = nblocks * bk
+    if Tpad != T:
+        kf = jnp.pad(k, ((0, 0), (0, 0), (0, Tpad - T), (0, 0)))
+        vf = jnp.pad(v, ((0, 0), (0, 0), (0, Tpad - T), (0, 0)))
+    kb = kf.reshape(B, Hkv, nblocks, bk, D).astype(jnp.float32)
+    vb = vf.reshape(B, Hkv, nblocks, bk, D).astype(jnp.float32)
+
+    m0 = jnp.full((B, Hkv, group, S), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, S, D), jnp.float32)
+
+    def step(carry, ib):
+        m, l, acc = carry
+        kblk = jax.lax.dynamic_index_in_dim(kb, ib, 2, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, ib, 2, keepdims=False)
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qf, kblk) * scale
+        kpos = ib * bk + jnp.arange(bk)
+        live = kpos < (T if kv_valid_len is None else kv_valid_len)
+        if ring:
+            live = live | ((q_start + S - 1) >= T)
+        mask = live[None, :]
+        if causal and not ring:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        elif causal and ring:
+            mask = mask & ((kpos[None, :] <= qpos[:, None]) | ((q_start + S - 1) >= T))
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgst,bhtd->bhgsd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nblocks))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(B, Hq, S, D)
+    return out.astype(q.dtype)
+
+
+def banded_flash_xla(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    window: int,
+    block_q: int = 512,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal sliding-window attention, O(S * (window + block_q)) memory/flops.
+
+    Differentiable with blockwise-recompute backward (custom_vjp below) for
+    the same O(S*T)-residual reason as flash_xla_train."""
+    return _banded_vjp(q, k, v, window, block_q, sm_scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _banded_vjp(q, k, v, window: int, block_q: int, sm_scale):
+    return _banded_impl(q, k, v, window=window, block_q=block_q,
+                        sm_scale=sm_scale)
+
+
+def _banded_fwd(q, k, v, window, block_q, sm_scale):
+    out = _banded_impl(q, k, v, window=window, block_q=block_q, sm_scale=sm_scale)
+    return out, (q, k, v)
+
+
+def _banded_bwd(window, block_q, sm_scale, res, dout):
+    """Blockwise recompute: per Q block, vjp the block closure and scatter
+    dk/dv adds into the padded buffers; dq blocks are emitted directly."""
+    q, k, v = res
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    bq = min(block_q, S)
+    nq = (S + bq - 1) // bq
+    Sp = nq * bq
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    span = window + bq
+    kpad = jnp.pad(k, ((0, 0), (0, 0), (window, Sp - S), (0, 0))).astype(jnp.float32)
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (window, Sp - S), (0, 0))).astype(jnp.float32)
+    qb = qp.reshape(B, Hkv, group, nq, bq, D).astype(jnp.float32)
+    dob = jnp.pad(dout, ((0, 0), (0, 0), (0, Sp - S), (0, 0))).reshape(
+        B, Hkv, group, nq, bq, D
+    ).astype(jnp.float32)
+
+    def block_out(qblk, kblk, vblk, start):
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qblk, kblk) * scale
+        qpos = start + jnp.arange(bq)
+        kpos = start - window + jnp.arange(span)
+        mask = (
+            (kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] > qpos[:, None] - window)
+            & (kpos[None, :] >= 0)
+            & (kpos[None, :] < S)
+        )
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgst,bhtd->bhgsd", p, vblk)
+
+    def step(carry, ib):
+        dk_acc, dv_acc = carry
+        start = ib * bq
+        qblk = jax.lax.dynamic_index_in_dim(qb, ib, 3, keepdims=False)
+        kblk = jax.lax.dynamic_slice_in_dim(kpad, start, span, axis=2)
+        vblk = jax.lax.dynamic_slice_in_dim(vpad, start, span, axis=2)
+        doblk = jax.lax.dynamic_index_in_dim(dob, ib, 3, keepdims=False)
+        _, vjp = jax.vjp(lambda a, b, c: block_out(a, b, c, start), qblk, kblk, vblk)
+        dq_blk, dk_blk, dv_blk = vjp(doblk)
+        upd_k = jax.lax.dynamic_slice_in_dim(dk_acc, start, span, axis=2) + dk_blk
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(dk_acc, upd_k, start, axis=2)
+        upd_v = jax.lax.dynamic_slice_in_dim(dv_acc, start, span, axis=2) + dv_blk
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(dv_acc, upd_v, start, axis=2)
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros_like(kpad)
+    dv0 = jnp.zeros_like(vpad)
+    (dk_acc, dv_acc), dq_blocks = jax.lax.scan(step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(B, Hq, Sp, D)[:, :, :S]
+    dk = dk_acc[:, :, window : window + S]
+    dv = dv_acc[:, :, window : window + S]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_banded_vjp.defvjp(_banded_fwd, _banded_bwd)
+
+
+def _banded_impl(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    block_q: int = 512,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Forward: scans over Q blocks; each attends only to KV in
+    [blk_start - window, blk_start + block_q)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    bq = min(block_q, S)
+    nq = (S + bq - 1) // bq
+    Spad = nq * bq
+    if Spad != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Spad - S), (0, 0)))
+    span = window + bq  # kv slice length per q block
+    kpad = jnp.pad(k, ((0, 0), (0, 0), (window, Spad - S), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (window, Spad - S), (0, 0)))
+    qb = q.reshape(B, Hkv, group, nq, bq, D).astype(jnp.float32)
+
+    def one_block(ib):
+        qblk = jax.lax.dynamic_index_in_dim(qb, ib, 3, keepdims=False)  # (B,Hkv,g,bq,D)
+        start = ib * bq  # kv slice [start - window, start + bq) in padded coords
+        kblk = jax.lax.dynamic_slice_in_dim(kpad, start, span, axis=2)
+        vblk = jax.lax.dynamic_slice_in_dim(vpad, start, span, axis=2)
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qblk, kblk.astype(jnp.float32)) * scale
+        qpos = start + jnp.arange(bq)  # absolute (unpadded) positions
+        kpos = start - window + jnp.arange(span)
+        mask = (
+            (kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] > qpos[:, None] - window)
+            & (kpos[None, :] >= 0)
+            & (kpos[None, :] < S)
+        )
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgst,bhtd->bhgsd", p, vblk.astype(jnp.float32))
+
+    outs = jax.lax.map(one_block, jnp.arange(nq))  # (nq, B, Hkv, g, bq, D)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, Hq, Spad, D)[:, :, :S]
+    return out.astype(q.dtype)

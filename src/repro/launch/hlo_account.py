@@ -1,0 +1,437 @@
+"""Call-graph HLO accounting: FLOPs / HBM bytes / collective wire bytes.
+
+``compiled.cost_analysis()`` counts each computation ONCE — a lax.scan body
+(every layer of every model here) is under-counted by its trip count, so the
+naive numbers are useless for a roofline. This module re-derives the three
+terms from ``compiled.as_text()`` by walking the call graph:
+
+  total(comp) = own(comp)
+              + sum over while-calls:  trip_count * total(body)   [+cond]
+              + sum over fusion/call:  flops-only recursion (bytes are
+                                       counted at the call site as
+                                       operand+result traffic)
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":...}}``
+the XLA scan lowering attaches. Byte accounting approximates HBM traffic as
+(result + operands) per surface instruction with special cases for
+dynamic-update-slice (touches only the update region), slices and gathers
+(touch only the slice); FLOPs count dot-generals exactly (2 * result_elems
+* contracted_elems) — elementwise FLOPs are ignored (<2% of any LM step).
+Collectives use the same ring-wire model as launch/roofline.py.
+
+Validated against an UNROLLED lowering of a reduced model in
+tests/test_hlo_account.py (scan vs unroll must agree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z0-9\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CONDITION = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_LIST = re.compile(r"replica_groups=\{(.*?)\}\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT = re.compile(r"source_target_pairs=\{")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "custom-call", "rng-bit-generator",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result: list  # [(dtype, shape)]
+    rest: str  # remainder of line after the opening paren
+    operands: list  # operand instruction names (within same computation)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list
+    table: dict  # name -> result shapes
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0, flops_only: bool = False):
+        self.flops += mult * other.flops
+        if not flops_only:
+            self.bytes += mult * other.bytes
+            self.wire_bytes += mult * other.wire_bytes
+            for k, v in other.collective_counts.items():
+                self.collective_counts[k] = self.collective_counts.get(k, 0) + mult * v
+            for k, v in other.collective_bytes.items():
+                self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + mult * v
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.bytes,
+            "wire_bytes": self.wire_bytes,
+            "collective_counts": self.collective_counts,
+            "collective_bytes": self.collective_bytes,
+        }
+
+
+def parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Comp(name=m.group(1), instrs=[], table={})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            # parameters inside header-style lines etc.
+            continue
+        name, type_str, op, rest = m.groups()
+        result = _shape_list(type_str)
+        cur.table[name] = result
+        # operand names: everything up to the closing paren of the op call
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest[: i - 1] if depth == 0 else rest
+        operands = _OPERAND.findall(operand_str)
+        cur.instrs.append(
+            _Instr(name=name, op=op, result=result, rest=rest, operands=operands)
+        )
+    return comps
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(rest)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    if _SRC_TGT.search(rest):
+        return 2
+    return 1
+
+
+def _wire(op: str, result_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    base = op.replace("-start", "")
+    if base == "all-gather":
+        return result_bytes * (g - 1) / g
+    if base == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if base == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if base == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if base == "collective-permute":
+        return result_bytes
+    return 0.0
+
+
+class HloAccountant:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self._memo: dict[str, Totals] = {}
+        self._fusion_memo: dict[str, float] = {}
+        # computations used as fusion bodies / subroutines — their bytes are
+        # accounted at the call site
+        self.entry = self._find_entry(hlo_text)
+
+    @staticmethod
+    def _find_entry(hlo: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+        if m:
+            return m.group(1)
+        raise ValueError("no ENTRY computation found")
+
+    # ------------------------------------------------------------------
+    def total(self, comp_name: Optional[str] = None) -> Totals:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        t = Totals()
+        if comp is None:
+            return t
+        self._memo[comp_name] = t  # break cycles defensively
+        for ins in comp.instrs:
+            op = ins.op
+            result_bytes = _nbytes(ins.result)
+            # --- control flow ----------------------------------------
+            if op == "while":
+                trips = 1
+                m = _TRIP.search(ins.rest)
+                if m:
+                    trips = int(m.group(1))
+                mb = _BODY.search(ins.rest)
+                mc = _CONDITION.search(ins.rest)
+                if mb:
+                    t.add(self.total(mb.group(1)), mult=trips)
+                if mc:
+                    t.add(self.total(mc.group(1)), mult=trips)
+                continue
+            if op in ("call", "conditional"):
+                m = _TO_APPLY.search(ins.rest)
+                if m:
+                    t.add(self.total(m.group(1)), mult=1.0)
+                continue
+            if op == "fusion":
+                m = _CALLS.search(ins.rest)
+                if m:
+                    # flops (dots) live inside; bytes counted here with
+                    # slice-aware parameter charging
+                    t.add(self.total(m.group(1)), mult=1.0, flops_only=True)
+                    t.bytes += self._fusion_bytes(m.group(1))
+                else:  # pragma: no cover - fusions always carry calls=
+                    t.bytes += result_bytes
+                continue  # never fall through to generic operand accounting
+            # --- flops -------------------------------------------------
+            if op == "dot":
+                contract = 1
+                m = _CONTRACT.search(ins.rest)
+                lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+                if m and lhs:
+                    dims = [int(x) for x in m.group(1).split(",") if x]
+                    for d in dims:
+                        contract *= lhs[0][1][d]
+                result_elems = result_bytes / _DTYPE_BYTES.get(ins.result[0][0], 4)
+                t.flops += 2.0 * result_elems * contract
+            # --- collectives --------------------------------------------
+            if op in _COLLECTIVES:
+                base = op.replace("-start", "")
+                g = _group_size(ins.rest)
+                t.collective_counts[base] = t.collective_counts.get(base, 0) + 1
+                t.collective_bytes[base] = (
+                    t.collective_bytes.get(base, 0.0) + result_bytes
+                )
+                t.wire_bytes += _wire(base, result_bytes, g)
+                t.bytes += 2.0 * result_bytes  # read + write HBM side
+                continue
+            # --- bytes ---------------------------------------------------
+            if op in _SKIP_BYTES and op != "custom-call":
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: touches only the update region (operand 1)
+                upd = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+                t.bytes += 2.0 * _nbytes(upd) if upd else result_bytes
+                continue
+            if op == "scatter":
+                # in-place like DUS: touches the updates (last operand) +
+                # indices, not the whole operand/result buffer
+                upd = comp.table.get(ins.operands[-1]) if ins.operands else None
+                t.bytes += 2.0 * _nbytes(upd) if upd else result_bytes
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                t.bytes += 2.0 * result_bytes
+                continue
+            if op == "custom-call":
+                # CPU oneDNN matmul etc.: operands + result
+                opb = sum(
+                    _nbytes(comp.table[o]) for o in ins.operands if o in comp.table
+                )
+                t.bytes += result_bytes + opb
+                continue
+            opb = sum(
+                _nbytes(comp.table[o]) for o in ins.operands if o in comp.table
+            )
+            t.bytes += result_bytes + opb
+        self._memo[comp_name] = t
+        return t
+
+
+    # ------------------------------------------------------------------
+    def _fusion_bytes(self, comp_name: str) -> float:
+        """HBM traffic of one fusion call, slice/update-aware.
+
+        A fused computation reads each parameter once — UNLESS every use of
+        that parameter is a (dynamic-)slice/gather, in which case only the
+        sliced region is touched (the lax.scan residual-gather pattern).
+        A dynamic-update-slice root writes only the update region.
+        """
+        if comp_name in self._fusion_memo:
+            return self._fusion_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        # dtype-roundtrip update fusions: XLA:CPU has no native bf16 buffers,
+        # so scan-carry updates appear as convert(whole) -> DUS -> convert
+        # (whole). On the TPU target those converts do not exist; charge the
+        # fusion as the in-place update it is.
+        ops_present = {i.op for i in comp.instrs}
+        if ops_present <= {"parameter", "constant", "convert", "bitcast",
+                           "copy", "tuple", "dynamic-update-slice", "scatter"} \
+                and ("dynamic-update-slice" in ops_present or "scatter" in ops_present):
+            upd_bytes = 0.0
+            for i in comp.instrs:
+                if i.op in ("dynamic-update-slice", "scatter"):
+                    idx = 1 if i.op == "dynamic-update-slice" else -1
+                    upd = comp.table.get(i.operands[idx]) if i.operands else None
+                    upd_bytes += 2.0 * _nbytes(upd) if upd else 0.0
+            self._fusion_memo[comp_name] = upd_bytes
+            return upd_bytes
+        total = 0.0
+        # parameter charging
+        params = [i for i in comp.instrs if i.op == "parameter"]
+        for p in params:
+            users = [i for i in comp.instrs if p.name in i.operands]
+            charge = 0.0
+            full = False
+            for u in users:
+                if (u.op in ("dynamic-update-slice", "scatter")
+                        and u.operands and u.operands[0] == p.name):
+                    continue  # in-place buffer alias: not read
+                if u.op in ("dynamic-slice", "slice", "gather"):
+                    charge += _nbytes(u.result)
+                else:
+                    full = True
+            total += _nbytes(comp.table.get(p.name, [])) if full else charge
+        # root charging
+        root = comp.instrs[-1] if comp.instrs else None
+        if root is not None:
+            if root.op == "dynamic-update-slice" and len(root.operands) > 1:
+                upd = comp.table.get(root.operands[1])
+                total += 2.0 * _nbytes(upd) if upd else _nbytes(root.result)
+            elif root.op == "scatter" and root.operands:
+                upd = comp.table.get(root.operands[-1])
+                total += 2.0 * _nbytes(upd) if upd else _nbytes(root.result)
+            else:
+                total += _nbytes(root.result)
+        self._fusion_memo[comp_name] = total
+        return total
+
+
+def account(hlo_text: str) -> Totals:
+    return HloAccountant(hlo_text).total()
+
+
+def breakdown(hlo_text: str, top: int = 15) -> list[dict]:
+    """Top computations by effective (trip-multiplied) HBM bytes — the
+    profile view the §Perf loop reads (no wall-clock on CPU)."""
+    acc = HloAccountant(hlo_text)
+    acc.total()  # populate memo
+    # effective multiplier per computation: walk again accumulating trips
+    mult: dict[str, float] = {acc.entry: 1.0}
+    orderq = [acc.entry]
+    while orderq:
+        name = orderq.pop()
+        comp = acc.comps.get(name)
+        if comp is None:
+            continue
+        m = mult.get(name, 0.0)
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trips = 1
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                for pat in (_BODY, _CONDITION):
+                    mm = pat.search(ins.rest)
+                    if mm:
+                        mult[mm.group(1)] = mult.get(mm.group(1), 0.0) + m * trips
+                        orderq.append(mm.group(1))
+            elif ins.op in ("call", "conditional"):
+                mm = _TO_APPLY.search(ins.rest)
+                if mm:
+                    mult[mm.group(1)] = mult.get(mm.group(1), 0.0) + m
+                    orderq.append(mm.group(1))
+    rows = []
+    for name, m in mult.items():
+        comp = acc.comps.get(name)
+        if comp is None:
+            continue
+        own = Totals()
+        # own bytes only (no recursion): recompute via a single-comp pass
+        sub = HloAccountant.__new__(HloAccountant)
+        sub.comps = {name: comp}
+        sub._memo, sub._fusion_memo = {}, {}
+        sub.entry = name
+        # fusion bodies needed for slice-aware charging
+        sub.comps.update(
+            {k: v for k, v in acc.comps.items() if k != name}
+        )
+        # restrict recursion: while/call children become no-ops
+        t = Totals()
+        for ins in comp.instrs:
+            if ins.op in ("while", "call", "conditional"):
+                continue
+            one = HloAccountant.__new__(HloAccountant)
+            one.comps = acc.comps
+            one._memo, one._fusion_memo = {}, {}
+            one.entry = name
+            # reuse instruction-level logic by accounting a single-instr comp
+            tmp = _Comp(name="tmp", instrs=[ins], table=comp.table)
+            one.comps = dict(acc.comps)
+            one.comps["tmp"] = tmp
+            t.add(one.total("tmp"))
+        rows.append({
+            "computation": name, "mult": m,
+            "bytes_eff": t.bytes * m, "flops_eff": t.flops * m,
+            "wire_eff": t.wire_bytes * m,
+        })
+    rows.sort(key=lambda r: -r["bytes_eff"])
+    return rows[:top]

@@ -1,0 +1,200 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = wire_bytes / link_bw               (per chip)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD module is
+per-device, so they are already per-chip). Collective bytes are parsed from
+the partitioned HLO text: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op we take its result-shape bytes and the
+replica-group size, then convert to ring wire traffic per participant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# v5e constants (assignment)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(?P<dtype>[a-z0-9]+)\[(?P<shape>[0-9,]*)\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * _DTYPE_BYTES.get(dtype, 4))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict  # sum of result-shape bytes per op kind
+    wire_bytes: float  # ring-model bytes on the wire per participant
+
+    def to_dict(self) -> dict:
+        return {
+            "counts": self.counts,
+            "result_bytes": self.result_bytes,
+            "wire_bytes": self.wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    result_bytes: dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:  # async pair: count only the -start
+            continue
+        # result bytes: single shape or tuple of shapes on the lhs
+        if m.group("dtype"):
+            nbytes = _shape_bytes(m.group("dtype"), m.group("shape"))
+        else:
+            lhs = line.split("=", 1)[1]
+            paren = lhs[: lhs.find(op)]
+            nbytes = sum(_shape_bytes(d, s) for d, s in _TUPLE_SHAPE_RE.findall(paren))
+        # group size
+        g = _group_size(line)
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0.0) + nbytes
+        wire += _wire_bytes(op, nbytes, g)
+    return CollectiveStats(counts=counts, result_bytes=result_bytes, wire_bytes=wire)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        return 2
+    return 1
+
+
+def _wire_bytes(op: str, result_bytes: float, g: int) -> float:
+    """Ring-model per-participant wire traffic."""
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":  # result is the gathered (full) tensor
+        return result_bytes * (g - 1) / g
+    if op == "all-reduce":  # result is the full tensor
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "reduce-scatter":  # result is one shard
+        return result_bytes * (g - 1)
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if op == "collective-permute":
+        return result_bytes
+    return 0.0
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    chips: int
+    model_flops_total: float  # useful flops for the whole step, all chips
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs MFU at the modeled bound: what fraction of peak the
+        chip would sustain if the step ran exactly at max(term)."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_per_chip = self.model_flops_total / self.chips
+        return useful_per_chip / (self.bound_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "wire_bytes_per_chip": self.wire_bytes,
+            "chips": self.chips,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(arch, shape) -> float:
+    """Useful-work estimate for one step (all chips), standard conventions:
+    train: 6*N_active*tokens (+attention); fwd-only: 2*N_active*tokens."""
+    N = arch.total_active_params()
+    toks = shape.tokens_per_step
+    if shape.kind == "train":
+        base = 6.0 * N * toks
+    else:
+        base = 2.0 * N * toks
+    # attention score/value FLOPs (not in N): 2*2*S_kv*q_dim per token per layer
+    if not arch.is_attention_free:
+        kv = min(shape.seq_len, arch.sliding_window or shape.seq_len)
+        per_tok = 4.0 * kv * arch.attn_q_dim * (0.5 if shape.kind != "decode" else 1.0)
+        layers = arch.num_layers + arch.encoder_layers
+        mult = 3.0 if shape.kind == "train" else 1.0
+        base += mult * per_tok * layers * toks
+    return base

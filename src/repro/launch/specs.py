@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every model input (the dry-run contract).
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable stand-ins
+with no device allocation; the same structures drive the real train/serve
+drivers, so the dry-run lowers exactly what production would run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import InputShape, ModelArch
+from repro.models.lm import ModelCfg, init_caches
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_len(arch: ModelArch, seq_len: int) -> int:
+    """Frontend-stub archs prepend embeddings; text gets the remainder."""
+    if arch.frontend_stub and arch.frontend_seq:
+        return max(seq_len - arch.frontend_seq, 1)
+    return seq_len
+
+
+def train_batch_specs(arch: ModelArch, shape: InputShape, cfg: ModelCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": _struct((B, text_len(arch, S)), jnp.int32)}
+    if arch.family == "encdec":
+        out["enc_features"] = _struct((B, arch.encoder_seq, arch.hidden), cfg.dtype)
+    elif arch.frontend_stub and arch.frontend_seq:
+        out["frontend"] = _struct((B, arch.frontend_seq, arch.hidden), cfg.dtype)
+    return out
+
+
+def cache_structs(arch: ModelArch, cfg: ModelCfg, batch: int, max_len: int) -> dict:
+    """eval_shape of init_caches (encdec cross-K/V included as zero-filled
+    structs of the right shape — the dry-run never runs the encoder)."""
+    shapes = jax.eval_shape(
+        lambda: init_caches(arch, cfg, batch, max_len)
+        if arch.family != "encdec"
+        else None
+    )
+    if arch.family != "encdec":
+        return shapes
+    caches = jax.eval_shape(
+        lambda: init_caches(
+            dataclass_no_enc(arch), cfg, batch, max_len
+        )
+    )
+    T = arch.encoder_seq
+    caches["enc_k"] = _struct(
+        (arch.num_layers, batch, arch.kv_heads, T, arch.head_dim), cfg.dtype
+    )
+    caches["enc_v"] = caches["enc_k"]
+    return caches
+
+
+def dataclass_no_enc(arch: ModelArch) -> ModelArch:
+    import dataclasses
+
+    return dataclasses.replace(arch, family="dense")
+
+
+def prefill_specs(arch: ModelArch, shape: InputShape, cfg: ModelCfg) -> dict:
+    """Inputs for the prefill step: tokens + empty caches sized to seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    st = text_len(arch, S)
+    out = {
+        "tokens": _struct((B, st), jnp.int32),
+        "caches": cache_structs(arch, cfg, B, S),
+    }
+    if arch.family == "encdec":
+        out["enc_features"] = _struct((B, arch.encoder_seq, arch.hidden), cfg.dtype)
+    elif arch.frontend_stub and arch.frontend_seq:
+        out["frontend"] = _struct((B, arch.frontend_seq, arch.hidden), cfg.dtype)
+    return out
+
+
+def decode_specs(arch: ModelArch, shape: InputShape, cfg: ModelCfg) -> dict:
+    """Inputs for one decode step against a seq_len-sized cache."""
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "tokens": _struct((B, 1), jnp.int32),
+        "caches": cache_structs(arch, cfg, B, S),
+        "position": _struct((), jnp.int32),
+    }

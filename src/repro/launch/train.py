@@ -1,0 +1,152 @@
+"""Training driver: Astra-searched strategy -> mesh -> jit train loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \\
+        --steps 50 --batch 32 --seq 256 --auto-strategy
+
+On this CPU box it runs reduced configs for real; on a TPU pod the same
+entry point runs the full configs (the mesh adapts to jax.device_count()).
+The --auto-strategy flag runs the paper's mode-1 search for the configured
+cluster and applies the winning strategy's executable knobs (microbatching,
+recompute granularity, distributed optimizer) — the integration point
+between the paper's contribution and this framework.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.calibration.fit import AnalyticEtaModel, load_or_train
+from repro.checkpoint import CheckpointManager
+from repro.configs import PAPER_MODELS, get_arch, get_reduced
+from repro.core import Astra
+from repro.data import MarkovCorpus, SyntheticPipeline
+from repro.launch.mesh import make_mesh
+from repro.models.lm import ModelCfg, init_params
+from repro.parallel.sharding import batch_spec, make_plan, param_specs
+from repro.train.optimizer import adamw_init
+from repro.train.train_step import TrainStepCfg, make_train_step
+
+
+def pick_strategy(arch, num_devices: int, global_batch: int, seq: int):
+    """Run the paper's mode-1 search for this cluster (v5e chips)."""
+    try:
+        eta, _ = load_or_train()
+    except Exception:
+        eta = AnalyticEtaModel()
+    astra = Astra(eta)
+    report = astra.search_homogeneous(
+        arch, "tpu-v5e", max(num_devices, 1),
+        global_batch=global_batch, seq=seq,
+    )
+    return report.best
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config of the family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=("none", "selective", "full"))
+    ap.add_argument("--auto-strategy", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    arch = get_reduced(args.arch) if args.reduced and args.arch not in PAPER_MODELS \
+        else get_arch(args.arch)
+
+    n_dev = jax.device_count()
+    # data x model mesh from whatever devices exist (1x1 on this CPU box)
+    model_par = 1
+    mesh = make_mesh((n_dev // model_par, model_par), ("data", "model"))
+    plan = make_plan(mesh, fsdp=True)
+
+    remat, micro = args.remat, args.microbatches
+    if args.auto_strategy:
+        s = pick_strategy(arch, n_dev, args.batch, args.seq)
+        if s is not None:
+            remat = s.recompute_granularity if s.recompute_granularity != "selective" else "selective"
+            micro = max(s.num_microbatches(args.batch) // max(s.data_parallel, 1), 1)
+            print(f"[astra] strategy: tp={s.tensor_parallel} pp={s.pipeline_parallel} "
+                  f"dp={s.data_parallel} mbs={s.micro_batch_size} remat={remat} "
+                  f"dist_opt={s.use_distributed_optimizer}")
+
+    cfg = ModelCfg(dtype=getattr(jnp, args.dtype), attn_impl="xla",
+                   ssm_impl="xla", remat=remat)
+    step_cfg = TrainStepCfg(
+        num_microbatches=micro, base_lr=args.lr, warmup_steps=10,
+        total_steps=args.steps, batch_axes=plan.batch_axes,
+    )
+    train_step = make_train_step(arch, cfg, step_cfg)
+
+    params = init_params(arch, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt = adamw_init(params)
+    p_spec = param_specs(arch, plan, jax.eval_shape(lambda: params))
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), p_spec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    params = jax.tree_util.tree_map(jax.device_put, params, p_sh)
+
+    corpus = MarkovCorpus(arch.vocab, seed=0)
+    pipe = SyntheticPipeline(corpus=corpus, global_batch=args.batch, seq_len=args.seq)
+
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    start_step = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        state, meta = ckpt.restore({"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        pipe.load_state_dict({"step": meta["data_step"]})
+        start_step = meta["step"]
+        print(f"[ckpt] resumed from step {start_step}")
+
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+    losses = []
+    t0 = time.time()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            if arch.family == "encdec":
+                batch["enc_features"] = jax.random.normal(
+                    jax.random.PRNGKey(step), (args.batch, arch.encoder_seq, arch.hidden)
+                ).astype(cfg.dtype)
+            elif arch.frontend_stub and arch.frontend_seq:
+                batch["frontend"] = jax.random.normal(
+                    jax.random.PRNGKey(step), (args.batch, arch.frontend_seq, arch.hidden)
+                ).astype(cfg.dtype)
+            params, opt, metrics = jitted(params, opt, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
+                      f"({(time.time()-t0):.1f}s)")
+            if ckpt and (step + 1) % args.checkpoint_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt},
+                          metadata={"data_step": pipe.step, "arch": arch.name})
+    if ckpt:
+        ckpt.wait()
+    result = {
+        "first_loss": losses[0], "last_loss": losses[-1],
+        "entropy_floor": corpus.entropy_rate(), "steps": len(losses),
+    }
+    print(json.dumps(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

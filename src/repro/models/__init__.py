@@ -1,0 +1,27 @@
+"""Executable JAX models for every assigned architecture family.
+
+All models are built from the same :class:`repro.core.arch.ModelArch` the
+Astra search consumes, are scan-over-layers (O(1) compile time in depth),
+and expose three entry points used by the launchers:
+
+    init_params(arch, key)                  -> pytree
+    forward_train(params, arch, cfg, batch) -> (loss, metrics)
+    prefill(...) / decode_step(...)         -> logits + updated caches
+"""
+from repro.models.lm import (
+    ModelCfg,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ModelCfg",
+    "init_params",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_caches",
+]

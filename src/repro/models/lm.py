@@ -1,0 +1,625 @@
+"""Unified LM covering all assigned families (dense/moe/ssm/hybrid/encdec/vlm).
+
+Design:
+  * layer params are stacked (leading L axis) and consumed by ``lax.scan`` —
+    compile time is O(1) in depth, mandatory for 64L x 5120d dry-runs;
+  * one ``layer_fn`` per family, selected statically from arch.family;
+  * remat policy (none/selective/full — the paper's recompute-granularity)
+    wraps the scan body;
+  * decode uses per-layer caches threaded through the same scan as xs/ys;
+    sliding-window archs (hymba) keep a ring-buffer KV of window size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import ModelArch
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.moe import aux_load_balance_loss, moe_block
+from repro.models.ssm import CONV_K, ssm_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Runtime (non-architectural) model options."""
+
+    dtype: Any = jnp.bfloat16
+    attn_impl: str = "pallas"  # "pallas" | "xla"
+    norm_impl: str = "xla"
+    ssm_impl: str = "pallas"
+    remat: str = "none"  # none | selective | full  (paper recompute-granularity)
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # --- §Perf hillclimb knobs (EXPERIMENTS.md) ---------------------------
+    cast_params_in_forward: bool = True  # False => caller pre-casts once/step
+    decode_dense_attn: bool = False  # S==1: dense masked einsum (GSPMD-sharded)
+    # store the KV cache with kv-heads replicated r-fold so the head dim is
+    # divisible by tp: the cache WRITE (dynamic-update-slice at a traced seq
+    # position) then stays shard-local instead of forcing GSPMD to replicate
+    # the whole cache per layer (§Perf item D2). Costs r-fold cache memory.
+    kv_cache_repeat: int = 1
+    # write the cache via scatter instead of dynamic-update-slice: GSPMD can
+    # partition a scatter along the (seq-)sharded dim by masking, where a
+    # DUS forces full rematerialization (§Perf item D3, zero memory cost).
+    kv_scatter_write: bool = False
+    # int8 KV cache with per-(token, head) scales: halves decode's dominant
+    # cache-read traffic at ~0.3% attention-output error (§Perf item D4).
+    kv_cache_quant: bool = False
+    # explicit activation shardings: {"batch": axes, "model": axis} or None
+    act_shard: Any = None
+
+    def constrain(self, x, dims: tuple):
+        """with_sharding_constraint using logical dim tags per position:
+        'b' -> batch axes, 'm' -> model axis, None -> unsharded."""
+        if self.act_shard is None:
+            return x
+        parts = []
+        for d in dims:
+            if d == "b":
+                parts.append(self.act_shard.get("batch"))
+            elif d == "m":
+                parts.append(self.act_shard.get("model"))
+            else:
+                parts.append(None)
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+_ONES_LEAVES = ("ln1", "ln2", "ln_cross", "q_norm", "k_norm", "D")
+_ZEROS_LEAVES = ("conv_b", "dt_bias", "A_log")
+
+
+def _layer_param_templates(arch: ModelArch) -> dict[str, tuple[tuple[int, ...], float]]:
+    """(shape, init_scale) per per-layer tensor, WITHOUT the L axis.
+
+    scale 0.0 marks constant-initialized leaves (ones for norms/D, zeros for
+    biases/A_log)."""
+    d, hd = arch.hidden, arch.head_dim
+    H, Hkv = arch.heads, arch.kv_heads
+    t: dict[str, tuple[tuple[int, ...], float]] = {}
+    fan = 1.0 / (d ** 0.5)
+    out_scale = fan / (2.0 * max(arch.num_layers, 1)) ** 0.5
+    if not arch.is_attention_free:
+        t["attn.wqkv"] = ((d, (H + 2 * Hkv) * hd), fan)
+        t["attn.wo"] = ((H * hd, d), out_scale)
+        if arch.qk_norm:
+            t["attn.q_norm"] = ((hd,), 0.0)
+            t["attn.k_norm"] = ((hd,), 0.0)
+    if arch.family == "moe":
+        F = arch.moe_ffn or arch.ffn
+        t["moe.router"] = ((d, arch.num_experts), fan)
+        t["moe.wi"] = ((arch.num_experts, d, 2 * F), fan)
+        t["moe.wo"] = ((arch.num_experts, F, d), out_scale)
+        if arch.shared_expert:
+            t["moe.shared_wi"] = ((d, 2 * F), fan)
+            t["moe.shared_wo"] = ((F, d), out_scale)
+    elif arch.ffn > 0:
+        t["mlp.wi"] = ((d, 2 * arch.ffn), fan)
+        t["mlp.wo"] = ((arch.ffn, d), out_scale)
+    if arch.family in ("ssm", "hybrid"):
+        di = arch.ssm_expand * d
+        Hs = arch.ssm_heads or max(di // 64, 1)
+        N = arch.ssm_state
+        conv_dim = di + 2 * N
+        t["ssm.in_proj"] = ((d, 2 * di + 2 * N + Hs), fan)
+        t["ssm.conv_w"] = ((CONV_K, conv_dim), 0.5)
+        t["ssm.conv_b"] = ((conv_dim,), 0.0)
+        t["ssm.dt_bias"] = ((Hs,), 0.0)
+        t["ssm.A_log"] = ((Hs,), 0.0)
+        t["ssm.D"] = ((Hs,), 0.0)
+        t["ssm.out_proj"] = ((di, d), out_scale)
+    if arch.family == "encdec":
+        t["cross.wq"] = ((d, H * hd), fan)
+        t["cross.wkv"] = ((d, 2 * Hkv * hd), fan)
+        t["cross.wo"] = ((H * hd, d), out_scale)
+        t["ln_cross"] = ((d,), 0.0)
+    t["ln1"] = ((d,), 0.0)
+    if arch.family == "moe" or (arch.ffn > 0 and arch.family != "ssm"):
+        t["ln2"] = ((d,), 0.0)
+    return t
+
+
+def _init_layer_stack(arch: ModelArch, key, n_layers: int, dtype) -> dict:
+    template = _layer_param_templates(arch)
+    out: dict[str, Any] = {}
+    keys = jax.random.split(key, len(template))
+    for (name, (shape, scale)), k in zip(sorted(template.items()), keys):
+        full = (n_layers,) + shape
+        leaf = name.rsplit(".", 1)[-1]
+        if scale == 0.0:
+            if leaf in _ONES_LEAVES:
+                arr = jnp.ones(full, jnp.float32 if leaf in ("D",) else dtype)
+            else:
+                arr = jnp.zeros(full, jnp.float32 if leaf in _ZEROS_LEAVES else dtype)
+        else:
+            arr = _dense_init(k, full, scale, dtype)
+        node = out
+        *parents, last = name.split(".")
+        for pkey in parents:
+            node = node.setdefault(pkey, {})
+        node[last] = arr
+    return out
+
+
+def init_params(arch: ModelArch, key, dtype=jnp.float32) -> dict:
+    k_embed, k_layers, k_head, k_enc = jax.random.split(key, 4)
+    d = arch.hidden
+    params: dict[str, Any] = {
+        "embed": _dense_init(k_embed, (arch.vocab, d), 1.0 / (d ** 0.5), dtype),
+        "layers": _init_layer_stack(arch, k_layers, arch.num_layers, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not arch.tie_embeddings:
+        params["lm_head"] = _dense_init(k_head, (d, arch.vocab), 1.0 / (d ** 0.5), dtype)
+    if arch.family == "encdec":
+        enc_arch = dataclasses.replace(arch, family="dense", qk_norm=False)
+        params["encoder"] = {
+            "layers": _init_layer_stack(enc_arch, k_enc, arch.encoder_layers, dtype),
+            "final_norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sub-layers
+# ---------------------------------------------------------------------------
+
+def _kv_quantize(x):
+    """(B, Hkv, S, D) -> int8 values + per-(B, Hkv, S) bf16 scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def _dense_cached_attention(q, k, v, start_pos, *, ring: bool = False):
+    """Decode-path attention as ONE masked einsum (no kv-block scan).
+
+    For S<=16 the (B, H, S, T) logits tensor is small, and a dense einsum
+    lets GSPMD shard batch over "data" and the cache seq dim over "model"
+    with a plain psum-combined softmax — the scan-based flash path instead
+    forces a dynamic-slice of a sharded dim, which the SPMD partitioner can
+    only solve by replicating the cache ("involuntary full
+    rematerialization" warnings in the baseline dry-run). §Perf item D1.
+    """
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, S, D)
+    # bf16 inputs + f32 accumulation: .astype(f32) on the cache would make
+    # XLA materialize a full-precision cache copy every layer
+    logits = jnp.einsum(
+        "bhgsd,bhtd->bhgst", qg, k, preferred_element_type=jnp.float32
+    ) / (D ** 0.5)
+    qpos = start_pos + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = kpos[None, :] <= qpos[:, None]
+    if ring:
+        mask = mask | ((start_pos + S - 1) >= T)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhgst,bhtd->bhgsd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def _cached_attention(q, k, v, start_pos, *, ring: bool = False):
+    """Length-aware GQA attention against a (possibly partial) KV cache.
+
+    q: (B, H, S, D) at absolute positions start_pos..start_pos+S-1;
+    k/v: (B, Hkv, T, D). ``ring=True`` marks a wrap-around sliding cache:
+    once start_pos >= T every slot is live. Scan-based online softmax —
+    never materializes (S, T) logits (prefill_32k would need GiBs/head).
+    """
+    from repro.kernels.xla_flash import flash_xla
+
+    S = q.shape[2]
+    return flash_xla(q, k, v, q_start=start_pos, kv_valid_len=start_pos + S,
+                     ring=ring, causal=True)
+
+
+def _attn_sublayer(p, h, positions, arch: ModelArch, cfg: ModelCfg, cache,
+                   window: int):
+    """Self-attention. cache: None (training) or (k, v, start_pos)."""
+    B, S, _ = h.shape
+    H, Hkv, D = arch.heads, arch.kv_heads, arch.head_dim
+    qkv = h @ p["wqkv"]
+    q, k, v = jnp.split(qkv, [H * D, (H + Hkv) * D], axis=-1)
+    q = q.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, D).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, D).transpose(0, 2, 1, 3)
+    if arch.qk_norm:
+        q = L.norm(q, p["q_norm"], impl=cfg.norm_impl)
+        k = L.norm(k, p["k_norm"], impl=cfg.norm_impl)
+    q = L.rope(q, positions)
+    k = L.rope(k, positions)
+
+    q = cfg.constrain(q, ("b", "m", None, None))
+    k = cfg.constrain(k, ("b", None, None, None))
+    v = cfg.constrain(v, ("b", None, None, None))
+
+    new_kv = None
+    if cache is not None and cfg.kv_cache_repeat > 1:
+        r = cfg.kv_cache_repeat
+        k = jnp.repeat(k, r, axis=1)
+        v = jnp.repeat(v, r, axis=1)
+    if cache is not None:
+        ck, cv, start, ck_s, cv_s = cache
+        quant = cfg.kv_cache_quant and ck_s is not None
+        T = ck.shape[2]
+        if window and S >= T:
+            # ring-cache prefill: banded attention over the fresh K/V, then
+            # the cache keeps only the last `window` positions
+            from repro.kernels.xla_flash import banded_flash_xla
+
+            out = banded_flash_xla(q, k, v, window=window)
+            # ring invariant: slot j holds position p with p % T == j
+            shift = (S - T) % T
+            k_tail = jnp.roll(k[:, :, -T:], shift, axis=2)
+            v_tail = jnp.roll(v[:, :, -T:], shift, axis=2)
+            if quant:
+                ck, ck_s = _kv_quantize(k_tail)
+                cv, cv_s = _kv_quantize(v_tail)
+            else:
+                ck = k_tail.astype(ck.dtype)
+                cv = v_tail.astype(cv.dtype)
+        else:
+            write_idx = start % T if window else start
+            if quant:
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
+            else:
+                kq, vq = k.astype(ck.dtype), v.astype(cv.dtype)
+            if cfg.kv_scatter_write:
+                idx = write_idx + jnp.arange(S)
+                ck = ck.at[:, :, idx, :].set(kq)
+                cv = cv.at[:, :, idx, :].set(vq)
+                if quant:
+                    ck_s = ck_s.at[:, :, idx].set(ks)
+                    cv_s = cv_s.at[:, :, idx].set(vs)
+            else:
+                ck = jax.lax.dynamic_update_slice(ck, kq, (0, 0, write_idx, 0))
+                cv = jax.lax.dynamic_update_slice(cv, vq, (0, 0, write_idx, 0))
+                if quant:
+                    ck_s = jax.lax.dynamic_update_slice(
+                        ck_s, ks, (0, 0, write_idx))
+                    cv_s = jax.lax.dynamic_update_slice(
+                        cv_s, vs, (0, 0, write_idx))
+            if quant:
+                k_read = _kv_dequantize(ck, ck_s, cfg.dtype)
+                v_read = _kv_dequantize(cv, cv_s, cfg.dtype)
+            else:
+                k_read, v_read = ck, cv
+            if cfg.decode_dense_attn and S <= 16:
+                out = _dense_cached_attention(q, k_read, v_read, start,
+                                              ring=bool(window))
+            else:
+                out = _cached_attention(q, k_read, v_read, start,
+                                        ring=bool(window))
+        new_kv = {"k": ck, "v": cv}
+        if quant:
+            new_kv["k_scale"], new_kv["v_scale"] = ck_s, cv_s
+    elif window and window < S:
+        from repro.kernels.xla_flash import banded_flash_xla
+
+        out = banded_flash_xla(q, k, v, window=window)
+    else:
+        out = ops.flash_attention(q, k, v, causal=True, impl=cfg.attn_impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+    return out @ p["wo"], new_kv
+
+
+def _cross_sublayer(p, h, enc_k, enc_v, arch: ModelArch, cfg: ModelCfg):
+    B, S, _ = h.shape
+    H, D = arch.heads, arch.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    out = ops.flash_attention(q, enc_k, enc_v, causal=False, impl="xla")
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * D) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# one decoder layer (family-dispatched)
+# ---------------------------------------------------------------------------
+
+def _layer_fn(arch: ModelArch, cfg: ModelCfg, lp: dict, h, positions, cache,
+              window: int):
+    """cache: None (training) or dict with per-layer slices + 'len' scalar."""
+    new_cache: dict[str, Any] = {}
+    family = arch.family
+
+    if family in ("dense", "moe", "vlm", "encdec"):
+        a, kv = _attn_sublayer(
+            lp["attn"], L.norm(h, lp["ln1"], impl=cfg.norm_impl),
+            positions, arch, cfg,
+            None if cache is None else (cache["k"], cache["v"], cache["len"],
+                                        cache.get("k_scale"), cache.get("v_scale")),
+            window,
+        )
+        h = h + a
+        if kv is not None:
+            new_cache.update(kv)
+        if family == "encdec":
+            c = _cross_sublayer(
+                lp["cross"], L.norm(h, lp["ln_cross"], impl=cfg.norm_impl),
+                cache["enc_k"], cache["enc_v"], arch, cfg,
+            )
+            h = h + c
+        if family == "moe":
+            m = moe_block(lp["moe"], L.norm(h, lp["ln2"], impl=cfg.norm_impl),
+                          top_k=arch.top_k, capacity_factor=cfg.capacity_factor)
+        else:
+            m = L.swiglu(lp["mlp"], L.norm(h, lp["ln2"], impl=cfg.norm_impl),
+                         constrain=cfg.constrain if cfg.act_shard else None)
+        h = h + m
+
+    elif family == "ssm":
+        s, sc = ssm_block(
+            lp["ssm"], L.norm(h, lp["ln1"], impl=cfg.norm_impl), arch,
+            ssm_impl=cfg.ssm_impl,
+            cache=None if cache is None else (cache["conv"], cache["state"]),
+        )
+        h = h + s
+        if sc is not None:
+            new_cache["conv"], new_cache["state"] = sc
+
+    elif family == "hybrid":
+        # hymba: attention heads and mamba heads run in parallel on one input
+        x_in = L.norm(h, lp["ln1"], impl=cfg.norm_impl)
+        a, kv = _attn_sublayer(
+            lp["attn"], x_in, positions, arch, cfg,
+            None if cache is None else (cache["k"], cache["v"], cache["len"],
+                                        cache.get("k_scale"), cache.get("v_scale")),
+            window,
+        )
+        s, sc = ssm_block(
+            lp["ssm"], x_in, arch, ssm_impl=cfg.ssm_impl,
+            cache=None if cache is None else (cache["conv"], cache["state"]),
+        )
+        h = h + 0.5 * (a + s)
+        if kv is not None:
+            new_cache.update(kv)
+        if sc is not None:
+            new_cache["conv"], new_cache["state"] = sc
+        h = h + L.swiglu(lp["mlp"], L.norm(h, lp["ln2"], impl=cfg.norm_impl),
+                     constrain=cfg.constrain if cfg.act_shard else None)
+
+    else:
+        raise ValueError(f"unknown family {family}")
+    return h, new_cache
+
+
+def _remat_policy(cfg: ModelCfg):
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if cfg.remat == "selective":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# ---------------------------------------------------------------------------
+# forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def cast_params(params, dtype):
+    """Mixed precision: fp32 master weights -> compute dtype once per step."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
+
+
+def _embed_inputs(params, arch: ModelArch, cfg: ModelCfg, batch: dict):
+    tokens = batch["tokens"]
+    h = params["embed"][tokens].astype(cfg.dtype)
+    if arch.frontend_stub and "frontend" in batch:
+        h = jnp.concatenate([batch["frontend"].astype(cfg.dtype), h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    return h, positions
+
+
+def _encode(params, arch: ModelArch, cfg: ModelCfg, features):
+    """encdec: bidirectional encoder over stub frame embeddings (B, T, d)."""
+    h = features.astype(cfg.dtype)
+    B, T, _ = h.shape
+    H, Hkv, D = arch.heads, arch.kv_heads, arch.head_dim
+    positions = jnp.arange(T)
+
+    def body(carry, lp):
+        x_in = L.norm(carry, lp["ln1"], impl=cfg.norm_impl)
+        qkv = x_in @ lp["attn"]["wqkv"]
+        q, k, v = jnp.split(qkv, [H * D, (H + Hkv) * D], axis=-1)
+        q = L.rope(q.reshape(B, T, H, D).transpose(0, 2, 1, 3), positions)
+        k = L.rope(k.reshape(B, T, Hkv, D).transpose(0, 2, 1, 3), positions)
+        v = v.reshape(B, T, Hkv, D).transpose(0, 2, 1, 3)
+        a = ops.flash_attention(q, k, v, causal=False, impl=cfg.attn_impl)
+        a = a.transpose(0, 2, 1, 3).reshape(B, T, H * D) @ lp["attn"]["wo"]
+        carry = carry + a
+        m = L.swiglu(lp["mlp"], L.norm(carry, lp["ln2"], impl=cfg.norm_impl),
+                     constrain=cfg.constrain if cfg.act_shard else None)
+        return carry + m, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return L.norm(h, params["encoder"]["final_norm"], impl=cfg.norm_impl)
+
+
+def _cross_kv(params, arch: ModelArch, enc_out):
+    """Per-decoder-layer cross K/V from the encoder output: (L,B,Hkv,T,D) x2."""
+    B, T, _ = enc_out.shape
+    Hkv, D = arch.kv_heads, arch.head_dim
+
+    def one_layer(wkv):
+        kv = enc_out @ wkv
+        k, v = jnp.split(kv, 2, axis=-1)
+        return (k.reshape(B, T, Hkv, D).transpose(0, 2, 1, 3),
+                v.reshape(B, T, Hkv, D).transpose(0, 2, 1, 3))
+
+    return jax.vmap(one_layer)(params["layers"]["cross"]["wkv"])
+
+
+def forward_logits(params, arch: ModelArch, cfg: ModelCfg, batch: dict):
+    """Full-sequence forward. Returns (B, S_total, V) logits."""
+    if cfg.cast_params_in_forward:
+        params = cast_params(params, cfg.dtype)
+    h, positions = _embed_inputs(params, arch, cfg, batch)
+    window = arch.sliding_window or 0
+
+    if arch.family == "encdec":
+        enc_out = _encode(params, arch, cfg, batch["enc_features"])
+        enc_k, enc_v = _cross_kv(params, arch, enc_out)  # (L, B, Hkv, T, D)
+        xs_cache = {"enc_k": enc_k, "enc_v": enc_v}
+    else:
+        xs_cache = None
+
+    def body(carry, xs):
+        lp, cc = xs
+        if cc is not None:  # encdec: cross-attend to the encoder K/V
+            hh, _ = _encdec_train_layer(arch, cfg, lp, carry, positions, cc, window)
+            return hh, None
+        hh, _ = _layer_fn(arch, cfg, lp, carry, positions, None, window)
+        return hh, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    h, _ = jax.lax.scan(body, h, (params["layers"], xs_cache))
+
+    h = L.norm(h, params["final_norm"], impl=cfg.norm_impl)
+    head = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    return h @ head.astype(h.dtype)
+
+
+def _encdec_train_layer(arch, cfg, lp, h, positions, cc, window):
+    a, _ = _attn_sublayer(lp["attn"], L.norm(h, lp["ln1"], impl=cfg.norm_impl),
+                          positions, arch, cfg, None, window)
+    h = h + a
+    c = _cross_sublayer(lp["cross"], L.norm(h, lp["ln_cross"], impl=cfg.norm_impl),
+                        cc["enc_k"], cc["enc_v"], arch, cfg)
+    h = h + c
+    h = h + L.swiglu(lp["mlp"], L.norm(h, lp["ln2"], impl=cfg.norm_impl),
+                     constrain=cfg.constrain if cfg.act_shard else None)
+    return h, None
+
+
+def forward_train(params, arch: ModelArch, cfg: ModelCfg, batch: dict):
+    """Next-token CE loss (+ MoE aux loss). Returns (loss, metrics)."""
+    logits = forward_logits(params, arch, cfg, batch)
+    tokens = batch["tokens"]
+    S_txt = tokens.shape[1]
+    logits_txt = logits[:, -S_txt:, :]  # frontend positions carry no loss
+    targets = tokens[:, 1:]
+    lg = logits_txt[:, :-1, :].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    metrics = {"ce_loss": loss}
+    if arch.family == "moe" and cfg.moe_aux_weight > 0:
+        h, _ = _embed_inputs(params, arch, cfg, batch)
+        aux = aux_load_balance_loss(
+            jax.tree_util.tree_map(lambda x: x[0], params["layers"]["moe"]),
+            h, top_k=arch.top_k,
+        )
+        metrics["aux_loss"] = aux
+        loss = loss + cfg.moe_aux_weight * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: caches / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_caches(arch: ModelArch, cfg: ModelCfg, batch_size: int, max_len: int,
+                enc_features=None, params=None) -> dict:
+    """Per-layer-stacked decode caches: dict of (L, B, ...) arrays."""
+    Ld = arch.num_layers
+    caches: dict[str, Any] = {}
+    if not arch.is_attention_free:
+        kv_len = min(max_len, arch.sliding_window) if arch.sliding_window else max_len
+        kv_heads = arch.kv_heads * max(cfg.kv_cache_repeat, 1)
+        kv_dtype = jnp.int8 if cfg.kv_cache_quant else cfg.dtype
+        caches["k"] = jnp.zeros(
+            (Ld, batch_size, kv_heads, kv_len, arch.head_dim), kv_dtype
+        )
+        caches["v"] = jnp.zeros_like(caches["k"])
+        if cfg.kv_cache_quant:
+            caches["k_scale"] = jnp.zeros(
+                (Ld, batch_size, kv_heads, kv_len), jnp.bfloat16
+            )
+            caches["v_scale"] = jnp.zeros_like(caches["k_scale"])
+    if arch.family in ("ssm", "hybrid"):
+        di = arch.ssm_expand * arch.hidden
+        H = arch.ssm_heads or max(di // 64, 1)
+        conv_dim = di + 2 * arch.ssm_state
+        caches["conv"] = jnp.zeros((Ld, batch_size, CONV_K - 1, conv_dim), cfg.dtype)
+        caches["state"] = jnp.zeros(
+            (Ld, batch_size, H, di // H, arch.ssm_state), jnp.float32
+        )
+    if arch.family == "encdec":
+        assert params is not None and enc_features is not None
+        enc_out = _encode(params, arch, cfg, enc_features)
+        caches["enc_k"], caches["enc_v"] = _cross_kv(params, arch, enc_out)
+    return caches
+
+
+def forward_cached(params, arch: ModelArch, cfg: ModelCfg, caches: dict,
+                   tokens: jax.Array, start_pos, frontend=None):
+    """Shared prefill/decode path: processes S tokens starting at start_pos."""
+    if cfg.cast_params_in_forward:
+        params = cast_params(params, cfg.dtype)
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    h = params["embed"][tokens].astype(cfg.dtype)
+    if frontend is not None:
+        h = jnp.concatenate([frontend.astype(cfg.dtype), h], axis=1)
+    positions = start_pos + jnp.arange(h.shape[1])
+    window = arch.sliding_window or 0
+
+    def body(carry, xs):
+        lp, cc = xs
+        cc = dict(cc)
+        cc["len"] = start_pos
+        hh, new_cache = _layer_fn(arch, cfg, lp, carry, positions, cc, window)
+        return hh, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], caches))
+    h = L.norm(h, params["final_norm"], impl=cfg.norm_impl)
+    head = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    out = dict(caches)
+    out.update(new_caches)
+    return logits, out
+
+
+def prefill(params, arch, cfg, caches, tokens, frontend=None):
+    return forward_cached(params, arch, cfg, caches, tokens, 0, frontend=frontend)
+
+
+def decode_step(params, arch, cfg, caches, tokens, position):
+    """tokens: (B, 1) new token ids; position: current sequence length."""
+    return forward_cached(params, arch, cfg, caches, tokens, position)

@@ -1,0 +1,10 @@
+"""Distribution layer: sharding rules, pipeline parallelism, collectives."""
+from repro.parallel.sharding import (
+    ShardingPlan,
+    batch_spec,
+    cache_specs,
+    make_plan,
+    param_specs,
+)
+
+__all__ = ["ShardingPlan", "make_plan", "param_specs", "batch_spec", "cache_specs"]

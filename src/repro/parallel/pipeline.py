@@ -1,0 +1,94 @@
+"""GPipe pipeline parallelism via shard_map + lax.ppermute.
+
+torch-style send/recv scheduling has no jax analogue; the jax-idiomatic
+formulation (DESIGN.md §2) runs every stage in SPMD over a "stage" mesh
+axis and streams microbatches with collective_permute:
+
+  tick t (of K + P - 1):
+    stage 0 injects microbatch t (while t < K),
+    every stage applies its local layer chunk,
+    activations rotate one stage forward via ppermute,
+    the last stage emits microbatch t - (P - 1).
+
+The bubble is exactly (P - 1) idle ticks — the paper's Eq. 22 in the
+homogeneous limit, which is why Astra's cost model prices this schedule
+directly. Built on lax.scan (not fori_loop) so the whole pipeline is
+reverse-mode differentiable for training.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe_spmd(apply_stage: Callable, axis_name: str, n_stages: int):
+    """Returns run(stage_params_local, x (K, mbs, ...)) -> y (K, mbs, ...),
+    to be called INSIDE shard_map with ``axis_name`` sharding the stages."""
+
+    def run(stage_params, x):
+        # inside shard_map each stage sees a leading singleton stage dim
+        stage_params = jax.tree_util.tree_map(lambda p: p[0], stage_params)
+        stage = jax.lax.axis_index(axis_name)
+        K = x.shape[0]
+        h0 = jnp.zeros_like(x[0])
+        y0 = jnp.zeros_like(x)
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, outs = carry
+            inject = x[jnp.minimum(t, K - 1)]
+            h_in = jnp.where(stage == 0, inject, buf)
+            h_out = apply_stage(stage_params, h_in)
+            emit_idx = t - (n_stages - 1)
+            emit = (stage == n_stages - 1) & (emit_idx >= 0) & (emit_idx < K)
+            upd = jax.lax.dynamic_update_index_in_dim(
+                outs, h_out, jnp.clip(emit_idx, 0, K - 1), 0
+            )
+            outs = jnp.where(emit, upd, outs)
+            buf = jax.lax.ppermute(h_out, axis_name, perm)
+            return (buf, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (h0, y0), jnp.arange(K + n_stages - 1))
+        # broadcast results from the last stage to every stage
+        outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis_name)
+
+    return run
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    apply_stage: Callable,
+    stage_params,  # pytree, leading dim = n_stages on every leaf
+    x,  # (K, mbs, ...) microbatched input, replicated over "stage"
+    *,
+    axis_name: str = "stage",
+):
+    """shard_map wrapper: stages sharded, inputs/outputs replicated."""
+    n_stages = mesh.shape[axis_name]
+    run = gpipe_spmd(apply_stage, axis_name, n_stages)
+
+    pspec = jax.tree_util.tree_map(lambda _: P(axis_name), stage_params)
+    fn = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(stage_params, x)
+
+
+def stack_for_stages(layer_stack, n_stages: int):
+    """(L, ...) stacked layer params -> (n_stages, L/n_stages, ...)."""
+
+    def reshape(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return x.reshape((n_stages, L // n_stages) + x.shape[1:])
+
+    return jax.tree_util.tree_map(reshape, layer_stack)

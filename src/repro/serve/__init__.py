@@ -1,0 +1,4 @@
+"""Serving layer: batched generation over the prefill/decode entry points."""
+from repro.serve.engine import GenerateResult, ServeEngine
+
+__all__ = ["ServeEngine", "GenerateResult"]

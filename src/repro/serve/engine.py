@@ -1,0 +1,72 @@
+"""Minimal batched serving engine: prefill once, decode greedily/with
+temperature, jit-compiled step functions, cache reuse across requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import ModelArch
+from repro.models import lm
+from repro.models.lm import ModelCfg
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray  # (B, prompt + generated)
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, arch: ModelArch, cfg: ModelCfg, params, max_len: int = 512):
+        self.arch, self.cfg, self.params = arch, cfg, params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, arch=arch, cfg=cfg),
+            static_argnames=(),
+        )
+        self._decode = jax.jit(
+            functools.partial(lm.decode_step, arch=arch, cfg=cfg)
+        )
+
+    def generate(
+        self,
+        prompts: np.ndarray,  # (B, S_prompt) token ids
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        seed: int = 0,
+        enc_features=None,
+        frontend=None,
+    ) -> GenerateResult:
+        B, S = prompts.shape
+        caches = lm.init_caches(
+            self.arch, self.cfg, B, self.max_len,
+            enc_features=enc_features, params=self.params,
+        )
+        logits, caches = lm.prefill(
+            self.params, self.arch, self.cfg, caches, jnp.asarray(prompts),
+            frontend=frontend,
+        )
+        key = jax.random.PRNGKey(seed)
+        out = [np.asarray(prompts)]
+        last = logits[:, -1, :]
+        pos = S + (frontend.shape[1] if frontend is not None else 0)
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, last / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(last, axis=-1)
+            nxt = nxt[:, None].astype(jnp.int32)
+            out.append(np.asarray(nxt))
+            logits, caches = lm.decode_step(
+                self.params, self.arch, self.cfg, caches, nxt, pos + i
+            )
+            last = logits[:, -1, :]
+        return GenerateResult(tokens=np.concatenate(out, axis=1), prompt_len=S)

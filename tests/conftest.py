@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; multi-device tests spawn subprocesses that set the flag locally
+(see tests/test_distributed.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.arch import ModelArch  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def llama7b() -> ModelArch:
+    return ModelArch(
+        name="llama2-7b", family="dense", num_layers=32, hidden=4096,
+        heads=32, kv_heads=32, ffn=11008, vocab=32000,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_dense() -> ModelArch:
+    return ModelArch(
+        name="tiny-dense", family="dense", num_layers=4, hidden=128,
+        heads=8, kv_heads=4, ffn=512, vocab=256,
+    )
+
+
+@pytest.fixture(scope="session")
+def rng() -> np.random.Generator:
+    return np.random.default_rng(0)

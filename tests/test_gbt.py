@@ -1,0 +1,79 @@
+"""GBT library (the XGBoost stand-in) + calibration accuracy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.gbt import GradientBoostedTrees, RegressionTree
+
+
+def test_tree_fits_step_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, size=(500, 1))
+    y = (X[:, 0] > 0.5).astype(float)
+    tree = RegressionTree(max_depth=2, min_samples_leaf=5)
+    tree.fit(X, -y)  # grad = pred - y with pred=0 => -y
+    pred = tree.predict(X)
+    assert np.mean((pred - y) ** 2) < 0.01
+
+
+def test_gbt_fits_smooth_function():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(-2, 2, size=(1200, 2))
+    y = np.sin(X[:, 0]) + 0.5 * X[:, 1] ** 2
+    m = GradientBoostedTrees(n_estimators=150, learning_rate=0.1, max_depth=4)
+    m.fit(X[:1000], y[:1000])
+    rmse = np.sqrt(np.mean((m.predict(X[1000:]) - y[1000:]) ** 2))
+    assert rmse < 0.12
+
+
+def test_gbt_early_stopping():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 1, size=(400, 1))
+    y = X[:, 0]
+    m = GradientBoostedTrees(n_estimators=500, learning_rate=0.3, max_depth=2)
+    m.fit(X[:300], y[:300], eval_set=(X[300:], y[300:]), early_stopping_rounds=5)
+    assert len(m.trees_) < 500
+
+
+def test_gbt_serialization_roundtrip():
+    rng = np.random.default_rng(3)
+    X = rng.uniform(0, 1, size=(300, 3))
+    y = X @ np.array([1.0, -2.0, 0.5])
+    m = GradientBoostedTrees(n_estimators=30, max_depth=3).fit(X, y)
+    m2 = GradientBoostedTrees.from_dict(m.to_dict())
+    np.testing.assert_allclose(m.predict(X), m2.predict(X), rtol=1e-12)
+
+
+@given(slope=st.floats(-5, 5), intercept=st.floats(-5, 5))
+@settings(max_examples=10, deadline=None)
+def test_property_gbt_learns_linear(slope, intercept):
+    rng = np.random.default_rng(4)
+    X = rng.uniform(-1, 1, size=(600, 1))
+    y = slope * X[:, 0] + intercept
+    m = GradientBoostedTrees(n_estimators=120, learning_rate=0.2, max_depth=3)
+    m.fit(X, y)
+    rmse = np.sqrt(np.mean((m.predict(X) - y) ** 2))
+    assert rmse < 0.05 * max(abs(slope), 1.0) + 0.02
+
+
+@pytest.mark.slow
+def test_calibration_accuracy_meets_paper_claim():
+    """The paper's headline: cost-model accuracy > 95%."""
+    from repro.calibration.fit import train_eta_model
+
+    model, report = train_eta_model(n_samples=4000, n_estimators=200)
+    assert report["compute_latency_accuracy"] > 0.93
+    assert report["comm_latency_accuracy"] > 0.95
+
+
+def test_analytic_eta_in_unit_interval(llama7b):
+    from repro.calibration.fit import AnalyticEtaModel
+    from repro.core.opspec import matmul_op, CommOp
+
+    m = AnalyticEtaModel()
+    ops = [matmul_op("A800", 128, 128, 128), matmul_op("H100", 4096, 4096, 4096)]
+    eta = m.eta_compute(ops)
+    assert np.all((eta > 0) & (eta <= 1.0))
+    comm = [CommOp("all_reduce", "A800", 8, 1 << 24, True)]
+    eta = m.eta_comm(comm)
+    assert np.all((eta > 0) & (eta <= 1.0))

@@ -1,0 +1,169 @@
+"""Per-kernel allclose sweeps against the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.ssd import ssd_scan_fwd
+from repro.kernels.xla_flash import banded_flash_xla, flash_xla, flash_xla_train
+
+
+def _qkv(B, Hq, Hkv, S, T, D, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, T, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, T, D), dtype)
+    return q, k, v
+
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,T,D,causal", [
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 8, 2, 256, 256, 64, True),     # GQA
+    (1, 4, 2, 200, 200, 128, True),    # uneven blocks
+    (2, 2, 1, 128, 128, 32, False),    # MQA, non-causal
+    (2, 8, 2, 1, 300, 64, True),       # decode: 1 query vs long KV
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_vs_oracle(B, Hq, Hkv, S, T, D, causal, dtype):
+    q, k, v = _qkv(B, Hq, Hkv, S, T, D, dtype)
+    out, _ = flash_attention_fwd(q, k, v, causal=causal)
+    expected = ref.attention(q, k, v, causal=causal)
+    err = jnp.abs(out.astype(jnp.float32) - expected.astype(jnp.float32)).max()
+    assert float(err) < _TOL[dtype], float(err)
+
+
+def test_pallas_flash_block_shape_sweep():
+    q, k, v = _qkv(1, 2, 2, 256, 256, 64)
+    expected = ref.attention(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        out, _ = flash_attention_fwd(q, k, v, causal=True, block_q=bq, block_k=bk)
+        assert float(jnp.abs(out - expected).max()) < 2e-5, (bq, bk)
+
+
+def test_flash_ops_grad_matches_oracle():
+    q, k, v = _qkv(1, 4, 2, 128, 128, 64)
+    gp = jax.grad(lambda q: ops.flash_attention(q, k, v, impl="pallas").sum())(q)
+    gx = jax.grad(lambda q: ops.flash_attention(q, k, v, impl="naive").sum())(q)
+    assert float(jnp.abs(gp - gx).max()) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# XLA flash (dry-run execution path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,T,block,causal", [
+    (200, 200, 64, True), (128, 128, 512, True), (100, 100, 32, False),
+])
+def test_xla_flash_vs_oracle(S, T, block, causal):
+    q, k, v = _qkv(2, 4, 2, S, T, 32)
+    out = flash_xla(q, k, v, causal=causal, block=block)
+    expected = ref.attention(q, k, v, causal=causal)
+    assert float(jnp.abs(out - expected).max()) < 2e-5
+
+
+def test_xla_flash_cached_partial_validity():
+    q, k, v = _qkv(1, 4, 2, 1, 256, 32)
+    out = flash_xla(q, k, v, q_start=150, kv_valid_len=151, block=64)
+    expected = ref.attention(q[:, :, :1], k[:, :, :151], v[:, :, :151], causal=False)
+    assert float(jnp.abs(out - expected).max()) < 2e-5
+
+
+def test_xla_flash_train_grads():
+    q, k, v = _qkv(1, 4, 2, 160, 160, 32)
+    f1 = lambda q, k, v: flash_xla_train(q, k, v, True, None, 64).sum()
+    f2 = lambda q, k, v: ref.attention(q, k, v, causal=True).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.abs(a - b).max()) < 5e-5
+
+
+def test_banded_flash_vs_banded_oracle():
+    from repro.models.layers import _sliding_attention
+
+    q, k, v = _qkv(2, 4, 2, 200, 200, 32)
+    out = banded_flash_xla(q, k, v, window=32, block_q=64)
+    expected = _sliding_attention(q, k, v, 32)
+    assert float(jnp.abs(out - expected).max()) < 2e-5
+    g1 = jax.grad(lambda q: banded_flash_xla(q, k, v, window=32, block_q=64).sum())(q)
+    g2 = jax.grad(lambda q: _sliding_attention(q, k, v, 32).sum())(q)
+    assert float(jnp.abs(g1 - g2).max()) < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 130, 384), (1, 7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_oracle(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), dtype)
+    out = rmsnorm_fwd(x, w, block_rows=64)
+    expected = ref.rmsnorm(x, w)
+    err = jnp.abs(out.astype(jnp.float32) - expected.astype(jnp.float32)).max()
+    assert float(err) < _TOL[dtype]
+
+
+def test_rmsnorm_grad():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 96))
+    w = jnp.ones((96,))
+    g1 = jax.grad(lambda x: ops.fused_rmsnorm(x, w, impl="pallas").sum())(x)
+    g2 = jax.grad(lambda x: ref.rmsnorm(x, w).sum())(x)
+    assert float(jnp.abs(g1 - g2).max()) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(B, S, H, P, N, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    C = jax.random.normal(ks[4], (B, S, N), dtype)
+    D = jax.random.normal(ks[5], (H,))
+    return x, dt, A, Bm, C, D
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 128, 2, 32, 16, 64),
+    (2, 300, 4, 64, 32, 128),   # uneven chunks
+    (1, 64, 1, 16, 8, 256),     # chunk > seq
+])
+def test_ssd_kernel_vs_oracle(B, S, H, P, N, chunk):
+    x, dt, A, Bm, C, D = _ssd_inputs(B, S, H, P, N)
+    y, state = ssd_scan_fwd(x, dt, A, Bm, C, D, chunk=chunk)
+    ye, se = ref.ssd_scan(x, dt, A, Bm, C, D, return_state=True)
+    assert float(jnp.abs(y - ye).max()) < 2e-3
+    assert float(jnp.abs(state - se).max()) < 2e-3
+
+
+def test_ssd_streaming_equals_full():
+    """Chunked decode (carrying state) == one full scan."""
+    x, dt, A, Bm, C, D = _ssd_inputs(1, 96, 2, 16, 8)
+    full = ref.ssd_scan(x, dt, A, Bm, C, D)
+    y1, st = ref.ssd_scan(x[:, :64], dt[:, :64], A, Bm[:, :64], C[:, :64], D,
+                          return_state=True)
+    y2 = ref.ssd_scan(x[:, 64:], dt[:, 64:], A, Bm[:, 64:], C[:, 64:], D,
+                      init_state=st)
+    err = jnp.abs(jnp.concatenate([y1, y2], axis=1) - full).max()
+    assert float(err) < 1e-4
+
+
+def test_ssd_grad_parity():
+    x, dt, A, Bm, C, D = _ssd_inputs(1, 128, 2, 16, 8)
+    g1 = jax.grad(lambda x: ops.ssd(x, dt, A, Bm, C, impl="pallas").sum())(x)
+    g2 = jax.grad(lambda x: ops.ssd(x, dt, A, Bm, C, impl="xla").sum())(x)
+    assert float(jnp.abs(g1 - g2).max()) < 1e-5

@@ -1,0 +1,108 @@
+"""Rule DSL (paper §3.3 Eq. 10-19): parsing, precedence, evaluation."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.rules import DEFAULT_RULES, Rule, RuleFilter, RuleSyntaxError, tokenize
+
+
+def test_tokenize_basic():
+    assert tokenize("$a && $b || $c != 3") == ["$a", "&&", "$b", "||", "$c", "!=", "3"]
+
+
+def test_paper_rule_1_flash_selective():
+    r = Rule.parse("$use_flash_attn != none && $recompute_granularity = selective")
+    assert r.matches({"use_flash_attn": True, "recompute_granularity": "selective"})
+    assert not r.matches({"use_flash_attn": True, "recompute_granularity": "full"})
+    assert not r.matches({"use_flash_attn": None, "recompute_granularity": "selective"})
+
+
+def test_paper_rule_2_recompute_layers():
+    r = Rule.parse("$recompute_num_layers > $pipeline_model_parallel_size")
+    assert r.matches({"recompute_num_layers": 9, "pipeline_model_parallel_size": 8})
+    assert not r.matches({"recompute_num_layers": 8, "pipeline_model_parallel_size": 8})
+
+
+def test_paper_rule_3_gpu_division():
+    r = Rule.parse(
+        "$num_gpus % ($pipeline_model_parallel_size * $tensor_model_parallel_size) != 0"
+    )
+    assert not r.matches(
+        {"num_gpus": 64, "pipeline_model_parallel_size": 4, "tensor_model_parallel_size": 8}
+    )
+    assert r.matches(
+        {"num_gpus": 60, "pipeline_model_parallel_size": 4, "tensor_model_parallel_size": 8}
+    )
+
+
+def test_and_binds_tighter_than_or():
+    # a || b && c  ==  a || (b && c)
+    r = Rule.parse("$a = 1 || $b = 1 && $c = 1")
+    assert r.matches({"a": 1, "b": 0, "c": 0})
+    assert not r.matches({"a": 0, "b": 1, "c": 0})
+    assert r.matches({"a": 0, "b": 1, "c": 1})
+
+
+def test_left_to_right_chains():
+    r = Rule.parse("$a = 1 && $b = 1 && $c = 1")
+    assert r.matches({"a": 1, "b": 1, "c": 1})
+    assert not r.matches({"a": 1, "b": 1, "c": 0})
+
+
+def test_arithmetic_precedence():
+    r = Rule.parse("$x + 2 * 3 = 10")
+    assert r.matches({"x": 4})
+    r2 = Rule.parse("($x + 2) * 3 = 18")
+    assert r2.matches({"x": 4})
+
+
+def test_hyphenated_megatron_names():
+    r = Rule.parse("$tensor-model-parallel-size > 8")
+    assert r.matches({"tensor_model_parallel_size": 16})
+
+
+def test_unknown_variable_raises():
+    r = Rule.parse("$nope = 1")
+    with pytest.raises(KeyError):
+        r.matches({"a": 1})
+
+
+def test_syntax_errors():
+    for bad in ("$a &&", "(($a = 1)", "$a = = 1", "@bad"):
+        with pytest.raises(RuleSyntaxError):
+            Rule.parse(bad)
+
+
+def test_filter_semantics_all_rules_must_be_false():
+    f = RuleFilter(["$a = 1", "$b = 1"])
+    assert f.is_valid({"a": 0, "b": 0})
+    assert not f.is_valid({"a": 1, "b": 0})
+    assert f.first_violation({"a": 0, "b": 1}) == "$b = 1"
+
+
+def test_default_rules_parse():
+    f = RuleFilter(DEFAULT_RULES)
+    env = {
+        "use_flash_attn": True,
+        "recompute_granularity": "none",
+        "recompute_num_layers": 0,
+        "pipeline_model_parallel_size": 2,
+        "tensor_model_parallel_size": 4,
+        "num_gpus": 64,
+    }
+    assert f.is_valid(env)
+
+
+@given(
+    a=st.integers(0, 1), b=st.integers(0, 1), c=st.integers(0, 1), d=st.integers(0, 1)
+)
+def test_property_dsl_matches_python_semantics(a, b, c, d):
+    """DSL result == python eval with the same precedence, for all inputs."""
+    r = Rule.parse("$a = 1 && $b = 1 || $c = 1 && $d != 1")
+    expected = (a == 1 and b == 1) or (c == 1 and d != 1)
+    assert r.matches({"a": a, "b": b, "c": c, "d": d}) == expected
+
+
+@given(x=st.integers(-1000, 1000), y=st.integers(1, 64))
+def test_property_modulo(x, y):
+    r = Rule.parse("$x % $y = 0")
+    assert r.matches({"x": x, "y": y}) == (x % y == 0)

@@ -1,0 +1,299 @@
+"""Search-space generator, memory filter, cost model, Eq. 22, Pareto pool."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import (
+    Astra,
+    CostSimulator,
+    GpuConfig,
+    HeteroPool,
+    ModelArch,
+    ParallelStrategy,
+)
+from repro.core.hetero import (
+    balanced_placement,
+    compositions,
+    enumerate_placements,
+    layer_assignments,
+)
+from repro.core.memory import MemoryFilter, activation_bytes_per_layer, peak_stage_memory
+from repro.core.params import HeteroPlacement, default_parameter_space
+from repro.core.pareto import CostedStrategy, optimal_pool, pick_within_budget
+from repro.core.search import generate_strategies, iter_raw_strategies
+from repro.core.simulate import SimResult
+
+
+def _strategy(llama7b, **kw) -> ParallelStrategy:
+    base = dict(device="A800", num_devices=64, tensor_parallel=2,
+                pipeline_parallel=2, micro_batch_size=1)
+    base.update(kw)
+    return ParallelStrategy(**base)
+
+
+# ---------------------------------------------------------------------------
+# search space (Eq. 8-9)
+# ---------------------------------------------------------------------------
+
+def test_raw_space_counts_match_eq9(llama7b):
+    space = {
+        "tensor_parallel": [1, 2],
+        "pipeline_parallel": [1, 2],
+        "micro_batch_size": [1, 2],
+        "sequence_parallel": [False, True],
+    }
+    raw = list(iter_raw_strategies(llama7b, GpuConfig("A800", 8), 64, space=space))
+    assert len(raw) == 2 * 2 * 2 * 2  # product of options (Eq. 9)
+
+
+def test_divisibility_rules(llama7b):
+    s = _strategy(llama7b, num_devices=60, tensor_parallel=8, pipeline_parallel=4)
+    assert not s.is_divisible(llama7b, 512)  # 60 % 32 != 0
+    s = _strategy(llama7b, num_devices=64, tensor_parallel=64)
+    assert not s.is_divisible(llama7b, 512)  # tp > heads
+    s = _strategy(llama7b, num_devices=64, tensor_parallel=8, pipeline_parallel=2)
+    assert s.is_divisible(llama7b, 512)
+
+
+def test_generate_strategies_funnel(llama7b):
+    valid, counts = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], 512, 4096
+    )
+    assert counts.generated >= counts.divisible >= counts.after_rules >= counts.after_memory
+    assert counts.after_memory == len(valid) > 0
+    for s in valid:
+        assert s.is_divisible(llama7b, 512)
+
+
+# ---------------------------------------------------------------------------
+# memory filter (Eq. 20-21)
+# ---------------------------------------------------------------------------
+
+def test_memory_monotone_in_microbatch(llama7b):
+    a1 = activation_bytes_per_layer(llama7b, _strategy(llama7b, micro_batch_size=1), 1, 4096)
+    a4 = activation_bytes_per_layer(llama7b, _strategy(llama7b, micro_batch_size=4), 4, 4096)
+    assert a4 == pytest.approx(4 * a1)
+
+
+def test_memory_knobs_reduce_footprint(llama7b):
+    base = _strategy(llama7b)
+    seq = 4096
+    m0, _ = peak_stage_memory(llama7b, base, seq=seq)
+    for kw in (
+        dict(sequence_parallel=True),
+        dict(recompute_granularity="full"),
+        dict(use_distributed_optimizer=True),
+        dict(tensor_parallel=4),
+    ):
+        m1, _ = peak_stage_memory(llama7b, dataclasses.replace(base, **kw), seq=seq)
+        assert m1 < m0, kw
+
+
+def test_memory_filter_rejects_oom(llama7b):
+    # 7B on a single A800 with no memory savings: optimizer states alone ~108GB
+    s = ParallelStrategy(device="A800", num_devices=1, micro_batch_size=1)
+    assert not MemoryFilter(seq=4096).is_valid(llama7b, s)
+    # but 16-way sharded fits
+    s = ParallelStrategy(device="A800", num_devices=32, tensor_parallel=4,
+                         pipeline_parallel=4, micro_batch_size=1,
+                         use_distributed_optimizer=True, sequence_parallel=True,
+                         recompute_granularity="full", recompute_num_layers=8)
+    assert MemoryFilter(seq=4096).is_valid(llama7b, s)
+
+
+@given(mb=st.sampled_from([1, 2, 4]), seq=st.sampled_from([1024, 4096, 8192]))
+@settings(max_examples=20, deadline=None)
+def test_property_flash_attn_never_increases_activations(llama7b, mb, seq):
+    no_flash = _strategy(llama7b, use_flash_attn=False, micro_batch_size=mb)
+    flash = _strategy(llama7b, use_flash_attn=True, micro_batch_size=mb)
+    assert activation_bytes_per_layer(llama7b, flash, mb, seq) <= activation_bytes_per_layer(
+        llama7b, no_flash, mb, seq
+    )
+
+
+# ---------------------------------------------------------------------------
+# cost model + Eq. 22
+# ---------------------------------------------------------------------------
+
+def test_eq22_reduces_to_gpipe_in_homogeneous_limit(llama7b):
+    """Homogeneous stages: T = K*t + (P-1)*t == paper's classic formula."""
+    sim = CostSimulator(AnalyticEtaModel())
+    s = _strategy(llama7b, pipeline_parallel=4, tensor_parallel=2,
+                  num_devices=64, micro_batch_size=1)
+    res = sim.simulate(llama7b, s, global_batch=64, seq=2048)
+    K = s.num_microbatches(64)
+    t = max(res.stage_times[i] + res.stage_p2p[i] for i in range(4))
+    # stage times differ slightly (embedding/head on edge stages); check the
+    # formula structure with the actual per-stage values
+    expected = sum(
+        res.stage_times[i] + res.stage_p2p[i] for i in range(4)
+    ) + (K - 1) * t
+    assert res.pipeline_time == pytest.approx(expected, rel=1e-9)
+
+
+def test_virtual_pipeline_invariants(llama7b):
+    """Regression for the Eq.22 interleaving extension: vp must be a no-op
+    without a pipeline (pp=1), must never beat the steady-state bound, and
+    must strictly shrink the bubble when pp>1 and K>1."""
+    sim = CostSimulator(AnalyticEtaModel())
+    kw = dict(global_batch=64, seq=2048)
+    base = _strategy(llama7b, pipeline_parallel=1, tensor_parallel=2,
+                     num_devices=64, micro_batch_size=1)
+    for vp in (1, 2, 4):
+        s = dataclasses.replace(base, virtual_pipeline_stages=vp)
+        r = sim.simulate(llama7b, s, **kw)
+        if vp == 1:
+            t_ref = r.step_time
+        assert r.step_time == pytest.approx(t_ref, rel=1e-9), vp
+
+    pp4 = _strategy(llama7b, pipeline_parallel=4, tensor_parallel=2,
+                    num_devices=64, micro_batch_size=1)
+    r1 = sim.simulate(llama7b, pp4, **kw)
+    r2 = sim.simulate(
+        llama7b, dataclasses.replace(pp4, virtual_pipeline_stages=2), **kw
+    )
+    assert r2.bubble_time < r1.bubble_time
+    K = pp4.num_microbatches(64)
+    assert r2.pipeline_time > K * max(
+        r1.stage_times[i] + r1.stage_p2p[i] for i in range(4)
+    ) * 0.99  # never below the steady-state lower bound
+
+
+def test_more_devices_more_throughput(llama7b):
+    sim = CostSimulator(AnalyticEtaModel())
+    r64 = sim.simulate(llama7b, _strategy(llama7b, num_devices=64, tensor_parallel=2,
+                                          pipeline_parallel=1),
+                       global_batch=512, seq=4096)
+    r128 = sim.simulate(llama7b, _strategy(llama7b, num_devices=128, tensor_parallel=2,
+                                           pipeline_parallel=1),
+                        global_batch=512, seq=4096)
+    assert r128.throughput_tokens > r64.throughput_tokens
+
+
+def test_h100_faster_than_a800(llama7b):
+    sim = CostSimulator(AnalyticEtaModel())
+    kw = dict(num_devices=64, tensor_parallel=2, pipeline_parallel=1, micro_batch_size=2)
+    ra = sim.simulate(llama7b, _strategy(llama7b, device="A800", **kw),
+                      global_batch=512, seq=4096)
+    rh = sim.simulate(llama7b, _strategy(llama7b, device="H100", **kw),
+                      global_batch=512, seq=4096)
+    assert rh.throughput_tokens > 1.5 * ra.throughput_tokens
+
+
+def test_recompute_costs_time_saves_memory(llama7b):
+    sim = CostSimulator(AnalyticEtaModel())
+    base = _strategy(llama7b, num_devices=64, micro_batch_size=2)
+    full = dataclasses.replace(base, recompute_granularity="full", recompute_num_layers=16)
+    r0 = sim.simulate(llama7b, base, global_batch=512, seq=4096)
+    r1 = sim.simulate(llama7b, full, global_batch=512, seq=4096)
+    assert r1.step_time > r0.step_time
+    m0, _ = peak_stage_memory(llama7b, base, seq=4096)
+    m1, _ = peak_stage_memory(llama7b, full, seq=4096)
+    assert m1 < m0
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous (Eq. 23)
+# ---------------------------------------------------------------------------
+
+def test_composition_count_matches_stars_and_bars():
+    # unordered compositions of P into M nonneg parts with huge caps:
+    # C(P + M - 1, M - 1)
+    P, M = 8, 3
+    got = len(list(compositions(P, M, [P] * M)))
+    assert got == math.comb(P + M - 1, M - 1)
+
+
+def test_layer_assignment_budget():
+    for n in layer_assignments(32, (2, 2)):
+        assert 2 * n[0] + 2 * n[1] == 32
+        assert all(x >= 1 for x in n)
+
+
+def test_enumerate_placements_respects_caps(llama7b):
+    pool = HeteroPool(total_devices=64, type_caps=(("A800", 16), ("H100", 48)))
+    for pl in enumerate_placements(llama7b, pool, pipeline_parallel=4,
+                                   data_parallel=2, tensor_parallel=2):
+        seq = pl.stage_sequence()
+        assert len(seq) == 4
+        assert pl.total_layers == llama7b.num_layers
+        a800_stages = sum(1 for d, _ in seq if d == "A800")
+        assert a800_stages * 4 <= 16  # m_i * D * T <= l_i
+
+
+def test_balanced_placement_gives_faster_type_more_layers(llama7b):
+    pool = HeteroPool(total_devices=64, type_caps=(("A800", 32), ("H100", 32)))
+    pl = balanced_placement(llama7b, pool, pipeline_parallel=4, data_parallel=2,
+                            tensor_parallel=2, m=(2, 2))
+    assert pl is not None and pl.total_layers == 32
+    layers = dict(zip(pl.devices, pl.layers_per_stage))
+    assert layers["H100"] > layers["A800"]
+
+
+def test_hetero_beats_worst_homogeneous(llama7b):
+    """Mixed cluster should outperform its slowest-type-only half at the same
+    total device count budget split (sanity direction check, as in Table 2)."""
+    astra = Astra(AnalyticEtaModel())
+    pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
+    het = astra.search_heterogeneous(llama7b, pool, global_batch=128, seq=2048, fast=True)
+    hom = astra.search_homogeneous(llama7b, "A800", 32, global_batch=128, seq=2048)
+    assert het.best_sim.throughput_tokens > 0
+    assert hom.best_sim.throughput_tokens > 0
+    # Table-2 relationship: heter >= all-A800, <= all-H100 at same count
+    h100 = astra.search_homogeneous(llama7b, "H100", 32, global_batch=128, seq=2048)
+    assert hom.best_sim.throughput_tokens <= h100.best_sim.throughput_tokens
+
+
+# ---------------------------------------------------------------------------
+# pareto / money (Eq. 29-33)
+# ---------------------------------------------------------------------------
+
+def _costed(p, c):
+    sim = SimResult(step_time=1.0, throughput_samples=p, throughput_tokens=p,
+                    pipeline_time=1, bubble_time=0, dp_exposed_time=0,
+                    optimizer_time=0, stage_times=[1.0], stage_p2p=[0.0],
+                    money_per_hour=c, money_per_step=c / 3600)
+    return CostedStrategy(strategy=None, sim=sim, throughput=p, money=c)
+
+
+def test_optimal_pool_no_dominated_pairs():
+    cands = [_costed(10, 5), _costed(20, 4), _costed(5, 1), _costed(20, 9), _costed(1, 0.5)]
+    pool = optimal_pool(cands)
+    for a in pool:
+        for b in pool:
+            assert not (b.throughput > a.throughput and b.money < a.money)
+    # the dominated (10,5) and (20,9) entries are gone
+    assert {(c.throughput, c.money) for c in pool} == {(20, 4), (5, 1), (1, 0.5)}
+
+
+def test_pick_within_budget():
+    pool = optimal_pool([_costed(20, 4), _costed(5, 1), _costed(1, 0.5)])
+    assert pick_within_budget(pool, 10).throughput == 20
+    assert pick_within_budget(pool, 2).throughput == 5
+    assert pick_within_budget(pool, 0.1) is None
+    assert pick_within_budget(pool, None).throughput == 20
+
+
+@given(
+    st.lists(
+        st.tuples(st.floats(0.1, 100), st.floats(0.1, 100)), min_size=1, max_size=40
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_property_pool_is_pareto_front(pairs):
+    cands = [_costed(p, c) for p, c in pairs]
+    pool = optimal_pool(cands)
+    # 1) non-domination inside the pool
+    for a in pool:
+        assert not any(
+            b.throughput > a.throughput and b.money < a.money for b in pool
+        )
+    # 2) every candidate is weakly dominated by some pool member
+    for c in cands:
+        assert any(
+            p.throughput >= c.throughput and p.money <= c.money for p in pool
+        )
