@@ -34,7 +34,15 @@ BENCHES = ("table1", "fig5", "fig6", "table2", "fig7", "accuracy", "ablations",
 def _derived(name: str, rows: list[dict]) -> str:
     try:
         if name == "table1":
-            return f"max_strategies={max(r['strategies'] for r in rows)}"
+            out = "max_strategies=" + str(
+                max(r["strategies"] for r in rows if r["bench"] == "table1")
+            )
+            eng = [r for r in rows
+                   if r["bench"] == "table1-engine" and r["model"] == "ALL"]
+            if eng:
+                out += (f";engine_speedup={eng[0]['speedup']}x"
+                        f";rankings_identical={eng[0]['rankings_identical']}")
+            return out
         if name in ("fig5", "fig6"):
             ratios = [r["ratio"] for r in rows if r.get("ratio")]
             return f"min_ratio={min(ratios):.3f};mean_ratio={sum(ratios)/len(ratios):.3f}"

@@ -4,17 +4,78 @@ Paper reports 7 models x 4 GPU-count settings with #strategies in the
 10^4 range, search time <0.1s and simulation ~20-70s. Our memoized
 simulator is faster in absolute terms; the shape of the funnel (strategies
 grow with model size, shrink with GPU count) is the reproduced claim.
+
+``run`` additionally reports the scalar-vs-batched evaluation-engine
+comparison on a subset of settings: identical best-strategy rankings are
+asserted, and the per-setting plus aggregate simulate-time speedup of
+:class:`repro.core.batch.BatchedCostSimulator` over the scalar reference
+loop is emitted as ``table1-engine`` rows.
 """
 from __future__ import annotations
 
 import time
 
 from repro.configs import PAPER_MODELS
-from repro.core import Astra
+from repro.core import Astra, CostSimulator
+from repro.core.batch import BatchedCostSimulator
+from repro.core.params import GpuConfig
+from repro.core.search import generate_strategies
 
 SETTINGS = [64, 256, 1024, 4096]
 MODELS = ["llama2-7b", "llama2-13b", "llama2-70b", "llama3-8b", "llama3-70b",
           "glm-67b", "glm-130b"]
+# engine-comparison subset: enough candidates for the timing to be meaningful
+ENGINE_SETTINGS = [("llama2-7b", 256), ("llama2-13b", 256), ("llama2-70b", 1024)]
+
+
+def compare_engines(
+    eta, model: str, gpus: int, *, global_batch: int = 1024, seq: int = 4096
+) -> dict:
+    """Simulate one mode-1 candidate list with both engines (fresh caches).
+
+    Returns per-setting wall-times, the speedup, and whether the full
+    throughput ranking (not just the argmax) is identical.
+    """
+    arch = PAPER_MODELS[model]
+    strategies, _ = generate_strategies(
+        arch, [GpuConfig("A800", gpus)], global_batch, seq
+    )
+    scalar = CostSimulator(eta)
+    batched = BatchedCostSimulator(eta)
+
+    t0 = time.perf_counter()
+    r_scalar = [
+        scalar.simulate(arch, s, global_batch=global_batch, seq=seq)
+        for s in strategies
+    ]
+    t_scalar = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    r_batched = batched.simulate_batch(
+        arch, strategies, global_batch=global_batch, seq=seq
+    )
+    t_batched = time.perf_counter() - t0
+
+    order = lambda rs: sorted(
+        range(len(rs)), key=lambda i: (-rs[i].throughput_tokens, i)
+    )
+    rankings_identical = order(r_scalar) == order(r_batched)
+    worst_rel = max(
+        (abs(a.step_time - b.step_time) / a.step_time
+         for a, b in zip(r_scalar, r_batched)),
+        default=0.0,
+    )
+    return {
+        "bench": "table1-engine",
+        "model": model,
+        "gpus": gpus,
+        "strategies": len(strategies),
+        "scalar_s": round(t_scalar, 3),
+        "batched_s": round(t_batched, 3),
+        "speedup": round(t_scalar / max(t_batched, 1e-9), 1),
+        "rankings_identical": rankings_identical,
+        "worst_rel_step_diff": worst_rel,
+    }
 
 
 def run(eta) -> list[dict]:
@@ -40,4 +101,20 @@ def run(eta) -> list[dict]:
                 "best_tokens_per_s": round(rep.best_sim.throughput_tokens, 0)
                 if rep.best_sim else 0,
             })
-    return rows
+
+    # scalar-vs-batched engine comparison (fresh simulators per setting)
+    engine_rows = [compare_engines(eta, m, n) for m, n in ENGINE_SETTINGS]
+    total_scalar = sum(r["scalar_s"] for r in engine_rows)
+    total_batched = sum(r["batched_s"] for r in engine_rows)
+    engine_rows.append({
+        "bench": "table1-engine",
+        "model": "ALL",
+        "gpus": 0,
+        "strategies": sum(r["strategies"] for r in engine_rows),
+        "scalar_s": round(total_scalar, 3),
+        "batched_s": round(total_batched, 3),
+        "speedup": round(total_scalar / max(total_batched, 1e-9), 1),
+        "rankings_identical": all(r["rankings_identical"] for r in engine_rows),
+        "worst_rel_step_diff": max(r["worst_rel_step_diff"] for r in engine_rows),
+    })
+    return rows + engine_rows

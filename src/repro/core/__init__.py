@@ -14,6 +14,7 @@ Layout mirrors the paper's pipeline (Fig. 2):
   api.py      — the three search modes
 """
 from repro.core.api import Astra, SearchReport
+from repro.core.batch import BatchedCostSimulator
 from repro.core.arch import (
     ASSIGNED_SHAPES,
     DECODE_32K,
@@ -42,5 +43,6 @@ __all__ = [
     "HeteroPlacement",
     "ParallelStrategy",
     "CostSimulator",
+    "BatchedCostSimulator",
     "SimResult",
 ]

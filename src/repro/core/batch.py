@@ -1,0 +1,459 @@
+"""Batched strategy-evaluation engine (the hot path of all three modes).
+
+The scalar :class:`~repro.core.simulate.CostSimulator` walks one strategy at
+a time: it replicates each layer's op list ``layers`` times, Counters it,
+and queries the eta model per miss. Across a 10^4-strategy search nearly all
+of that work is redundant — op *shapes* repeat massively (the paper's own
+observation, §3.5). This module exploits that structure end to end:
+
+* stages are :class:`~repro.core.costmodel.StageCensusVec` count-vectors over
+  a memoized per-layer census (one dict scale instead of ``O(ops * layers)``
+  list work);
+* every unique ``ComputeOp`` / ``CommOp`` across a whole candidate chunk is
+  resolved against the eta model in ONE vectorized ``compute_times`` /
+  ``comm_times`` call and cached in a persistent op-time table;
+* per-strategy evaluation is then NumPy dot-products of count-vectors
+  against the time table, composed with the shared Eq. 22 algebra
+  (:func:`~repro.core.simulate.compose_sim_result`);
+* :meth:`BatchedCostSimulator.evaluate_stream` adds chunked streaming with
+  an incremental top-k heap and an incremental Pareto staircase, so mode-3's
+  device-count sweep never materializes the full ``CostedStrategy`` list.
+
+Parity with the scalar simulator is exact up to float summation order
+(tested to 1e-9 relative in tests/test_batch_sim.py).
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+import itertools
+import operator
+from typing import Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.core.arch import ModelArch
+from repro.core.costmodel import StageCensusVec, build_stage_census_vec
+from repro.core.opspec import CommOp
+from repro.core.params import ParallelStrategy
+from repro.core.pareto import CostedStrategy, money_cost, sort_strategies
+from repro.core.simulate import (
+    _OVERLAP_EFFICIENCY,
+    _P2P_OVERLAP_EFFICIENCY,
+    _PCIE_BW,
+    SimResult,
+    compose_sim_result,
+)
+
+
+class _OpTimeTable:
+    """Persistent op -> (index, predicted time) table.
+
+    ``resolve`` batches all unseen descriptors into one eta-model call, so a
+    search issues a handful of vectorized queries instead of one per op.
+    """
+
+    def __init__(self, predict_batch, predict_one):
+        self._predict_batch = predict_batch
+        self._predict_one = predict_one
+        self.index: dict = {}
+        self.times = np.zeros(0, dtype=np.float64)
+
+    def resolve(self, ops: Sequence) -> None:
+        missing = [op for op in ops if op not in self.index]
+        if not missing:
+            return
+        # dedupe preserving order (ops may repeat across censuses)
+        missing = list(dict.fromkeys(missing))
+        if self._predict_batch is not None:
+            predicted = np.asarray(self._predict_batch(missing), dtype=np.float64)
+        else:
+            predicted = np.array(
+                [self._predict_one(op) for op in missing], dtype=np.float64
+            )
+        base = len(self.index)
+        for i, op in enumerate(missing):
+            self.index[op] = base + i
+        self.times = np.concatenate([self.times, predicted])
+
+
+class _TopK:
+    """Incremental top-k under the Eq. 33 order (throughput desc, money asc)."""
+
+    def __init__(self, k: int):
+        self.k = max(k, 0)
+        self._heap: list = []  # (throughput, -money, tiebreak, CostedStrategy)
+        self._counter = itertools.count()
+
+    def push(self, c: CostedStrategy) -> None:
+        if self.k == 0:
+            return
+        key = (c.throughput, -c.money, -next(self._counter))
+        if len(self._heap) < self.k:
+            heapq.heappush(self._heap, (key, c))
+        elif key > self._heap[0][0]:
+            heapq.heapreplace(self._heap, (key, c))
+
+    def sorted(self) -> list[CostedStrategy]:
+        return sort_strategies([c for _, c in self._heap])
+
+
+class _ParetoStaircase:
+    """Incremental Eq. 30-31 non-dominated pool.
+
+    Invariant: ``_thr`` ascending, ``_money`` strictly ascending (each pool
+    member trades money for throughput). Matches
+    :func:`repro.core.pareto.optimal_pool` on the same candidate multiset.
+    """
+
+    def __init__(self):
+        self._thr: list[float] = []
+        self._money: list[float] = []
+        self._items: list[CostedStrategy] = []
+
+    def push(self, c: CostedStrategy) -> None:
+        thr, money = c.throughput, c.money
+        i = bisect.bisect_right(self._thr, thr)
+        # dominated (or duplicate): an as-fast-or-faster member at most as
+        # expensive. Equal-throughput members sit at i-1; strictly faster
+        # members start at i with the cheapest of them first.
+        if i > 0 and self._thr[i - 1] == thr and self._money[i - 1] <= money:
+            return
+        if i < len(self._thr) and self._money[i] <= money:
+            return
+        # remove members this candidate dominates (<= throughput, >= money)
+        k = i
+        while k > 0 and self._money[k - 1] >= money:
+            k -= 1
+        del self._thr[k:i], self._money[k:i], self._items[k:i]
+        self._thr.insert(k, thr)
+        self._money.insert(k, money)
+        self._items.insert(k, c)
+
+    def sorted(self) -> list[CostedStrategy]:
+        return list(reversed(self._items))  # throughput descending
+
+
+def _chunks(it: Iterable, size: int) -> Iterator[list]:
+    it = iter(it)
+    while True:
+        chunk = list(itertools.islice(it, size))
+        if not chunk:
+            return
+        yield chunk
+
+
+# strategy fields that change a stage census (beyond device/layers/position)
+_CENSUS_FIELDS = (
+    "micro_batch_size",
+    "tensor_parallel",
+    "expert_parallel",
+    "use_flash_attn",
+    "sequence_parallel",
+    "pipeline_parallel",
+    "recompute_granularity",
+    "recompute_num_layers",
+    "use_distributed_optimizer",
+)
+# additional fields that change the stage-time arithmetic
+_TIMING_FIELDS = (
+    "tp_comm_overlap",
+    "overlap_p2p",
+    "overlap_grad_reduce",
+    "overlap_param_gather",
+    "offload_optimizer",
+)
+_STAGE_CACHE_MAX = 65536
+
+
+_CENSUS_GETTER = operator.attrgetter(*_CENSUS_FIELDS)
+_TIMING_GETTER = operator.attrgetter(*_TIMING_FIELDS)
+
+
+class BatchedCostSimulator:
+    """Vectorized drop-in for :class:`CostSimulator.simulate` over strategy
+    lists. The scalar simulator remains the reference implementation."""
+
+    def __init__(self, eta_model):
+        self.eta = eta_model
+        self._comp = _OpTimeTable(
+            getattr(eta_model, "compute_times", None), eta_model.compute_time
+            if hasattr(eta_model, "compute_time") else None,
+        )
+        self._comm = _OpTimeTable(
+            getattr(eta_model, "comm_times", None), eta_model.comm_time
+            if hasattr(eta_model, "comm_time") else None,
+        )
+        # two cache tiers, both persistent across batches so a mode-3 sweep
+        # pays for each distinct stage exactly once:
+        #   census key (op content)  -> raw section sums (the dot-products)
+        #   timing key (+ overlaps)  -> final (tf, tb, h, t_dp, t_opt)
+        self._raw_cache: dict = {}
+        self._stage_time_cache: dict = {}
+        # interned (arch, seq, strategy-fields) tuples -> small ints, so the
+        # per-stage cache keys stay cheap to hash
+        self._census_base_ids: dict = {}
+        self._time_base_ids: dict = {}
+
+    def _maybe_trim(self) -> None:
+        """Bound cache growth BETWEEN batches.
+
+        Must run before planning (never mid-batch: plans hold keys into the
+        caches) and must drop the id interners together with the caches —
+        resetting the interners alone would recycle ids into stale keys.
+        """
+        if (
+            len(self._stage_time_cache) > _STAGE_CACHE_MAX
+            or len(self._raw_cache) > _STAGE_CACHE_MAX
+        ):
+            self._raw_cache.clear()
+            self._stage_time_cache.clear()
+            self._census_base_ids.clear()
+            self._time_base_ids.clear()
+
+    # -- stage identity ----------------------------------------------------
+    def _stage_plan(
+        self, arch: ModelArch, s: ParallelStrategy, seq: int
+    ) -> list[tuple[tuple, tuple, int, Optional[str], int]]:
+        """[(time_key, census_key, stage_index, device, layers)] per stage.
+
+        Census/timing depend on the stage position only through
+        (is_first, is_last) — interior stages of one strategy collapse onto
+        a single key, and equal keys across strategies share cached results.
+        Strategies that differ only in overlap/offload toggles share the
+        census tier (same ops, different discounts).
+        """
+        # s.device matters even though hetero stages carry their own dev:
+        # homogeneous stage tuples use dev=None, so without it two device
+        # types would collide in the caches (mode-3 sweeps mix types)
+        cbase = (arch, seq, s.device, s.data_parallel) + _CENSUS_GETTER(s)
+        cid = self._census_base_ids.setdefault(cbase, len(self._census_base_ids))
+        tid = self._time_base_ids.setdefault(
+            (cid,) + _TIMING_GETTER(s), len(self._time_base_ids)
+        )
+        if s.hetero is not None:
+            stages = s.hetero.stage_sequence()
+        else:
+            layers = arch.num_layers // s.pipeline_parallel
+            stages = [(None, layers)] * s.pipeline_parallel
+        pp = len(stages)
+        return [
+            (
+                (tid, dev, n, i == 0, i == pp - 1),
+                (cid, dev, n, i == 0, i == pp - 1),
+                i, dev, n,
+            )
+            for i, (dev, n) in enumerate(stages)
+        ]
+
+    @staticmethod
+    def _p2p_op(census: StageCensusVec) -> Optional[CommOp]:
+        if census.p2p_bytes <= 0:
+            return None
+        return CommOp("p2p", census.device, 2, census.p2p_bytes, intra_node=False)
+
+    # -- raw section sums (the Eq. 27-28 dot-products) ----------------------
+    def _sum_pending(self, pending: dict) -> None:
+        """Fill ``_raw_cache`` for every pending (census_key -> census).
+
+        The count-vectors of all pending stages are concatenated into flat
+        (op-index, count, row) arrays and reduced with ONE vectorized
+        ``times[idx] * cnt`` + ``bincount`` pass per op table — the NumPy
+        dot-product evaluation of Eq. 27-28 over the whole chunk at once.
+        """
+        items = list(pending.items())
+        n = len(items)
+        cindex, mindex = self._comp.index, self._comm.index
+        comp_idx: list[int] = []
+        comp_cnt: list[float] = []
+        comp_row: list[int] = []
+        comm_idx: list[int] = []
+        comm_cnt: list[float] = []
+        comm_row: list[int] = []
+        for r, (_, c) in enumerate(items):
+            for j, section in enumerate((c.fwd_comp, c.recompute_comp, c.step_comp)):
+                row = 3 * r + j
+                for op, cnt in section.items():
+                    comp_idx.append(cindex[op])
+                    comp_cnt.append(cnt)
+                    comp_row.append(row)
+            for j, section in enumerate((c.fwd_comm, c.step_comm)):
+                row = 2 * r + j
+                for op, cnt in section.items():
+                    comm_idx.append(mindex[op])
+                    comm_cnt.append(cnt)
+                    comm_row.append(row)
+
+        if comp_idx:
+            prod = self._comp.times[np.asarray(comp_idx)] * np.asarray(comp_cnt)
+            comp_sums = np.bincount(np.asarray(comp_row), weights=prod, minlength=3 * n)
+        else:
+            comp_sums = np.zeros(3 * n)
+        if comm_idx:
+            prod = self._comm.times[np.asarray(comm_idx)] * np.asarray(comm_cnt)
+            comm_sums = np.bincount(np.asarray(comm_row), weights=prod, minlength=2 * n)
+        else:
+            comm_sums = np.zeros(2 * n)
+
+        comm_t = self._comm.times
+        for r, (ckey, c) in enumerate(items):
+            p2p = self._p2p_op(c)
+            h_raw = float(comm_t[mindex[p2p]]) if p2p is not None else 0.0
+            rs_sum = sum(
+                float(comm_t[mindex[op]]) * cnt
+                for op, cnt in c.step_comm.items()
+                if op.kind == "reduce_scatter"
+            )
+            opt_bytes = sum(op.bytes_accessed * cnt for op, cnt in c.step_comp.items())
+            self._raw_cache[ckey] = (
+                float(comp_sums[3 * r]),      # t_fwd_comp
+                float(comp_sums[3 * r + 1]),  # recompute surcharge
+                float(comp_sums[3 * r + 2]),  # t_opt (pre-offload)
+                float(comm_sums[2 * r]),      # t_fwd_comm (pre-overlap)
+                float(comm_sums[2 * r + 1]),  # t_dp (pre-overlap)
+                h_raw,
+                rs_sum,
+                opt_bytes,
+                c.bwd_flops_multiplier,
+            )
+
+    # -- per-stage timing (mirrors CostSimulator.stage_times) ---------------
+    def _finalize_stage(
+        self, raw: tuple, s: ParallelStrategy
+    ) -> tuple[float, float, float, float, float]:
+        (t_fwd_comp, t_rc, t_opt, t_fwd_comm, t_dp, h, rs_sum, opt_bytes,
+         bwd_mult) = raw
+        if s.tp_comm_overlap:
+            t_fwd_comm *= 1.0 - _OVERLAP_EFFICIENCY * 0.5
+        t_fwd = t_fwd_comp + t_fwd_comm
+
+        t_bwd_comp = bwd_mult * t_fwd_comp
+        t_bwd_comp += t_rc
+        t_bwd = t_bwd_comp + t_fwd_comm
+
+        if s.overlap_p2p:
+            h *= 1.0 - _P2P_OVERLAP_EFFICIENCY
+
+        if s.overlap_grad_reduce and t_dp > 0:
+            if s.use_distributed_optimizer and not s.overlap_param_gather:
+                # ZeRO: only the grad reduce-scatter overlaps with backward;
+                # the param all-gather needs overlap_param_gather
+                overlappable = rs_sum
+            else:
+                overlappable = t_dp
+            hidden = min(_OVERLAP_EFFICIENCY * overlappable, t_bwd_comp)
+            t_dp = max(t_dp - hidden, 0.0)
+
+        if s.offload_optimizer:
+            t_off = opt_bytes / _PCIE_BW
+            t_opt += t_off * (0.3 if s.overlap_grad_reduce else 1.0)
+        return t_fwd, t_bwd, h, t_dp, t_opt
+
+    # -- batch evaluation ---------------------------------------------------
+    def simulate_batch(
+        self,
+        arch: ModelArch,
+        strategies: Sequence[ParallelStrategy],
+        *,
+        global_batch: int,
+        seq: int,
+    ) -> list[SimResult]:
+        """Evaluate a whole candidate list with one eta query per op shape.
+
+        Dedup tiers: per-layer censuses are memoized (costmodel), distinct
+        stages are built and dot-product-summed once per census key, timed
+        once per (census, overlap-toggles) key — all cached across calls —
+        and every unseen op descriptor of the chunk resolves through a
+        single vectorized eta-model query.
+        """
+        self._maybe_trim()
+        plans = [self._stage_plan(arch, s, seq) for s in strategies]
+
+        # build censuses only for stage keys with no cached raw sums
+        pending: dict = {}  # census_key -> census
+        pending_time: dict = {}  # time_key -> (census_key, strategy)
+        for s, plan in zip(strategies, plans):
+            for tkey, ckey, stage, dev, layers in plan:
+                if tkey in self._stage_time_cache or tkey in pending_time:
+                    continue
+                pending_time[tkey] = (ckey, s)
+                if ckey in self._raw_cache or ckey in pending:
+                    continue
+                pending[ckey] = build_stage_census_vec(
+                    arch, s, stage, seq=seq, device=dev, layers_in_stage=layers
+                )
+
+        if pending:
+            comp_ops: dict = {}
+            comm_ops: dict = {}
+            for c in pending.values():
+                comp_ops.update(dict.fromkeys(c.fwd_comp))
+                comp_ops.update(dict.fromkeys(c.recompute_comp))
+                comp_ops.update(dict.fromkeys(c.step_comp))
+                comm_ops.update(dict.fromkeys(c.fwd_comm))
+                comm_ops.update(dict.fromkeys(c.step_comm))
+                p2p = self._p2p_op(c)
+                if p2p is not None:
+                    comm_ops[p2p] = None
+            self._comp.resolve(list(comp_ops))
+            self._comm.resolve(list(comm_ops))
+            self._sum_pending(pending)
+
+        if pending_time:
+            for tkey, (ckey, s) in pending_time.items():
+                self._stage_time_cache[tkey] = self._finalize_stage(
+                    self._raw_cache[ckey], s
+                )
+
+        cache = self._stage_time_cache
+        return [
+            compose_sim_result(
+                s, [cache[tkey] for tkey, _, _, _, _ in plan],
+                global_batch=global_batch, seq=seq,
+            )
+            for s, plan in zip(strategies, plans)
+        ]
+
+    def simulate(
+        self, arch: ModelArch, s: ParallelStrategy, *, global_batch: int, seq: int
+    ) -> SimResult:
+        """Single-strategy convenience wrapper (same signature as scalar)."""
+        return self.simulate_batch(arch, [s], global_batch=global_batch, seq=seq)[0]
+
+    # -- streaming evaluation ----------------------------------------------
+    def evaluate_stream(
+        self,
+        arch: ModelArch,
+        strategies: Iterable[ParallelStrategy],
+        *,
+        global_batch: int,
+        seq: int,
+        train_tokens: float,
+        top_k: int,
+        chunk_size: int = 512,
+        keep_pool: bool = False,
+    ) -> tuple[list[CostedStrategy], list[CostedStrategy], int]:
+        """Chunked evaluation: returns (top-k ranked, Pareto pool, #evaluated).
+
+        Only ``top_k`` + pool-member ``CostedStrategy`` objects are retained,
+        regardless of how many candidates stream through.
+        """
+        topk = _TopK(top_k)
+        pool = _ParetoStaircase() if keep_pool else None
+        n = 0
+        for chunk in _chunks(strategies, chunk_size):
+            sims = self.simulate_batch(
+                arch, chunk, global_batch=global_batch, seq=seq
+            )
+            for s, sim in zip(chunk, sims):
+                costed = CostedStrategy(
+                    strategy=s,
+                    sim=sim,
+                    throughput=sim.throughput_tokens,
+                    money=money_cost(sim, train_tokens),
+                )
+                topk.push(costed)
+                if pool is not None:
+                    pool.push(costed)
+            n += len(chunk)
+        return topk.sorted(), pool.sorted() if pool is not None else [], n

@@ -43,6 +43,23 @@ class StageCensus:
     bwd_flops_multiplier: float = 2.0
 
 
+@dataclasses.dataclass
+class StageCensusVec:
+    """Count-vector form of :class:`StageCensus`: each section maps a unique
+    op descriptor to its multiplicity instead of replicating it ``layers``
+    times in a list. This is what lets the batched simulator evaluate a stage
+    as a dot-product of counts against a shared op-time table."""
+
+    device: str
+    fwd_comp: dict[ComputeOp, float] = dataclasses.field(default_factory=dict)
+    fwd_comm: dict[CommOp, float] = dataclasses.field(default_factory=dict)
+    recompute_comp: dict[ComputeOp, float] = dataclasses.field(default_factory=dict)
+    step_comp: dict[ComputeOp, float] = dataclasses.field(default_factory=dict)
+    step_comm: dict[CommOp, float] = dataclasses.field(default_factory=dict)
+    p2p_bytes: float = 0.0
+    bwd_flops_multiplier: float = 2.0
+
+
 def _attention_ops(
     arch: ModelArch, s: ParallelStrategy, dev: str, b: int, seq: int, causal: bool = True
 ) -> list[ComputeOp]:
@@ -183,6 +200,113 @@ def layer_fwd_ops(
     return comp, comm
 
 
+# ---------------------------------------------------------------------------
+# per-layer census cache
+# ---------------------------------------------------------------------------
+# layer_fwd_ops only reads these strategy fields (besides arch/device/
+# microbatch/seq), so one census serves every strategy sharing the key — in a
+# mode-1 search thousands of (dp, pp, recompute, overlap...) variants collapse
+# onto a few dozen distinct layer censuses.
+_LAYER_KEY_FIELDS = (
+    "tensor_parallel",
+    "expert_parallel",
+    "micro_batch_size",
+    "use_flash_attn",
+    "sequence_parallel",
+)
+_LAYER_CACHE: dict = {}
+_LAYER_CACHE_MAX = 4096
+
+
+def layer_census_key(arch: ModelArch, s: ParallelStrategy, dev: str, seq: int) -> tuple:
+    return (arch, dev, seq) + tuple(getattr(s, f) for f in _LAYER_KEY_FIELDS)
+
+
+def layer_fwd_ops_cached(
+    arch: ModelArch, s: ParallelStrategy, dev: str, seq: int
+) -> tuple[tuple[ComputeOp, ...], tuple[CommOp, ...]]:
+    """Memoized ``layer_fwd_ops`` (b is taken from ``s.micro_batch_size``)."""
+    key = layer_census_key(arch, s, dev, seq)
+    hit = _LAYER_CACHE.get(key)
+    if hit is None:
+        if len(_LAYER_CACHE) >= _LAYER_CACHE_MAX:
+            _LAYER_CACHE.clear()
+        comp, comm = layer_fwd_ops(arch, s, dev, s.micro_batch_size, seq)
+        hit = (tuple(comp), tuple(comm))
+        _LAYER_CACHE[key] = hit
+    return hit
+
+
+def _edge_stage_ops(
+    arch: ModelArch, s: ParallelStrategy, dev: str, stage: int, pp: int,
+    b: int, seq: int,
+) -> tuple[list[ComputeOp], list[CommOp]]:
+    """Embedding / LM-head extras on the first and last pipeline stages."""
+    comp: list[ComputeOp] = []
+    comm: list[CommOp] = []
+    if stage == 0:
+        elems = b * seq * arch.hidden
+        comp.append(
+            ComputeOp(kind="embedding", device=dev, m=elems, n=1, k=1,
+                      flops=float(elems), bytes_accessed=BF16 * 2.0 * elems)
+        )
+    if stage == pp - 1:
+        comp.append(
+            matmul_op(dev, b * seq, arch.vocab // s.tensor_parallel, arch.hidden)
+        )
+        if s.tensor_parallel > 1:
+            spec = get_device(dev)
+            comm.append(
+                CommOp("all_reduce", dev, s.tensor_parallel,
+                       float(4 * b * seq),  # softmax partials (fp32 scalars/token)
+                       s.tensor_parallel <= spec.devices_per_node)
+            )
+    return comp, comm
+
+
+def _step_ops(
+    arch: ModelArch, s: ParallelStrategy, dev: str, stage: int, layers: int, pp: int,
+) -> tuple[list[ComputeOp], list[CommOp]]:
+    """Once-per-step gradient reduction + optimizer update for one stage."""
+    comp: list[ComputeOp] = []
+    comm: list[CommOp] = []
+    params = stage_parameter_count(arch, s, stage, layers)
+    dp = s.data_parallel
+    spec = get_device(dev)
+    if dp > 1:
+        dp_intra = dp * s.tensor_parallel * pp <= spec.devices_per_node
+        if s.use_distributed_optimizer:
+            comm.append(
+                CommOp("reduce_scatter", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
+            )
+            comm.append(
+                CommOp("all_gather", dev, dp, params * BF16, dp_intra)
+            )
+        else:
+            comm.append(
+                CommOp("all_reduce", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
+            )
+    opt_params = params / dp if s.use_distributed_optimizer else params
+    comp.append(
+        ComputeOp(kind="elementwise", device=dev, m=int(opt_params), n=1, k=1,
+                  flops=10.0 * opt_params,
+                  bytes_accessed=(OPTIMIZER_BYTES_PER_PARAM + GRAD_BYTES_PER_PARAM + BF16)
+                  * opt_params)
+    )
+    return comp, comm
+
+
+def _stage_p2p_bytes(
+    arch: ModelArch, s: ParallelStrategy, stage: int, pp: int, b: int, seq: int
+) -> float:
+    if pp > 1 and stage < pp - 1:
+        payload = float(BF16 * b * seq * arch.hidden)
+        if s.sequence_parallel:
+            payload /= s.tensor_parallel
+        return payload
+    return 0.0
+
+
 def build_stage_census(
     arch: ModelArch,
     s: ParallelStrategy,
@@ -198,28 +322,15 @@ def build_stage_census(
     b = s.micro_batch_size
     census = StageCensus(device=dev)
 
-    lcomp, lcomm = layer_fwd_ops(arch, s, dev, b, seq)
+    lcomp, lcomm = layer_fwd_ops_cached(arch, s, dev, seq)
+    lcomp, lcomm = list(lcomp), list(lcomm)
     census.fwd_comp = lcomp * layers
     census.fwd_comm = lcomm * layers
 
     # embedding / LM head on the edge stages
-    if stage == 0:
-        elems = b * seq * arch.hidden
-        census.fwd_comp.append(
-            ComputeOp(kind="embedding", device=dev, m=elems, n=1, k=1,
-                      flops=float(elems), bytes_accessed=BF16 * 2.0 * elems)
-        )
-    if stage == pp - 1:
-        census.fwd_comp.append(
-            matmul_op(dev, b * seq, arch.vocab // s.tensor_parallel, arch.hidden)
-        )
-        if s.tensor_parallel > 1:
-            spec = get_device(dev)
-            census.fwd_comm.append(
-                CommOp("all_reduce", dev, s.tensor_parallel,
-                       float(4 * b * seq),  # softmax partials (fp32 scalars/token)
-                       s.tensor_parallel <= spec.devices_per_node)
-            )
+    edge_comp, edge_comm = _edge_stage_ops(arch, s, dev, stage, pp, b, seq)
+    census.fwd_comp += edge_comp
+    census.fwd_comm += edge_comm
 
     # recompute surcharge (re-runs part of fwd during bwd)
     if s.recompute_granularity == "full":
@@ -230,32 +341,107 @@ def build_stage_census(
         census.recompute_comp = core * layers
 
     # once-per-step: gradient reduction + optimizer
-    params = stage_parameter_count(arch, s, stage, layers)
-    dp = s.data_parallel
-    spec = get_device(dev)
-    if dp > 1:
-        dp_intra = dp * s.tensor_parallel * pp <= spec.devices_per_node
-        if s.use_distributed_optimizer:
-            census.step_comm.append(
-                CommOp("reduce_scatter", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
-            )
-            census.step_comm.append(
-                CommOp("all_gather", dev, dp, params * BF16, dp_intra)
-            )
-        else:
-            census.step_comm.append(
-                CommOp("all_reduce", dev, dp, params * GRAD_BYTES_PER_PARAM, dp_intra)
-            )
-    opt_params = params / dp if s.use_distributed_optimizer else params
-    census.step_comp.append(
-        ComputeOp(kind="elementwise", device=dev, m=int(opt_params), n=1, k=1,
-                  flops=10.0 * opt_params,
-                  bytes_accessed=(OPTIMIZER_BYTES_PER_PARAM + GRAD_BYTES_PER_PARAM + BF16)
-                  * opt_params)
+    census.step_comp, census.step_comm = _step_ops(arch, s, dev, stage, layers, pp)
+
+    census.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, seq)
+    return census
+
+
+def _counted(ops, mult: float = 1.0) -> dict:
+    out: dict = {}
+    for op in ops:
+        out[op] = out.get(op, 0.0) + mult
+    return out
+
+
+_LAYER_COUNTER_CACHE: dict = {}
+
+
+def layer_counters_cached(
+    arch: ModelArch, s: ParallelStrategy, dev: str, seq: int
+) -> tuple[dict, dict, dict]:
+    """(comp, comm, attn-core) per-layer op->count dicts, memoized."""
+    key = layer_census_key(arch, s, dev, seq)
+    hit = _LAYER_COUNTER_CACHE.get(key)
+    if hit is None:
+        if len(_LAYER_COUNTER_CACHE) >= _LAYER_CACHE_MAX:
+            _LAYER_COUNTER_CACHE.clear()
+        lcomp, lcomm = layer_fwd_ops_cached(arch, s, dev, seq)
+        hit = (
+            _counted(lcomp),
+            _counted(lcomm),
+            _counted([op for op in lcomp if op.kind in ("flash_attn", "attn")]),
+        )
+        _LAYER_COUNTER_CACHE[key] = hit
+    return hit
+
+
+_STEP_OPS_CACHE: dict = {}
+
+
+def step_ops_counted_cached(
+    arch: ModelArch, s: ParallelStrategy, dev: str, stage: int, layers: int, pp: int,
+) -> tuple[dict, dict]:
+    """Memoized op->count form of :func:`_step_ops` (stage enters only via
+    first/last position, see ``stage_parameter_count``)."""
+    key = (
+        arch, dev, layers, pp, s.tensor_parallel, s.expert_parallel,
+        s.data_parallel, s.use_distributed_optimizer,
+        stage == 0, stage == pp - 1,
+    )
+    hit = _STEP_OPS_CACHE.get(key)
+    if hit is None:
+        if len(_STEP_OPS_CACHE) >= _LAYER_CACHE_MAX:
+            _STEP_OPS_CACHE.clear()
+        comp, comm = _step_ops(arch, s, dev, stage, layers, pp)
+        hit = (_counted(comp), _counted(comm))
+        _STEP_OPS_CACHE[key] = hit
+    return hit
+
+
+def build_stage_census_vec(
+    arch: ModelArch,
+    s: ParallelStrategy,
+    stage: int,
+    *,
+    seq: int,
+    device: Optional[str] = None,
+    layers_in_stage: Optional[int] = None,
+) -> StageCensusVec:
+    """Count-vector twin of :func:`build_stage_census`.
+
+    The per-layer op census is computed once per distinct layer key (see
+    ``layer_census_key``) and scaled by the stage's layer count, so building
+    a census for strategy #4000 of a search costs a handful of dict updates
+    instead of ``O(ops_per_layer * layers)`` list work.
+    """
+    dev = device or s.device
+    pp = s.pipeline_parallel
+    layers = layers_in_stage if layers_in_stage is not None else arch.num_layers // pp
+    b = s.micro_batch_size
+
+    lcomp_cnt, lcomm_cnt, lcore_cnt = layer_counters_cached(arch, s, dev, seq)
+    layers_f = float(layers)
+    census = StageCensusVec(device=dev)
+    census.fwd_comp = {op: c * layers_f for op, c in lcomp_cnt.items()}
+    census.fwd_comm = {op: c * layers_f for op, c in lcomm_cnt.items()}
+
+    edge_comp, edge_comm = _edge_stage_ops(arch, s, dev, stage, pp, b, seq)
+    for op in edge_comp:
+        census.fwd_comp[op] = census.fwd_comp.get(op, 0.0) + 1.0
+    for op in edge_comm:
+        census.fwd_comm[op] = census.fwd_comm.get(op, 0.0) + 1.0
+
+    if s.recompute_granularity == "full":
+        n_rc = s.recompute_num_layers or layers
+        mult = float(min(n_rc, layers))
+        census.recompute_comp = {op: c * mult for op, c in lcomp_cnt.items()}
+    elif s.recompute_granularity == "selective" and not arch.is_attention_free:
+        census.recompute_comp = {op: c * layers_f for op, c in lcore_cnt.items()}
+
+    census.step_comp, census.step_comm = step_ops_counted_cached(
+        arch, s, dev, stage, layers, pp
     )
 
-    if pp > 1 and stage < pp - 1:
-        census.p2p_bytes = float(BF16 * b * seq * arch.hidden)
-        if s.sequence_parallel:
-            census.p2p_bytes /= s.tensor_parallel
+    census.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, seq)
     return census

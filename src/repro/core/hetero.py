@@ -187,8 +187,8 @@ def iter_hetero_strategies(
         if not arch.is_attention_free and arch.heads % tp != 0:
             continue
         for pp in pps:
-            if arch.num_layers % pp and not fast:
-                pass  # hetero stages need not divide evenly; Eq. 23 handles it
+            # NOTE: hetero stages need not divide num_layers evenly — Eq. 23's
+            # layer assignments handle ragged splits, so no pp filter here.
             max_dp = pool.total_devices // (tp * pp)
             dps = [d for d in (1, 2, 4, 8, 16, 32, 64, 128, 256) if d <= max_dp]
             for dp in dps:

@@ -27,7 +27,8 @@ class SearchCounts:
     gen_seconds: float = 0.0
 
 
-def _strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
+def strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
+    """$param environment the rule DSL evaluates against."""
     env = s.to_flat_dict()
     env.update(
         num_layers=arch.num_layers,
@@ -39,6 +40,9 @@ def _strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
         moe_router_topk=arch.top_k,
     )
     return env
+
+
+_strategy_env = strategy_env  # backwards-compat alias
 
 
 def iter_raw_strategies(
@@ -71,6 +75,39 @@ def iter_raw_strategies(
             )
 
 
+def iter_valid_strategies(
+    arch: ModelArch,
+    gpus: Sequence[GpuConfig],
+    global_batch: int,
+    seq: int,
+    *,
+    rules: Sequence[str] = DEFAULT_RULES,
+    space: Optional[dict[str, list]] = None,
+    counts: Optional[SearchCounts] = None,
+) -> Iterable[ParallelStrategy]:
+    """Streaming S_valid (Eq. 21): yields survivors of the full filter
+    funnel while mutating ``counts`` in place. The batched engine consumes
+    this lazily so mode-3's device-count sweep never holds the whole valid
+    set in memory; ``generate_strategies`` is the materializing wrapper."""
+    rule_filter = RuleFilter(rules)
+    mem_filter = MemoryFilter(seq=seq)
+    if counts is None:
+        counts = SearchCounts()
+    for gpu in gpus:
+        for s in iter_raw_strategies(arch, gpu, global_batch, space=space):
+            counts.generated += 1
+            if not s.is_divisible(arch, global_batch):
+                continue
+            counts.divisible += 1
+            if not rule_filter.is_valid(strategy_env(arch, s)):
+                continue
+            counts.after_rules += 1
+            if not mem_filter.is_valid(arch, s):
+                continue
+            counts.after_memory += 1
+            yield s
+
+
 def generate_strategies(
     arch: ModelArch,
     gpus: Sequence[GpuConfig],
@@ -82,22 +119,11 @@ def generate_strategies(
 ) -> tuple[list[ParallelStrategy], SearchCounts]:
     """S_valid (Eq. 21) plus the funnel counts."""
     t0 = time.perf_counter()
-    rule_filter = RuleFilter(rules)
-    mem_filter = MemoryFilter(seq=seq)
     counts = SearchCounts()
-    valid: list[ParallelStrategy] = []
-    for gpu in gpus:
-        for s in iter_raw_strategies(arch, gpu, global_batch, space=space):
-            counts.generated += 1
-            if not s.is_divisible(arch, global_batch):
-                continue
-            counts.divisible += 1
-            if not rule_filter.is_valid(_strategy_env(arch, s)):
-                continue
-            counts.after_rules += 1
-            if not mem_filter.is_valid(arch, s):
-                continue
-            counts.after_memory += 1
-            valid.append(s)
+    valid = list(
+        iter_valid_strategies(
+            arch, gpus, global_batch, seq, rules=rules, space=space, counts=counts
+        )
+    )
     counts.gen_seconds = time.perf_counter() - t0
     return valid, counts

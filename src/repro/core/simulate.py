@@ -111,7 +111,16 @@ class CostSimulator:
 
         t_dp = self._comm_times(census.step_comm)
         if s.overlap_grad_reduce and t_dp > 0:
-            hidden = _OVERLAP_EFFICIENCY * (t_dp if s.use_distributed_optimizer else t_dp)
+            if s.use_distributed_optimizer and not s.overlap_param_gather:
+                # ZeRO splits the step comm into grad reduce-scatter + param
+                # all-gather; overlap_grad_reduce only hides the RS half —
+                # the AG stays exposed until overlap_param_gather is on.
+                overlappable = self._comm_times(
+                    [op for op in census.step_comm if op.kind == "reduce_scatter"]
+                )
+            else:
+                overlappable = t_dp
+            hidden = _OVERLAP_EFFICIENCY * overlappable
             # overlap is bounded by available backward compute of one full pass
             hidden = min(hidden, t_bwd_comp)
             t_dp = max(t_dp - hidden, 0.0)
@@ -132,7 +141,6 @@ class CostSimulator:
         global_batch: int,
         seq: int,
     ) -> SimResult:
-        K = s.num_microbatches(global_batch)
         if s.hetero is not None:
             stages = s.hetero.stage_sequence()
             censuses = [
@@ -146,51 +154,72 @@ class CostSimulator:
             ]
 
         per_stage = [self.stage_times(c, s) for c in censuses]
-        t_i = [tf + tb for tf, tb, _, _, _ in per_stage]
-        h_i = [h for _, _, h, _, _ in per_stage]
-        dp_i = [dp for _, _, _, dp, _ in per_stage]
-        opt_i = [o for _, _, _, _, o in per_stage]
-
-        # Eq. 22 (fwd+bwd combined per microbatch). Interleaved virtual
-        # pipeline (Megatron's num-layers-per-virtual-pipeline-stage) shrinks
-        # the BUBBLE (ramp) by vp at the cost of vp-times the p2p traffic:
-        #   T = K * max_i(c_i) + (sum_i c_i - max_i c_i) / vp,
-        #   c_i = t_i + vp * h_i
-        # vp=1 recovers Eq. 22 exactly: sum_i c_i + (K-1) * max_i c_i.
-        # pp=1 (no pipeline) is vp-invariant: T = K * t, as it must be.
-        vp = max(s.virtual_pipeline_stages, 1)
-        stage_cost = [t + vp * h for t, h in zip(t_i, h_i)]
-        steady = max(stage_cost)
-        pipeline_time = K * steady + (sum(stage_cost) - steady) / vp
-        bubble_time = max(pipeline_time - K * steady, 0.0)
-
-        dp_exposed = max(dp_i)
-        opt_time = max(opt_i)
-        step_time = pipeline_time + dp_exposed + opt_time
-
-        money_per_hour = self._money_per_hour(s)
-        tokens = float(global_batch) * seq
-        return SimResult(
-            step_time=step_time,
-            throughput_samples=global_batch / step_time,
-            throughput_tokens=tokens / step_time,
-            pipeline_time=pipeline_time,
-            bubble_time=max(bubble_time, 0.0),
-            dp_exposed_time=dp_exposed,
-            optimizer_time=opt_time,
-            stage_times=t_i,
-            stage_p2p=h_i,
-            money_per_hour=money_per_hour,
-            money_per_step=money_per_hour / 3600.0 * step_time,
-        )
+        return compose_sim_result(s, per_stage, global_batch=global_batch, seq=seq)
 
     @staticmethod
     def _money_per_hour(s: ParallelStrategy) -> float:
-        """Eq. 32 rate: sum over device types of N_g * F_g."""
-        if s.hetero is not None:
-            per_stage_devices = s.data_parallel * s.tensor_parallel
-            return sum(
-                get_device(dev).price_per_hour * per_stage_devices
-                for dev, _ in s.hetero.stage_sequence()
-            )
-        return get_device(s.device).price_per_hour * s.num_devices
+        return strategy_money_per_hour(s)
+
+
+def strategy_money_per_hour(s: ParallelStrategy) -> float:
+    """Eq. 32 rate: sum over device types of N_g * F_g."""
+    if s.hetero is not None:
+        per_stage_devices = s.data_parallel * s.tensor_parallel
+        return sum(
+            get_device(dev).price_per_hour * per_stage_devices
+            for dev, _ in s.hetero.stage_sequence()
+        )
+    return get_device(s.device).price_per_hour * s.num_devices
+
+
+def compose_sim_result(
+    s: ParallelStrategy,
+    per_stage: Sequence[tuple[float, float, float, float, float]],
+    *,
+    global_batch: int,
+    seq: int,
+) -> SimResult:
+    """Eq. 22 schedule composition from per-stage (tf, tb, h, t_dp, t_opt).
+
+    Shared by the scalar :class:`CostSimulator` and the batched engine
+    (:mod:`repro.core.batch`) so the two paths agree bit-for-bit on the
+    pipeline algebra.
+    """
+    K = s.num_microbatches(global_batch)
+    t_i = [tf + tb for tf, tb, _, _, _ in per_stage]
+    h_i = [h for _, _, h, _, _ in per_stage]
+    dp_i = [dp for _, _, _, dp, _ in per_stage]
+    opt_i = [o for _, _, _, _, o in per_stage]
+
+    # Eq. 22 (fwd+bwd combined per microbatch). Interleaved virtual
+    # pipeline (Megatron's num-layers-per-virtual-pipeline-stage) shrinks
+    # the BUBBLE (ramp) by vp at the cost of vp-times the p2p traffic:
+    #   T = K * max_i(c_i) + (sum_i c_i - max_i c_i) / vp,
+    #   c_i = t_i + vp * h_i
+    # vp=1 recovers Eq. 22 exactly: sum_i c_i + (K-1) * max_i c_i.
+    # pp=1 (no pipeline) is vp-invariant: T = K * t, as it must be.
+    vp = max(s.virtual_pipeline_stages, 1)
+    stage_cost = [t + vp * h for t, h in zip(t_i, h_i)]
+    steady = max(stage_cost)
+    pipeline_time = K * steady + (sum(stage_cost) - steady) / vp
+    bubble_time = max(pipeline_time - K * steady, 0.0)
+
+    dp_exposed = max(dp_i)
+    opt_time = max(opt_i)
+    step_time = pipeline_time + dp_exposed + opt_time
+
+    money_per_hour = strategy_money_per_hour(s)
+    tokens = float(global_batch) * seq
+    return SimResult(
+        step_time=step_time,
+        throughput_samples=global_batch / step_time,
+        throughput_tokens=tokens / step_time,
+        pipeline_time=pipeline_time,
+        bubble_time=max(bubble_time, 0.0),
+        dp_exposed_time=dp_exposed,
+        optimizer_time=opt_time,
+        stage_times=t_i,
+        stage_p2p=h_i,
+        money_per_hour=money_per_hour,
+        money_per_step=money_per_hour / 3600.0 * step_time,
+    )

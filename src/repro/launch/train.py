@@ -80,7 +80,9 @@ def main(argv=None) -> dict:
         s = pick_strategy(arch, n_dev, args.batch, args.seq)
         if s is not None:
             remat = s.recompute_granularity if s.recompute_granularity != "selective" else "selective"
-            micro = max(s.num_microbatches(args.batch) // max(s.data_parallel, 1), 1)
+            # num_microbatches is already per-DP-rank (GB / (dp * mbs)); the
+            # train step splits the *global* batch K ways, so K is exactly it
+            micro = max(s.num_microbatches(args.batch), 1)
             print(f"[astra] strategy: tp={s.tensor_parallel} pp={s.pipeline_parallel} "
                   f"dp={s.data_parallel} mbs={s.micro_batch_size} remat={remat} "
                   f"dist_opt={s.use_distributed_optimizer}")

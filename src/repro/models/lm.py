@@ -445,6 +445,9 @@ def _encode(params, arch: ModelArch, cfg: ModelCfg, features):
     positions = jnp.arange(T)
 
     def body(carry, lp):
+        from repro.parallel.sharding import constrain_batch_sharding
+
+        carry = constrain_batch_sharding(carry)
         x_in = L.norm(carry, lp["ln1"], impl=cfg.norm_impl)
         qkv = x_in @ lp["attn"]["wqkv"]
         q, k, v = jnp.split(qkv, [H * D, (H + Hkv) * D], axis=-1)
@@ -493,6 +496,9 @@ def forward_logits(params, arch: ModelArch, cfg: ModelCfg, batch: dict):
         xs_cache = None
 
     def body(carry, xs):
+        from repro.parallel.sharding import constrain_batch_sharding
+
+        carry = constrain_batch_sharding(carry)
         lp, cc = xs
         if cc is not None:  # encdec: cross-attend to the encoder K/V
             hh, _ = _encdec_train_layer(arch, cfg, lp, carry, positions, cc, window)

@@ -1,0 +1,245 @@
+"""Batched evaluation engine: parity with the scalar reference simulator,
+streaming top-k / Pareto equivalence, and the ZeRO overlap-discount fix."""
+import dataclasses
+
+import pytest
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import Astra, CostSimulator, GpuConfig, HeteroPool, ParallelStrategy
+from repro.core.batch import BatchedCostSimulator, _ParetoStaircase, _TopK
+from repro.core.hetero import iter_hetero_strategies
+from repro.core.memory import MemoryFilter
+from repro.core.pareto import CostedStrategy, money_cost, optimal_pool, sort_strategies
+from repro.core.search import generate_strategies
+
+GB, SEQ = 512, 2048
+REL = 1e-9
+
+
+def _parity(arch, strategies, global_batch=GB, seq=SEQ):
+    scalar = CostSimulator(AnalyticEtaModel())
+    batched = BatchedCostSimulator(AnalyticEtaModel())
+    r_b = batched.simulate_batch(arch, strategies, global_batch=global_batch, seq=seq)
+    for s, rb in zip(strategies, r_b):
+        ra = scalar.simulate(arch, s, global_batch=global_batch, seq=seq)
+        assert rb.step_time == pytest.approx(ra.step_time, rel=REL), s
+        assert rb.pipeline_time == pytest.approx(ra.pipeline_time, rel=REL), s
+        assert rb.dp_exposed_time == pytest.approx(ra.dp_exposed_time, rel=REL, abs=1e-12), s
+        assert rb.optimizer_time == pytest.approx(ra.optimizer_time, rel=REL), s
+        assert rb.money_per_hour == pytest.approx(ra.money_per_hour, rel=REL), s
+        assert len(rb.stage_times) == len(ra.stage_times)
+        for a, b in zip(ra.stage_times, rb.stage_times):
+            assert b == pytest.approx(a, rel=REL)
+        for a, b in zip(ra.stage_p2p, rb.stage_p2p):
+            assert b == pytest.approx(a, rel=REL, abs=1e-15)
+
+
+def test_batched_matches_scalar_homogeneous_grid(llama7b):
+    """Full funnel output for a mode-1 search cell: every strategy's step
+    time must match the scalar reference to 1e-9 relative."""
+    strategies, _ = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], GB, SEQ
+    )
+    assert len(strategies) > 100
+    _parity(llama7b, strategies[::7])  # sampled grid, keeps the test fast
+
+
+def test_batched_matches_scalar_toggle_corners(llama7b):
+    """Hand-picked corners: recompute, offload, ZeRO, overlap, vp, sp."""
+    base = dict(device="A800", num_devices=64, tensor_parallel=2,
+                pipeline_parallel=4, micro_batch_size=2)
+    corners = [
+        ParallelStrategy(**base),
+        ParallelStrategy(**base, recompute_granularity="full", recompute_num_layers=4),
+        ParallelStrategy(**base, recompute_granularity="selective"),
+        ParallelStrategy(**base, use_distributed_optimizer=True,
+                         overlap_grad_reduce=True),
+        ParallelStrategy(**base, use_distributed_optimizer=True,
+                         overlap_grad_reduce=True, overlap_param_gather=True),
+        ParallelStrategy(**base, offload_optimizer=True),
+        ParallelStrategy(**base, offload_optimizer=True, overlap_grad_reduce=True),
+        ParallelStrategy(**base, sequence_parallel=True, tp_comm_overlap=True),
+        ParallelStrategy(**base, virtual_pipeline_stages=2, overlap_p2p=False),
+    ]
+    _parity(llama7b, corners)
+
+
+def test_batched_matches_scalar_mixed_device_types(llama7b):
+    """Regression: one simulator instance across device types (the mode-3
+    sweep) — cache keys must not collide between A800 and H100 strategies."""
+    base = dict(num_devices=64, tensor_parallel=2, pipeline_parallel=2,
+                micro_batch_size=1)
+    strategies = [
+        ParallelStrategy(device="A800", **base),
+        ParallelStrategy(device="H100", **base),
+        ParallelStrategy(device="A800", **base, sequence_parallel=True),
+        ParallelStrategy(device="H100", **base, sequence_parallel=True),
+    ]
+    _parity(llama7b, strategies)
+    # and through the streaming mode-3 facade: H100 must out-simulate A800
+    batched = BatchedCostSimulator(AnalyticEtaModel())
+    r = batched.simulate_batch(llama7b, strategies[:2], global_batch=GB, seq=SEQ)
+    assert r[1].step_time < r[0].step_time
+
+
+def test_batched_matches_scalar_hetero(llama7b):
+    pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
+    mem = MemoryFilter(seq=SEQ)
+    strategies = [
+        s for s in iter_hetero_strategies(llama7b, pool, 128, fast=True)
+        if mem.is_valid(llama7b, s)
+    ]
+    assert strategies, "hetero generator produced no memory-valid candidates"
+    _parity(llama7b, strategies[:40], global_batch=128)
+
+
+def test_streaming_topk_and_pool_match_batch_path(llama7b):
+    strategies, _ = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], GB, SEQ
+    )
+    strategies = strategies[::5]
+    train_tokens = 1e9
+
+    batched = BatchedCostSimulator(AnalyticEtaModel())
+    sims = batched.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    costed = [
+        CostedStrategy(strategy=s, sim=r, throughput=r.throughput_tokens,
+                       money=money_cost(r, train_tokens))
+        for s, r in zip(strategies, sims)
+    ]
+    ref_top = sort_strategies(costed)[:5]
+    ref_pool = optimal_pool(costed)
+
+    streaming = BatchedCostSimulator(AnalyticEtaModel())
+    top, pool, n = streaming.evaluate_stream(
+        llama7b, iter(strategies), global_batch=GB, seq=SEQ,
+        train_tokens=train_tokens, top_k=5, chunk_size=64, keep_pool=True,
+    )
+    assert n == len(strategies)
+    assert [(c.throughput, c.money) for c in top] == \
+        [(c.throughput, c.money) for c in ref_top]
+    assert [(c.throughput, c.money) for c in pool] == \
+        [(c.throughput, c.money) for c in ref_pool]
+
+
+def test_pareto_staircase_matches_optimal_pool(rng):
+    """Randomized incremental-vs-batch Pareto equivalence, with ties."""
+    def costed(p, c):
+        return CostedStrategy(strategy=None, sim=None, throughput=p, money=c)
+
+    for trial in range(25):
+        pts = [
+            costed(float(rng.integers(1, 12)), float(rng.integers(1, 12)))
+            for _ in range(int(rng.integers(1, 40)))
+        ]
+        stair = _ParetoStaircase()
+        for p in pts:
+            stair.push(p)
+        got = [(c.throughput, c.money) for c in stair.sorted()]
+        want = [(c.throughput, c.money) for c in optimal_pool(pts)]
+        assert got == want, (trial, pts)
+
+
+def test_topk_matches_full_sort(rng):
+    def costed(p, c):
+        return CostedStrategy(strategy=None, sim=None, throughput=p, money=c)
+
+    pts = [costed(float(rng.random()), float(rng.random())) for _ in range(200)]
+    topk = _TopK(7)
+    for p in pts:
+        topk.push(p)
+    got = [(c.throughput, c.money) for c in topk.sorted()]
+    want = [(c.throughput, c.money) for c in sort_strategies(pts)[:7]]
+    assert got == want
+
+
+def test_zero_overlap_discount_differentiated(llama7b):
+    """Regression for the dead conditional in stage_times: with ZeRO, the
+    exposed gradient-communication time must depend on overlap_param_gather
+    (only the reduce-scatter half overlaps without it)."""
+    # small DP group + fat microbatch so the overlap is not clamped by the
+    # available backward compute (hidden < t_bwd_comp)
+    base = dict(device="A800", num_devices=8, tensor_parallel=2,
+                pipeline_parallel=1, micro_batch_size=4,
+                use_distributed_optimizer=True, overlap_grad_reduce=True)
+    s_rs_only = ParallelStrategy(**base)
+    s_both = ParallelStrategy(**base, overlap_param_gather=True)
+    for sim in (CostSimulator(AnalyticEtaModel()),
+                BatchedCostSimulator(AnalyticEtaModel())):
+        r_rs = sim.simulate(llama7b, s_rs_only, global_batch=GB, seq=SEQ)
+        r_both = sim.simulate(llama7b, s_both, global_batch=GB, seq=SEQ)
+        assert r_both.dp_exposed_time < r_rs.dp_exposed_time, type(sim).__name__
+
+
+def test_astra_batched_and_scalar_agree_end_to_end(llama7b):
+    space = {
+        "tensor_parallel": [2, 4],
+        "pipeline_parallel": [2, 4],
+        "micro_batch_size": [1, 2],
+        "use_distributed_optimizer": [True],
+        "recompute_granularity": ["none", "full"],
+    }
+    fast = Astra(AnalyticEtaModel(), use_batched=True)
+    ref = Astra(AnalyticEtaModel(), use_batched=False)
+    kw = dict(global_batch=GB, seq=SEQ, space=space)
+    r_fast = fast.search_homogeneous(llama7b, "A800", 64, **kw)
+    r_ref = ref.search_homogeneous(llama7b, "A800", 64, **kw)
+    assert r_fast.best == r_ref.best
+    assert r_fast.best_sim.step_time == pytest.approx(
+        r_ref.best_sim.step_time, rel=REL
+    )
+    assert [c.strategy for c in r_fast.top] == [c.strategy for c in r_ref.top]
+
+
+def test_cache_trim_across_batches(llama7b, monkeypatch):
+    """Regression: overflowing the stage caches between batches must trim
+    cleanly — a mid-batch clear used to drop keys the batch still needed."""
+    import repro.core.batch as batch_mod
+
+    monkeypatch.setattr(batch_mod, "_STAGE_CACHE_MAX", 4)
+    strategies, _ = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], GB, SEQ
+    )
+    strategies = strategies[:60]
+    sim = BatchedCostSimulator(AnalyticEtaModel())
+    ref = BatchedCostSimulator(AnalyticEtaModel())
+    expect = ref.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    # many small batches against the same simulator force repeated trims
+    got = []
+    for i in range(0, len(strategies), 7):
+        got.extend(
+            sim.simulate_batch(
+                llama7b, strategies[i:i + 7], global_batch=GB, seq=SEQ
+            )
+        )
+    for a, b in zip(expect, got):
+        assert b.step_time == pytest.approx(a.step_time, rel=REL)
+
+
+def test_mode2_counts_are_honest(llama7b):
+    astra = Astra(AnalyticEtaModel())
+    pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
+    rep = astra.search_heterogeneous(llama7b, pool, global_batch=128, seq=SEQ)
+    c = rep.counts
+    assert c.generated == c.divisible  # divisible by construction
+    assert c.generated >= c.after_rules >= c.after_memory > 0
+    assert rep.best is not None
+
+
+def test_mode3_streaming_pool_and_budget(llama7b):
+    astra = Astra(AnalyticEtaModel())
+    rep = astra.search_cost(
+        llama7b, ["A800", "H100"], 64, global_batch=GB, seq=SEQ,
+        money_limit=None, top_k=3,
+    )
+    assert rep.best is not None
+    assert rep.pool, "mode-3 must return a non-empty Pareto pool"
+    # pool is non-dominated and sorted by throughput desc
+    thr = [c.throughput for c in rep.pool]
+    assert thr == sorted(thr, reverse=True)
+    for a in rep.pool:
+        assert not any(
+            b.throughput > a.throughput and b.money < a.money for b in rep.pool
+        )
+    # the unlimited-budget pick is the throughput argmax of the pool
+    assert rep.best_sim.throughput_tokens == pytest.approx(max(thr))

@@ -67,8 +67,9 @@ def test_elastic_restore_with_shardings(tmp_path):
     the elastic-restart path; on a pod the same call re-shards to a new mesh."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     mgr = CheckpointManager(str(tmp_path))
     s = _state()
     mgr.save(3, s, blocking=True)

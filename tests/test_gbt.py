@@ -1,6 +1,8 @@
 """GBT library (the XGBoost stand-in) + calibration accuracy."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.gbt import GradientBoostedTrees, RegressionTree

@@ -79,8 +79,8 @@ def test_act_shard_constraints_are_noop_numerically(setup):
     """with_sharding_constraint changes layout, never values — on a 1-device
     mesh the constrained forward must match exactly."""
     arch, params, toks, full = setup
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = dataclasses.replace(
         CFG, act_shard={"batch": ("data",), "model": "model"}
     )

@@ -1,5 +1,7 @@
 """Rule DSL (paper §3.3 Eq. 10-19): parsing, precedence, evaluation."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.rules import DEFAULT_RULES, Rule, RuleFilter, RuleSyntaxError, tokenize
