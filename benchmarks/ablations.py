@@ -11,19 +11,22 @@ import dataclasses
 
 from benchmarks.common import truth_simulator
 from repro.configs import PAPER_MODELS
-from repro.core import Astra
+from repro.core import Astra, FixedPool, SearchSpec, Workload
 from repro.core.params import default_parameter_space
 from repro.hw.catalog import get_device
 
 
-def _search(astra, arch, n, *, space_patch=None, **kw):
-    spec = get_device("A800")
-    space = default_parameter_space(arch, n, spec.devices_per_node, 512)
+def _search(astra, arch, n, *, space_patch=None):
+    dev = get_device("A800")
+    space = default_parameter_space(arch, n, dev.devices_per_node, 512)
     if space_patch:
         space.update(space_patch)
-    return astra.search_homogeneous(
-        arch, "A800", n, global_batch=512, seq=4096, space=space, **kw
-    )
+    return astra.search(SearchSpec(
+        arch=arch,
+        pool=FixedPool("A800", n),
+        workload=Workload(global_batch=512, seq=4096),
+        space=space,
+    ))
 
 
 def run(eta) -> list[dict]:

@@ -17,7 +17,15 @@ from typing import Optional
 
 from repro.calibration.fit import load_or_train
 from repro.calibration.truth import GroundTruth
-from repro.core import Astra, CostSimulator, ModelArch, ParallelStrategy
+from repro.core import (
+    Astra,
+    CostSimulator,
+    FixedPool,
+    ModelArch,
+    ParallelStrategy,
+    SearchSpec,
+    Workload,
+)
 from repro.core.memory import MemoryFilter
 
 
@@ -129,9 +137,11 @@ def astra_throughput_on_truth(
     global_batch: int, seq: int, sim: Optional[CostSimulator] = None,
 ):
     """Search with the GBT model; score the winner on the ground truth."""
-    report = astra.search_homogeneous(
-        arch, device, num_devices, global_batch=global_batch, seq=seq
-    )
+    report = astra.search(SearchSpec(
+        arch=arch,
+        pool=FixedPool(device, num_devices),
+        workload=Workload(global_batch, seq),
+    ))
     sim = sim or truth_simulator()
     if report.best is None:
         return report, 0.0

@@ -12,7 +12,14 @@ import time
 
 from benchmarks.common import truth_simulator
 from repro.configs import PAPER_MODELS
-from repro.core import Astra, HeteroPool, ParallelStrategy
+from repro.core import (
+    Astra,
+    HeteroCaps,
+    HeteroPool,
+    ParallelStrategy,
+    SearchSpec,
+    Workload,
+)
 from repro.core.memory import MemoryFilter
 from repro.core.params import HeteroPlacement
 from repro.hw.catalog import get_device
@@ -65,9 +72,11 @@ def run(eta) -> list[dict]:
             pool = HeteroPool(total_devices=n,
                               type_caps=(("A800", n // 2), ("H100", n // 2)))
             t0 = time.perf_counter()
-            rep = astra.search_heterogeneous(
-                arch, pool, global_batch=512, seq=4096, fast=True
-            )
+            rep = astra.search(SearchSpec(
+                arch=arch,
+                pool=HeteroCaps.of(pool, fast=True),
+                workload=Workload(global_batch=512, seq=4096),
+            ))
             e2e = time.perf_counter() - t0
             astra_tput = 0.0
             if rep.best is not None:

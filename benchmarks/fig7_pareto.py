@@ -2,16 +2,18 @@
 from __future__ import annotations
 
 from repro.configs import PAPER_MODELS
-from repro.core import Astra
+from repro.core import Astra, DeviceSweep, ObjectiveSpec, SearchSpec, Workload
 
 
 def run(eta) -> list[dict]:
     astra = Astra(eta)
     arch = PAPER_MODELS["llama2-7b"]
-    rep = astra.search_cost(
-        arch, ["H100", "A800"], 1024, global_batch=512, seq=4096,
-        money_limit=None, train_tokens=1e9,
-    )
+    rep = astra.search(SearchSpec(
+        arch=arch,
+        pool=DeviceSweep(devices=("H100", "A800"), max_devices=1024),
+        workload=Workload(global_batch=512, seq=4096, train_tokens=1e9),
+        objective=ObjectiveSpec.pareto(budget=None),
+    ))
     rows = []
     for c in rep.pool:
         rows.append({

@@ -16,7 +16,7 @@ from __future__ import annotations
 import time
 
 from repro.configs import PAPER_MODELS
-from repro.core import Astra, CostSimulator
+from repro.core import Astra, CostSimulator, FixedPool, SearchSpec, Workload
 from repro.core.batch import BatchedCostSimulator
 from repro.core.params import GpuConfig
 from repro.core.search import generate_strategies
@@ -85,9 +85,11 @@ def run(eta) -> list[dict]:
         arch = PAPER_MODELS[model]
         for n in SETTINGS:
             t0 = time.perf_counter()
-            rep = astra.search_homogeneous(
-                arch, "A800", n, global_batch=1024, seq=4096
-            )
+            rep = astra.search(SearchSpec(
+                arch=arch,
+                pool=FixedPool("A800", n),
+                workload=Workload(global_batch=1024, seq=4096),
+            ))
             e2e = time.perf_counter() - t0
             rows.append({
                 "bench": "table1",

@@ -8,7 +8,14 @@ from __future__ import annotations
 
 from benchmarks.common import truth_simulator
 from repro.configs import PAPER_MODELS
-from repro.core import Astra, HeteroPool
+from repro.core import (
+    Astra,
+    FixedPool,
+    HeteroCaps,
+    HeteroPool,
+    SearchSpec,
+    Workload,
+)
 
 MODELS = ["llama2-7b", "llama2-13b", "llama2-70b", "llama3-8b", "glm-67b"]
 N = 1024
@@ -21,13 +28,17 @@ def run(eta) -> list[dict]:
     for model in MODELS:
         arch = PAPER_MODELS[model]
         row = {"bench": "table2", "model": model, "gpus": N}
+        workload = Workload(global_batch=1024, seq=4096)
         for dev in ("H100", "H800", "A800"):
-            rep = astra.search_homogeneous(arch, dev, N, global_batch=1024, seq=4096)
+            rep = astra.search(SearchSpec(
+                arch=arch, pool=FixedPool(dev, N), workload=workload,
+            ))
             t = sim.simulate(arch, rep.best, global_batch=1024, seq=4096)
             row[dev] = round(t.throughput_tokens, 0)
         pool = HeteroPool(total_devices=N, type_caps=(("A800", N // 2), ("H100", N // 2)))
-        hrep = astra.search_heterogeneous(arch, pool, global_batch=1024, seq=4096,
-                                          fast=True)
+        hrep = astra.search(SearchSpec(
+            arch=arch, pool=HeteroCaps.of(pool, fast=True), workload=workload,
+        ))
         if hrep.best is not None:
             row["heter"] = round(
                 sim.simulate(arch, hrep.best, global_batch=1024, seq=4096)

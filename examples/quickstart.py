@@ -1,6 +1,11 @@
-"""Quickstart: the paper's three search modes in one minute.
+"""Quickstart: one declarative SearchSpec pipeline, three pool shapes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Every Astra search is a ``SearchSpec``: the model arch, a GPU pool (one of
+three shapes — this is what used to be the "three modes"), the workload,
+and an objective. Specs are plain data and round-trip through JSON, so the
+exact same search can be shipped to a service and replayed.
 """
 import os
 import sys
@@ -8,7 +13,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.calibration.fit import load_or_train
-from repro.core import Astra, HeteroPool, ModelArch
+from repro.core import (
+    Astra,
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    ModelArch,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
 
 # a model architecture (Eq. 5-6) — here llama2-7b, or build your own
 llama7b = ModelArch(name="llama2-7b", family="dense", num_layers=32,
@@ -18,11 +32,16 @@ eta, report = load_or_train()  # the XGBoost-style eta cost model (cached)
 if report:
     print(f"calibrated eta model: {report}")
 astra = Astra(eta)
+workload = Workload(global_batch=512, seq=4096, train_tokens=1e9)
 
-# ---- mode 1: homogeneous — fixed device type and count --------------------
-rep = astra.search_homogeneous(llama7b, "A800", 64, global_batch=512, seq=4096)
+# ---- fixed pool (the old mode 1): one device type at a fixed count --------
+rep = astra.search(SearchSpec(
+    arch=llama7b,
+    pool=FixedPool("A800", 64),
+    workload=workload,
+))
 b = rep.best
-print(f"\n[mode 1] A800 x64: searched {rep.counts.generated} strategies "
+print(f"\n[fixed pool] A800 x64: searched {rep.counts.generated} strategies "
       f"({rep.counts.after_memory} feasible) in {rep.e2e_seconds:.2f}s")
 print(f"  best: tp={b.tensor_parallel} pp={b.pipeline_parallel} dp={b.data_parallel} "
       f"mbs={b.micro_batch_size} sp={b.sequence_parallel} "
@@ -30,24 +49,46 @@ print(f"  best: tp={b.tensor_parallel} pp={b.pipeline_parallel} dp={b.data_paral
 print(f"  simulated: {rep.best_sim.throughput_tokens:,.0f} tokens/s, "
       f"step {rep.best_sim.step_time:.2f}s")
 
-# ---- mode 2: heterogeneous — mixed A800 + H100 cluster ---------------------
-pool = HeteroPool(total_devices=64, type_caps=(("A800", 32), ("H100", 32)))
-rep2 = astra.search_heterogeneous(llama7b, pool, global_batch=512, seq=4096)
+# ---- hetero caps (the old mode 2): mixed A800 + H100 cluster --------------
+rep2 = astra.search(SearchSpec(
+    arch=llama7b,
+    pool=HeteroCaps(total_devices=64, type_caps=(("A800", 32), ("H100", 32))),
+    workload=workload,
+))
 b2, pl = rep2.best, rep2.best.hetero
-print(f"\n[mode 2] A800+H100 x64: {rep2.counts.generated} placements in "
+print(f"\n[hetero caps] A800+H100 x64: {rep2.counts.generated} placements in "
       f"{rep2.e2e_seconds:.2f}s")
 print(f"  best: tp={b2.tensor_parallel} pp={b2.pipeline_parallel} "
       f"stages={list(zip(pl.devices, pl.stages_per_type, pl.layers_per_stage))}")
 print(f"  simulated: {rep2.best_sim.throughput_tokens:,.0f} tokens/s")
 
-# ---- mode 3: cost — best plan under a money limit ---------------------------
-rep3 = astra.search_cost(llama7b, ["H100", "A800"], 512, global_batch=512,
-                         seq=4096, money_limit=80.0, train_tokens=1e9)
-print(f"\n[mode 3] <=512 GPUs, $80 budget for 1B tokens: pareto pool size "
-      f"{len(rep3.pool)}")
+# ---- device sweep + pareto objective (the old mode 3): money limit --------
+spec3 = SearchSpec(
+    arch=llama7b,
+    pool=DeviceSweep(devices=("H100", "A800"), max_devices=512),
+    workload=workload,
+    objective=ObjectiveSpec.pareto(budget=80.0),
+)
+# specs serialize — ship this search to a service and replay it verbatim:
+spec3 = SearchSpec.from_json(spec3.to_json())
+rep3 = astra.search(spec3)
+print(f"\n[sweep+pareto] <=512 GPUs, $80 budget for 1B tokens: pareto pool "
+      f"size {len(rep3.pool)}")
 for c in rep3.pool[:5]:
     print(f"  {c.strategy.device} x{c.strategy.num_devices}: "
           f"{c.throughput:,.0f} tok/s, ${c.money:.2f}")
 b3 = rep3.best
 print(f"  picked: {b3.device} x{b3.num_devices} "
       f"(tp={b3.tensor_parallel}, pp={b3.pipeline_parallel})")
+
+# ---- new objective for free: cheapest plan that still trains the budget ---
+cheap = astra.search(SearchSpec(
+    arch=llama7b,
+    pool=DeviceSweep(devices=("H100", "A800"), max_devices=512),
+    workload=workload,
+    objective=ObjectiveSpec.money(),
+))
+cb = cheap.best
+print(f"\n[sweep+money] cheapest plan: {cb.device} x{cb.num_devices} at "
+      f"${cheap.top[0].money:.2f} per 1B tokens "
+      f"({cheap.top[0].throughput:,.0f} tok/s)")

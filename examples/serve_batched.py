@@ -1,6 +1,12 @@
 """Batched serving demo: prefill + decode over the ServeEngine.
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen3-8b --tokens 24
+
+With ``--search-spec spec.json`` the server first replays a serialized
+:class:`repro.core.SearchSpec` (e.g. produced by ``SearchSpec.to_json`` on
+a control plane) through ``Astra.search`` and reports the strategy it would
+deploy — the JSON spec is the wire format between the search service and
+the serving fleet.
 """
 import argparse
 import os
@@ -18,6 +24,17 @@ from repro.models import lm
 from repro.serve import ServeEngine
 
 
+def pick_strategy_from_spec(path: str):
+    """Replay a serialized SearchSpec and return its search report."""
+    from repro.calibration.fit import load_or_train
+    from repro.core import Astra, SearchSpec
+
+    with open(path) as f:
+        spec = SearchSpec.from_json(f.read())
+    eta, _ = load_or_train()
+    return spec, Astra(eta).search(spec)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -25,7 +42,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--search-spec", default=None, metavar="SPEC_JSON",
+                    help="replay a serialized SearchSpec and report the "
+                         "strategy this deployment would use")
     args = ap.parse_args()
+
+    if args.search_spec:
+        spec, report = pick_strategy_from_spec(args.search_spec)
+        b = report.best
+        if b is None:
+            print(f"search spec {args.search_spec}: no feasible strategy")
+        else:
+            print(f"search spec {args.search_spec} ({report.mode}): "
+                  f"{b.device} x{b.num_devices} tp={b.tensor_parallel} "
+                  f"pp={b.pipeline_parallel} dp={b.data_parallel} -> "
+                  f"{report.best_sim.throughput_tokens:,.0f} tok/s simulated")
 
     arch = get_reduced(args.arch)
     cfg = lm.ModelCfg(dtype=jnp.float32, attn_impl="xla", ssm_impl="xla")

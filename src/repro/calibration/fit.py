@@ -24,10 +24,17 @@ import numpy as np
 from repro.core.opspec import (
     COMM_KINDS,
     COMPUTE_KINDS,
+    INTER_BW,
+    INTRA_BW,
+    MACHINE_BALANCE,
+    MEM_BW,
+    PEAK_FLOPS,
     CommOp,
     ComputeOp,
     featurize_comm,
     featurize_compute,
+    gather_attr,
+    gather_device_ids,
 )
 from repro.gbt import GradientBoostedTrees
 from repro.calibration.truth import GroundTruth
@@ -37,10 +44,45 @@ from repro.hw.topology import collective_bytes_on_wire
 _BASE_OVERHEAD_S = 3e-6  # analytic-prior launch overhead guess
 _BASE_COMM_LAT_S = 6e-6  # analytic-prior per-hop latency guess
 
+_MM_KINDS = frozenset({"matmul", "flash_attn", "attn"})
+
+# ring-collective bytes-on-wire multiplier of (g-1)/g by comm kind, mirroring
+# repro.hw.topology.collective_bytes_on_wire; full-payload kinds carry -1.
+# Kinds outside both tables fall back to the scalar reference below, so the
+# two implementations can never diverge on a new collective.
+_WIRE_GFRAC = {"all_reduce": 2.0, "all_gather": 1.0, "reduce_scatter": 1.0,
+               "all_to_all": 1.0}
+_WIRE_FULL = frozenset({"p2p", "send_recv", "collective_permute", "broadcast"})
+
+
+def _wire_bytes(ops: Sequence[CommOp]) -> np.ndarray:
+    """Vectorized :func:`collective_bytes_on_wire` over a CommOp array."""
+    if any(op.kind not in _WIRE_GFRAC and op.kind not in _WIRE_FULL
+           for op in ops):
+        # rare/new kind: defer entirely to the scalar reference
+        return np.array([
+            collective_bytes_on_wire(op.kind, op.group, op.payload_bytes)
+            for op in ops
+        ])
+    g = gather_attr(ops, "group")
+    payload = gather_attr(ops, "payload_bytes")
+    factor = np.fromiter(
+        (_WIRE_GFRAC.get(op.kind, -1.0) for op in ops),
+        dtype=np.float64, count=len(ops),
+    )
+    frac = np.where(factor > 0, factor * (g - 1.0) / np.maximum(g, 1.0), 1.0)
+    return np.where(g <= 1, 0.0, frac * payload)
+
 
 class AnalyticEtaModel:
     """Closed-form prior. Usable standalone (uncalibrated fallback) and as
-    the baseline the GBT residual is boosted from."""
+    the baseline the GBT residual is boosted from.
+
+    ``compute_times`` / ``comm_times`` are the vectorized batch entry points
+    the simulators use (one NumPy pass over op arrays instead of a Python
+    loop); the scalar ``compute_time`` / ``comm_time`` remain the reference
+    definitions and the two agree exactly (tests/test_eta_vectorized.py).
+    """
 
     def compute_time(self, op: ComputeOp) -> float:
         dev = DEVICES[op.device]
@@ -61,23 +103,60 @@ class AnalyticEtaModel:
         eta = 0.8 * op.payload_bytes / (op.payload_bytes + half)
         return wire / (bw * max(eta, 1e-9)) + _BASE_COMM_LAT_S * max(op.group - 1, 1)
 
+    # -- vectorized batch predictions --------------------------------------
+    def compute_times(self, ops: Sequence[ComputeOp]) -> np.ndarray:
+        """One vectorized pass over op arrays; == [compute_time(op)] exactly
+        (same IEEE operations in the same order)."""
+        if not len(ops):
+            return np.zeros(0)
+        dev = gather_device_ids(ops)
+        is_mm = np.fromiter((op.kind in _MM_KINDS for op in ops), dtype=bool,
+                            count=len(ops))
+        flops = gather_attr(ops, "flops")
+        nbytes = gather_attr(ops, "bytes_accessed")
+        ai = flops / np.maximum(nbytes, 1.0)
+        eta = 0.75 * np.minimum(1.0, ai / MACHINE_BALANCE[dev])
+        t_mm = flops / (PEAK_FLOPS[dev] * np.maximum(eta, 1e-9))
+        t_mem = nbytes / (MEM_BW[dev] * 0.8)
+        return np.where(is_mm, t_mm, t_mem) + _BASE_OVERHEAD_S
+
+    def comm_times(self, ops: Sequence[CommOp]) -> np.ndarray:
+        if not len(ops):
+            return np.zeros(0)
+        dev = gather_device_ids(ops)
+        intra = np.fromiter((op.intra_node for op in ops), dtype=bool,
+                            count=len(ops))
+        g = gather_attr(ops, "group")
+        payload = gather_attr(ops, "payload_bytes")
+        wire = _wire_bytes(ops)
+        bw = np.where(intra, INTRA_BW[dev], INTER_BW[dev])
+        half = np.where(intra, float(1 << 20), float(8 << 20))
+        eta = 0.8 * payload / (payload + half)
+        t = wire / (bw * np.maximum(eta, 1e-9)) + _BASE_COMM_LAT_S * np.maximum(
+            g - 1.0, 1.0
+        )
+        return np.where(wire == 0.0, 0.0, t)
+
     # eta views (paper Eq. 25/26), derived from time
     def eta_compute(self, ops: Sequence[ComputeOp]) -> np.ndarray:
-        return np.array([
-            np.clip(op.flops / (DEVICES[op.device].peak_flops_bf16 * self.compute_time(op)),
-                    1e-9, 1.0)
-            for op in ops
-        ])
+        if not len(ops):
+            return np.zeros(0)
+        t = self.compute_times(ops)
+        flops = gather_attr(ops, "flops")
+        return np.clip(flops / (PEAK_FLOPS[gather_device_ids(ops)] * t), 1e-9, 1.0)
 
     def eta_comm(self, ops: Sequence[CommOp]) -> np.ndarray:
-        out = []
-        for op in ops:
-            wire = collective_bytes_on_wire(op.kind, op.group, op.payload_bytes)
-            dev = DEVICES[op.device]
-            bw = dev.intra_node_bw if op.intra_node else dev.inter_node_bw
-            t = self.comm_time(op)
-            out.append(np.clip(wire / (bw * t), 1e-9, 1.0) if t > 0 else 1.0)
-        return np.array(out)
+        if not len(ops):
+            return np.zeros(0)
+        t = self.comm_times(ops)
+        dev = gather_device_ids(ops)
+        intra = np.fromiter((op.intra_node for op in ops), dtype=bool,
+                            count=len(ops))
+        wire = _wire_bytes(ops)
+        bw = np.where(intra, INTRA_BW[dev], INTER_BW[dev])
+        with np.errstate(divide="ignore", invalid="ignore"):
+            eta = np.clip(wire / (bw * t), 1e-9, 1.0)
+        return np.where(t > 0, eta, 1.0)
 
 
 @dataclasses.dataclass
@@ -92,14 +171,14 @@ class EtaModel:
     def compute_times(self, ops: Sequence[ComputeOp]) -> np.ndarray:
         if not ops:
             return np.zeros(0)
-        base = np.array([self.prior.compute_time(op) for op in ops])
+        base = self.prior.compute_times(ops)  # vectorized analytic prior
         corr = np.exp(self.comp_model.predict(featurize_compute(ops)))
         return base * corr
 
     def comm_times(self, ops: Sequence[CommOp]) -> np.ndarray:
         if not ops:
             return np.zeros(0)
-        base = np.array([self.prior.comm_time(op) for op in ops])
+        base = self.prior.comm_times(ops)  # vectorized analytic prior
         corr = np.exp(self.comm_model.predict(featurize_comm(ops)))
         return base * corr
 

@@ -10,8 +10,11 @@ Layout mirrors the paper's pipeline (Fig. 2):
   costmodel.py— per-stage operator census (Eq. 27-28)
   simulate.py — performance simulator with Eq. 22
   hetero.py   — heterogeneous placement search (Eq. 23)
-  pareto.py   — money-limit search (Eq. 29-33)
-  api.py      — the three search modes
+  pareto.py   — money-limit search (Eq. 29-33) + incremental ranking
+  spec.py     — declarative SearchSpec (pool union, objective, workload)
+  planner.py  — spec -> tagged candidate streams over a shared FilterBank
+  objectives.py — pluggable ranking / budget selection
+  api.py      — Astra.search(spec): the unified pipeline (+ legacy shims)
 """
 from repro.core.api import Astra, SearchReport
 from repro.core.batch import BatchedCostSimulator
@@ -27,10 +30,26 @@ from repro.core.arch import (
 from repro.core.hetero import HeteroPool
 from repro.core.params import GpuConfig, HeteroPlacement, ParallelStrategy
 from repro.core.simulate import CostSimulator, SimResult
+from repro.core.spec import (
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
 
 __all__ = [
     "Astra",
     "SearchReport",
+    "SearchSpec",
+    "Workload",
+    "FixedPool",
+    "HeteroCaps",
+    "DeviceSweep",
+    "ObjectiveSpec",
+    "Limits",
     "ModelArch",
     "InputShape",
     "ASSIGNED_SHAPES",

@@ -1,46 +1,79 @@
-"""Astra's top-level API: the three search modes (paper §3.2 "GPU pool").
+"""Astra's top-level API: one declarative search pipeline.
 
-    mode 1 (homogeneous): fixed device type + count -> best strategy
-    mode 2 (heterogeneous): device-type caps + total budget -> best hetero plan
-    mode 3 (cost): device type(s) x candidate counts + money limit -> best
-                   affordable strategy via the Pareto pool
+The primary entry point is :meth:`Astra.search`, which takes a
+:class:`~repro.core.spec.SearchSpec` — a serializable description of the
+model, the GPU pool (one of three shapes), the workload, and the objective
+— and runs it through a fixed pipeline::
 
-Every mode returns a SearchReport carrying the funnel counts and the
-search/simulation wall-times (the paper's Table-1 columns).
+    SearchSpec --(planner)--> tagged candidate streams
+               --(streaming evaluator)--> costed candidates
+               --(objective)--> SearchReport
 
-All three modes evaluate candidates through the batched engine
+The paper's three modes are three pool shapes of the same spec:
+
+    mode 1 (homogeneous): ``FixedPool(device, n)``        -> best strategy
+    mode 2 (heterogeneous): ``HeteroCaps(total, caps)``   -> best hetero plan
+    mode 3 (cost): ``DeviceSweep(devices, max_devices)``
+                   + ``ObjectiveSpec.pareto(budget)``     -> best affordable
+                                                             strategy
+
+Every search returns a SearchReport carrying the funnel counts and the
+search/simulation wall-times (the paper's Table-1 columns); the split is
+measured by wrapping the candidate streams in :func:`_timed`, so generation
++ filtering time lands in ``search_seconds`` and the rest in
+``simulate_seconds`` for all modes alike.
+
+All specs evaluate through the batched engine
 (:class:`repro.core.batch.BatchedCostSimulator`) by default; pass
-``use_batched=False`` to fall back to the scalar reference simulator.
-Mode 3 streams candidates through chunked evaluation with incremental
-top-k / Pareto tracking, so its device-count sweep holds only the
-survivors in memory.
+``use_batched=False`` to fall back to the scalar reference simulator (the
+pipeline is identical — the scalar engine just replaces ``simulate_batch``).
+Candidates always stream through chunked evaluation with incremental top-k
+/ Pareto tracking, so no mode materializes its candidate list: peak held
+candidates are bounded by the chunk size plus the collector's survivors.
+
+Example::
+
+    spec = SearchSpec(
+        arch=llama7b,
+        pool=FixedPool("A800", 64),
+        workload=Workload(global_batch=512, seq=4096),
+    )
+    report = Astra(eta_model).search(spec)
+    # ship the exact same search to a service:
+    payload = spec.to_json()
+    report2 = Astra(eta_model).search(SearchSpec.from_json(payload))
+
+The legacy facade methods (``search_homogeneous`` / ``search_heterogeneous``
+/ ``search_cost``) remain as thin deprecated shims that build the
+equivalent spec; they emit a :class:`FutureWarning` once per process.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
+import warnings
 from typing import Iterable, Iterator, Optional, Sequence
 
 from repro.core.arch import ModelArch
-from repro.core.batch import BatchedCostSimulator
-from repro.core.hetero import HeteroPool, iter_hetero_strategies
-from repro.core.memory import MemoryFilter
-from repro.core.params import GpuConfig, ParallelStrategy
-from repro.core.pareto import (
-    CostedStrategy,
-    money_cost,
-    optimal_pool,
-    pick_within_budget,
-    sort_strategies,
-)
-from repro.core.rules import DEFAULT_RULES, RuleFilter
-from repro.core.search import (
-    SearchCounts,
-    generate_strategies,
-    iter_valid_strategies,
-    strategy_env,
-)
+from repro.core.batch import BatchedCostSimulator, stream_evaluate
+from repro.core.hetero import HeteroPool
+from repro.core.objectives import make_objective
+from repro.core.params import ParallelStrategy
+from repro.core.pareto import CostedStrategy
+from repro.core.planner import build_plan
+from repro.core.rules import DEFAULT_RULES
+from repro.core.search import SearchCounts
 from repro.core.simulate import CostSimulator, SimResult
+from repro.core.spec import (
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
 
 
 @dataclasses.dataclass
@@ -53,14 +86,31 @@ class SearchReport:
     search_seconds: float
     simulate_seconds: float
     pool: list[CostedStrategy] = dataclasses.field(default_factory=list)
+    evaluated: int = 0  # candidates streamed through the evaluator
 
     @property
     def e2e_seconds(self) -> float:
         return self.search_seconds + self.simulate_seconds
 
 
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    """FutureWarning, exactly once per legacy facade method per process."""
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"Astra.{name}() is deprecated; build a SearchSpec and call "
+        f"Astra.search(spec) instead (see repro.core.spec)",
+        FutureWarning,
+        stacklevel=3,
+    )
+
+
 class Astra:
-    """Facade over search + filters + simulator + money calculator."""
+    """Facade over the spec -> plan -> stream pipeline."""
 
     def __init__(
         self,
@@ -76,7 +126,48 @@ class Astra:
         self.use_batched = use_batched
         self.chunk_size = chunk_size
 
-    # -- mode 1 -------------------------------------------------------------
+    # -- the unified entry point -------------------------------------------
+    def search(self, spec: SearchSpec) -> SearchReport:
+        """Run one declarative search spec end to end."""
+        t0 = time.perf_counter()
+        plan = build_plan(spec, rules=self.rules)
+        objective = make_objective(spec.objective)
+        collector = objective.collector(spec.limits.top_k)
+        engine = self.batched if self.use_batched else self.simulator
+        chunk_size = spec.limits.chunk_size or self.chunk_size
+        w = spec.workload
+
+        evaluated = 0
+        budget = spec.limits.max_candidates
+        for stream in plan.streams:
+            it: Iterable[ParallelStrategy] = stream.strategies
+            if budget is not None:
+                if budget <= evaluated:
+                    break
+                it = itertools.islice(it, budget - evaluated)
+            evaluated += stream_evaluate(
+                engine, spec.arch, _timed(it, plan.counts), collector.push,
+                global_batch=w.global_batch, seq=w.seq,
+                train_tokens=w.train_tokens, chunk_size=chunk_size,
+            )
+
+        top, pool = collector.results()
+        best = objective.select(top, pool)
+        total = time.perf_counter() - t0
+        search_seconds = plan.counts.gen_seconds
+        return SearchReport(
+            mode=plan.mode,
+            best=best.strategy if best else None,
+            best_sim=best.sim if best else None,
+            top=top,
+            counts=plan.counts,
+            search_seconds=search_seconds,
+            simulate_seconds=max(total - search_seconds, 0.0),
+            pool=pool,
+            evaluated=evaluated,
+        )
+
+    # -- legacy facades (deprecated shims over SearchSpec) ------------------
     def search_homogeneous(
         self,
         arch: ModelArch,
@@ -89,26 +180,19 @@ class Astra:
         top_k: int = 5,
         space: Optional[dict] = None,
     ) -> SearchReport:
-        t0 = time.perf_counter()
-        strategies, counts = generate_strategies(
-            arch, [GpuConfig(device, num_devices)], global_batch, seq,
-            rules=self.rules, space=space,
-        )
-        t1 = time.perf_counter()
-        costed = self._simulate_all(arch, strategies, global_batch, seq, train_tokens)
-        t2 = time.perf_counter()
-        ranked = sort_strategies(costed)
-        return SearchReport(
-            mode="homogeneous",
-            best=ranked[0].strategy if ranked else None,
-            best_sim=ranked[0].sim if ranked else None,
-            top=ranked[:top_k],
-            counts=counts,
-            search_seconds=t1 - t0,
-            simulate_seconds=t2 - t1,
+        """Deprecated: use ``search(SearchSpec(pool=FixedPool(...)))``."""
+        _warn_deprecated("search_homogeneous")
+        return self.search(
+            SearchSpec(
+                arch=arch,
+                pool=FixedPool(device, num_devices),
+                workload=Workload(global_batch, seq, train_tokens),
+                objective=ObjectiveSpec.throughput(),
+                space=space,
+                limits=Limits(top_k=top_k),
+            )
         )
 
-    # -- mode 2 -------------------------------------------------------------
     def search_heterogeneous(
         self,
         arch: ModelArch,
@@ -121,42 +205,24 @@ class Astra:
         fast: bool = True,
         base_kwargs: Optional[dict] = None,
     ) -> SearchReport:
-        t0 = time.perf_counter()
-        mem = MemoryFilter(seq=seq)
-        rule_filter = RuleFilter(self.rules)
-        counts = SearchCounts()
-        candidates: list[ParallelStrategy] = []
-        for s in iter_hetero_strategies(
-            arch, pool, global_batch, fast=fast, base_kwargs=base_kwargs
-        ):
-            counts.generated += 1
-            # the hetero generator only emits arithmetically feasible combos
-            # (dp*mbs | GB, placements summing to num_layers), so the
-            # divisible rung equals generated by construction
-            counts.divisible += 1
-            if not rule_filter.is_valid(strategy_env(arch, s)):
-                continue
-            counts.after_rules += 1
-            if not mem.is_valid(arch, s):
-                continue
-            counts.after_memory += 1
-            candidates.append(s)
-        counts.gen_seconds = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        costed = self._simulate_all(arch, candidates, global_batch, seq, train_tokens)
-        t2 = time.perf_counter()
-        ranked = sort_strategies(costed)
-        return SearchReport(
-            mode="heterogeneous",
-            best=ranked[0].strategy if ranked else None,
-            best_sim=ranked[0].sim if ranked else None,
-            top=ranked[:top_k],
-            counts=counts,
-            search_seconds=t1 - t0,
-            simulate_seconds=t2 - t1,
+        """Deprecated: use ``search(SearchSpec(pool=HeteroCaps(...)))``.
+
+        Keeps the legacy exhaustive composition sweep (``prune_slack=None``)
+        so pre-spec callers see byte-identical funnel counts; opt into the
+        water-filling pruning by building a ``HeteroCaps`` spec directly.
+        """
+        _warn_deprecated("search_heterogeneous")
+        return self.search(
+            SearchSpec(
+                arch=arch,
+                pool=HeteroCaps.of(pool, fast=fast, prune_slack=None),
+                workload=Workload(global_batch, seq, train_tokens),
+                objective=ObjectiveSpec.throughput(),
+                hetero_base=base_kwargs,
+                limits=Limits(top_k=top_k),
+            )
         )
 
-    # -- mode 3 -------------------------------------------------------------
     def search_cost(
         self,
         arch: ModelArch,
@@ -170,102 +236,34 @@ class Astra:
         top_k: int = 5,
         min_devices: int = 2,
     ) -> SearchReport:
-        t0 = time.perf_counter()
-        gpu_configs = []
-        for dev in devices:
-            n = min_devices
-            while n <= max_devices:
-                gpu_configs.append(GpuConfig(dev, n))
-                n *= 2
-
-        counts = SearchCounts()
-        if self.use_batched:
-            # stream the sweep: generation interleaves with chunked batched
-            # evaluation; only top-k + Pareto survivors are materialized
-            stream = self._timed(
-                iter_valid_strategies(
-                    arch, gpu_configs, global_batch, seq,
-                    rules=self.rules, counts=counts,
-                ),
-                counts,
+        """Deprecated: use ``search(SearchSpec(pool=DeviceSweep(...),
+        objective=ObjectiveSpec.pareto(budget)))``."""
+        _warn_deprecated("search_cost")
+        return self.search(
+            SearchSpec(
+                arch=arch,
+                pool=DeviceSweep(tuple(devices), max_devices, min_devices),
+                workload=Workload(global_batch, seq, train_tokens),
+                objective=ObjectiveSpec.pareto(money_limit),
+                limits=Limits(top_k=top_k),
             )
-            top, pool, _ = self.batched.evaluate_stream(
-                arch, stream, global_batch=global_batch, seq=seq,
-                train_tokens=train_tokens, top_k=top_k,
-                chunk_size=self.chunk_size, keep_pool=True,
-            )
-            total = time.perf_counter() - t0
-            search_seconds = counts.gen_seconds
-            simulate_seconds = max(total - search_seconds, 0.0)
-        else:
-            strategies, counts = generate_strategies(
-                arch, gpu_configs, global_batch, seq, rules=self.rules
-            )
-            t1 = time.perf_counter()
-            costed = self._simulate_all(
-                arch, strategies, global_batch, seq, train_tokens
-            )
-            pool = optimal_pool(costed)
-            top = sort_strategies(costed)[:top_k]
-            search_seconds = t1 - t0
-            simulate_seconds = time.perf_counter() - t1
-
-        best = pick_within_budget(pool, money_limit)
-        return SearchReport(
-            mode="cost",
-            best=best.strategy if best else None,
-            best_sim=best.sim if best else None,
-            top=top,
-            counts=counts,
-            search_seconds=search_seconds,
-            simulate_seconds=simulate_seconds,
-            pool=pool,
         )
 
-    # -- shared ---------------------------------------------------------------
-    @staticmethod
-    def _timed(it: Iterable[ParallelStrategy], counts: SearchCounts) -> Iterator[ParallelStrategy]:
-        """Accumulate generator wall-time into ``counts.gen_seconds`` so the
-        Table-1 search/simulate split stays honest under streaming."""
-        it = iter(it)
-        while True:
-            t0 = time.perf_counter()
-            try:
-                s = next(it)
-            except StopIteration:
-                counts.gen_seconds += time.perf_counter() - t0
-                return
-            counts.gen_seconds += time.perf_counter() - t0
-            yield s
 
-    def _simulate_all(
-        self,
-        arch: ModelArch,
-        strategies: Sequence[ParallelStrategy],
-        global_batch: int,
-        seq: int,
-        train_tokens: float,
-    ) -> list[CostedStrategy]:
-        if self.use_batched:
-            sims = []
-            for i in range(0, len(strategies), self.chunk_size):
-                sims.extend(
-                    self.batched.simulate_batch(
-                        arch, strategies[i : i + self.chunk_size],
-                        global_batch=global_batch, seq=seq,
-                    )
-                )
-        else:
-            sims = [
-                self.simulator.simulate(arch, s, global_batch=global_batch, seq=seq)
-                for s in strategies
-            ]
-        return [
-            CostedStrategy(
-                strategy=s,
-                sim=sim,
-                throughput=sim.throughput_tokens,
-                money=money_cost(sim, train_tokens),
-            )
-            for s, sim in zip(strategies, sims)
-        ]
+def _timed(
+    it: Iterable[ParallelStrategy], counts: SearchCounts
+) -> Iterator[ParallelStrategy]:
+    """Accumulate generator wall-time into ``counts.gen_seconds`` so the
+    Table-1 search/simulate split stays honest under streaming. Every mode
+    goes through this — generation + filtering time is ``search_seconds``,
+    the remainder of the e2e wall-time is ``simulate_seconds``."""
+    it = iter(it)
+    while True:
+        t0 = time.perf_counter()
+        try:
+            s = next(it)
+        except StopIteration:
+            counts.gen_seconds += time.perf_counter() - t0
+            return
+        counts.gen_seconds += time.perf_counter() - t0
+        yield s

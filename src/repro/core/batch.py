@@ -24,11 +24,9 @@ Parity with the scalar simulator is exact up to float summation order
 """
 from __future__ import annotations
 
-import bisect
-import heapq
 import itertools
 import operator
-from typing import Iterable, Iterator, Optional, Sequence
+from typing import Callable, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -36,7 +34,12 @@ from repro.core.arch import ModelArch
 from repro.core.costmodel import StageCensusVec, build_stage_census_vec
 from repro.core.opspec import CommOp
 from repro.core.params import ParallelStrategy
-from repro.core.pareto import CostedStrategy, money_cost, sort_strategies
+from repro.core.pareto import (
+    CostedStrategy,
+    ParetoStaircase,
+    TopK,
+    money_cost,
+)
 from repro.core.simulate import (
     _OVERLAP_EFFICIENCY,
     _P2P_OVERLAP_EFFICIENCY,
@@ -44,6 +47,10 @@ from repro.core.simulate import (
     SimResult,
     compose_sim_result,
 )
+
+# backwards-compat aliases (the collectors moved to repro.core.pareto)
+_TopK = TopK
+_ParetoStaircase = ParetoStaircase
 
 
 class _OpTimeTable:
@@ -76,62 +83,9 @@ class _OpTimeTable:
             self.index[op] = base + i
         self.times = np.concatenate([self.times, predicted])
 
-
-class _TopK:
-    """Incremental top-k under the Eq. 33 order (throughput desc, money asc)."""
-
-    def __init__(self, k: int):
-        self.k = max(k, 0)
-        self._heap: list = []  # (throughput, -money, tiebreak, CostedStrategy)
-        self._counter = itertools.count()
-
-    def push(self, c: CostedStrategy) -> None:
-        if self.k == 0:
-            return
-        key = (c.throughput, -c.money, -next(self._counter))
-        if len(self._heap) < self.k:
-            heapq.heappush(self._heap, (key, c))
-        elif key > self._heap[0][0]:
-            heapq.heapreplace(self._heap, (key, c))
-
-    def sorted(self) -> list[CostedStrategy]:
-        return sort_strategies([c for _, c in self._heap])
-
-
-class _ParetoStaircase:
-    """Incremental Eq. 30-31 non-dominated pool.
-
-    Invariant: ``_thr`` ascending, ``_money`` strictly ascending (each pool
-    member trades money for throughput). Matches
-    :func:`repro.core.pareto.optimal_pool` on the same candidate multiset.
-    """
-
-    def __init__(self):
-        self._thr: list[float] = []
-        self._money: list[float] = []
-        self._items: list[CostedStrategy] = []
-
-    def push(self, c: CostedStrategy) -> None:
-        thr, money = c.throughput, c.money
-        i = bisect.bisect_right(self._thr, thr)
-        # dominated (or duplicate): an as-fast-or-faster member at most as
-        # expensive. Equal-throughput members sit at i-1; strictly faster
-        # members start at i with the cheapest of them first.
-        if i > 0 and self._thr[i - 1] == thr and self._money[i - 1] <= money:
-            return
-        if i < len(self._thr) and self._money[i] <= money:
-            return
-        # remove members this candidate dominates (<= throughput, >= money)
-        k = i
-        while k > 0 and self._money[k - 1] >= money:
-            k -= 1
-        del self._thr[k:i], self._money[k:i], self._items[k:i]
-        self._thr.insert(k, thr)
-        self._money.insert(k, money)
-        self._items.insert(k, c)
-
-    def sorted(self) -> list[CostedStrategy]:
-        return list(reversed(self._items))  # throughput descending
+    def clear(self) -> None:
+        self.index = {}
+        self.times = np.zeros(0, dtype=np.float64)
 
 
 def _chunks(it: Iterable, size: int) -> Iterator[list]:
@@ -164,6 +118,7 @@ _TIMING_FIELDS = (
     "offload_optimizer",
 )
 _STAGE_CACHE_MAX = 65536
+_OP_TABLE_MAX = 65536
 
 
 _CENSUS_GETTER = operator.attrgetter(*_CENSUS_FIELDS)
@@ -201,6 +156,10 @@ class BatchedCostSimulator:
         Must run before planning (never mid-batch: plans hold keys into the
         caches) and must drop the id interners together with the caches —
         resetting the interners alone would recycle ids into stale keys.
+        The op-time tables are bounded too (cached raw sums are plain floats,
+        not references into the tables, so clearing them between batches is
+        safe) — a long-lived search service replaying many specs would
+        otherwise grow them monotonically.
         """
         if (
             len(self._stage_time_cache) > _STAGE_CACHE_MAX
@@ -210,6 +169,11 @@ class BatchedCostSimulator:
             self._stage_time_cache.clear()
             self._census_base_ids.clear()
             self._time_base_ids.clear()
+        # cached raw/stage sums are plain floats (no references into the op
+        # tables), so the tables can be dropped independently
+        for table in (self._comp, self._comm):
+            if len(table.index) > _OP_TABLE_MAX:
+                table.clear()
 
     # -- stage identity ----------------------------------------------------
     def _stage_plan(
@@ -438,22 +402,52 @@ class BatchedCostSimulator:
         Only ``top_k`` + pool-member ``CostedStrategy`` objects are retained,
         regardless of how many candidates stream through.
         """
-        topk = _TopK(top_k)
-        pool = _ParetoStaircase() if keep_pool else None
-        n = 0
-        for chunk in _chunks(strategies, chunk_size):
-            sims = self.simulate_batch(
-                arch, chunk, global_batch=global_batch, seq=seq
-            )
-            for s, sim in zip(chunk, sims):
-                costed = CostedStrategy(
+        topk = TopK(top_k)
+        pool = ParetoStaircase() if keep_pool else None
+
+        def push(costed: CostedStrategy) -> None:
+            topk.push(costed)
+            if pool is not None:
+                pool.push(costed)
+
+        n = stream_evaluate(
+            self, arch, strategies, push, global_batch=global_batch, seq=seq,
+            train_tokens=train_tokens, chunk_size=chunk_size,
+        )
+        return topk.sorted(), pool.sorted() if pool is not None else [], n
+
+
+def stream_evaluate(
+    engine,
+    arch: ModelArch,
+    strategies: Iterable[ParallelStrategy],
+    push: Callable[[CostedStrategy], None],
+    *,
+    global_batch: int,
+    seq: int,
+    train_tokens: float,
+    chunk_size: int = 512,
+) -> int:
+    """Engine-agnostic chunked streaming evaluation.
+
+    ``engine`` is anything with a ``simulate_batch`` method (the batched
+    engine or the scalar :class:`~repro.core.simulate.CostSimulator`
+    reference). Each candidate is costed and handed to ``push`` — typically
+    an :class:`~repro.core.objectives.Objective` collector — so at most
+    ``chunk_size`` candidates plus the collector's survivors are ever held.
+    Returns the number of candidates evaluated.
+    """
+    n = 0
+    for chunk in _chunks(strategies, chunk_size):
+        sims = engine.simulate_batch(arch, chunk, global_batch=global_batch, seq=seq)
+        for s, sim in zip(chunk, sims):
+            push(
+                CostedStrategy(
                     strategy=s,
                     sim=sim,
                     throughput=sim.throughput_tokens,
                     money=money_cost(sim, train_tokens),
                 )
-                topk.push(costed)
-                if pool is not None:
-                    pool.push(costed)
-            n += len(chunk)
-        return topk.sorted(), pool.sorted() if pool is not None else [], n
+            )
+        n += len(chunk)
+    return n

@@ -162,6 +162,66 @@ def balanced_placement(
     )
 
 
+def balanced_placements_for(
+    arch: ModelArch,
+    pool: HeteroPool,
+    *,
+    pipeline_parallel: int,
+    devices_per_stage: int,
+    prune_slack: Optional[float] = None,
+) -> list[HeteroPlacement]:
+    """All water-filled placements for one (P, D*T) cell, optionally pruned.
+
+    The water-filling minimax of a composition m is bounded below by its
+    fractional relaxation LB(m) = N / sum_i m_i * speed_i (the stage time
+    when n_i is exactly proportional to per-layer speed). With
+    ``prune_slack`` set, compositions are visited in ascending-LB order and
+    enumeration stops once LB(m) exceeds ``prune_slack`` times the best
+    *achieved* discrete minimax so far — those compositions cannot come
+    within the slack of the best placement's layer-compute time, so their
+    strategies are dominated. ``prune_slack`` > 1 absorbs the gap between
+    the FLOPs-speed proxy and the simulator's full stage time; ``None``
+    keeps the exhaustive composition sweep.
+
+    Placements depend on (P, D*T) only, so callers cache this per cell and
+    share it across the (tp, dp, mbs) cells with the same product.
+    """
+    dt = devices_per_stage
+    caps = [cap // dt for _, cap in pool.type_caps]
+    speed = [get_device(d).peak_flops_bf16 for d, _ in pool.type_caps]
+    N = arch.num_layers
+
+    def frac_minimax(m: Sequence[int]) -> float:
+        total = sum(mi * sp for mi, sp in zip(m, speed))
+        return N / total if total > 0 else float("inf")
+
+    comps = list(compositions(pipeline_parallel, len(caps), caps))
+    if prune_slack is not None:
+        comps.sort(key=frac_minimax)
+
+    out: list[HeteroPlacement] = []
+    ub_best = float("inf")
+    for m in comps:
+        if prune_slack is not None and frac_minimax(m) > prune_slack * ub_best:
+            break  # ascending LB order: every remaining composition is dominated
+        pl = balanced_placement(
+            arch, pool, pipeline_parallel=pipeline_parallel,
+            data_parallel=1, tensor_parallel=dt, m=m,
+        )
+        if pl is None or pl.total_layers != N:
+            continue
+        if prune_slack is not None:
+            # discrete minimax in the LB's units: max_i n_i / speed_i
+            active = [i for i, mi in enumerate(m) if mi > 0]
+            achieved = max(
+                pl.layers_per_stage[j] / speed[active[j]]
+                for j in range(len(active))
+            )
+            ub_best = min(ub_best, achieved)
+        out.append(pl)
+    return out
+
+
 def iter_hetero_strategies(
     arch: ModelArch,
     pool: HeteroPool,
@@ -172,17 +232,23 @@ def iter_hetero_strategies(
     pipeline_options: Optional[Sequence[int]] = None,
     fast: bool = False,
     base_kwargs: Optional[dict] = None,
+    prune_slack: Optional[float] = None,
 ) -> Iterable[ParallelStrategy]:
     """Full mode-2 space: (D, T, P) x stage placements.
 
     ``fast=True`` uses the water-filling solver (one placement per
-    composition); ``fast=False`` is the paper's full enumeration.
+    composition) with the placements of each (P, D*T) cell computed once and
+    shared across the (tp, dp, mbs) cells that map onto it; ``fast=False``
+    is the paper's full enumeration. ``prune_slack`` (fast mode only) skips
+    compositions whose water-filling lower bound is dominated — see
+    :func:`balanced_placements_for`.
     """
     base_kwargs = dict(base_kwargs or {})
     pps = pipeline_options or [
         p for p in (2, 4, 8, 16, 32, 64) if p <= min(arch.num_layers, pool.total_devices)
     ]
     primary = pool.type_caps[0][0]
+    placement_cache: dict[tuple[int, int], list[HeteroPlacement]] = {}
     for tp in tensor_parallel_options:
         if not arch.is_attention_free and arch.heads % tp != 0:
             continue
@@ -196,15 +262,15 @@ def iter_hetero_strategies(
                     if global_batch % (dp * mbs) != 0:
                         continue
                     if fast:
-                        dt = dp * tp
-                        caps = [cap // dt for _, cap in pool.type_caps]
-                        placements = (
-                            balanced_placement(
+                        key = (pp, dp * tp)
+                        placements = placement_cache.get(key)
+                        if placements is None:
+                            placements = balanced_placements_for(
                                 arch, pool, pipeline_parallel=pp,
-                                data_parallel=dp, tensor_parallel=tp, m=m,
+                                devices_per_stage=dp * tp,
+                                prune_slack=prune_slack,
                             )
-                            for m in compositions(pp, len(caps), caps)
-                        )
+                            placement_cache[key] = placements
                     else:
                         placements = enumerate_placements(
                             arch, pool, pipeline_parallel=pp,

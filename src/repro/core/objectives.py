@@ -1,0 +1,103 @@
+"""Pluggable search objectives (ranking + budget selection).
+
+An :class:`Objective` owns everything downstream of simulation: the
+incremental collector candidates are pushed through while streaming, the
+final top ranking, and the best-pick rule. The three built-ins cover the
+paper's modes — Eq. 33 throughput ranking, the Eq. 30-31 Pareto pool with
+the Eq. 32 money-limit pick, and a cheapest-plan objective — and new
+objectives plug in without touching the facade or the planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.pareto import (
+    CostedStrategy,
+    ParetoStaircase,
+    TopK,
+    pick_within_budget,
+)
+from repro.core.spec import ObjectiveSpec
+
+
+class Collector:
+    """Streaming sink: incremental top-k (+ optional Pareto pool).
+
+    Holds at most ``top_k`` + pool-member candidates no matter how many are
+    pushed — this is what lets every mode stream instead of materializing.
+    """
+
+    def __init__(self, top_k: int, *, keep_pool: bool, key=None):
+        self.topk = TopK(top_k, key) if key is not None else TopK(top_k)
+        self.pool = ParetoStaircase() if keep_pool else None
+
+    def push(self, c: CostedStrategy) -> None:
+        self.topk.push(c)
+        if self.pool is not None:
+            self.pool.push(c)
+
+    def results(self) -> tuple[list[CostedStrategy], list[CostedStrategy]]:
+        """(ranked top-k, Pareto pool — empty when the objective keeps none)."""
+        return self.topk.sorted(), self.pool.sorted() if self.pool else []
+
+
+class Objective:
+    """Base: rank by Eq. 33, keep no pool, pick the top candidate."""
+
+    wants_pool = False
+
+    def collector(self, top_k: int) -> Collector:
+        return Collector(top_k, keep_pool=self.wants_pool)
+
+    def select(
+        self, top: list[CostedStrategy], pool: list[CostedStrategy]
+    ) -> Optional[CostedStrategy]:
+        return top[0] if top else None
+
+
+class ThroughputObjective(Objective):
+    """Fastest plan (modes 1 and 2)."""
+
+
+@dataclasses.dataclass
+class ParetoObjective(Objective):
+    """Eq. 29-33 money-limit search: keep the non-dominated pool, pick the
+    fastest member whose token-budget cost fits ``budget`` (mode 3)."""
+
+    budget: Optional[float] = None
+    wants_pool = True
+
+    def select(self, top, pool):
+        return pick_within_budget(pool, self.budget)
+
+
+@dataclasses.dataclass
+class MoneyObjective(Objective):
+    """Cheapest plan for the token budget; rank by money ascending with a
+    throughput tiebreak. ``budget`` (optional) caps admissible cost."""
+
+    budget: Optional[float] = None
+    wants_pool = True
+
+    def collector(self, top_k: int) -> Collector:
+        return Collector(
+            top_k, keep_pool=True, key=lambda c: (-c.money, c.throughput)
+        )
+
+    def select(self, top, pool):
+        for c in top:
+            if self.budget is None or c.money <= self.budget:
+                return c
+        return None
+
+
+def make_objective(spec: ObjectiveSpec) -> Objective:
+    """Lower a declarative :class:`ObjectiveSpec` onto its implementation."""
+    if spec.kind == "throughput":
+        return ThroughputObjective()
+    if spec.kind == "money":
+        return MoneyObjective(budget=spec.budget)
+    if spec.kind == "pareto":
+        return ParetoObjective(budget=spec.budget)
+    raise ValueError(f"unknown objective kind {spec.kind!r}")

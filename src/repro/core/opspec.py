@@ -18,7 +18,30 @@ from repro.hw.catalog import DeviceSpec, DEVICES
 # stable integer ids for categorical features
 COMPUTE_KINDS = ("matmul", "flash_attn", "attn", "elementwise", "norm", "embedding")
 COMM_KINDS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all", "p2p")
-_DEVICE_IDS = {name: i for i, name in enumerate(sorted(DEVICES))}
+DEVICE_NAMES = tuple(sorted(DEVICES))
+_DEVICE_IDS = {name: i for i, name in enumerate(DEVICE_NAMES)}
+DEVICE_IDS = _DEVICE_IDS
+
+# device-constant arrays indexed by the stable id — shared by every
+# vectorized path (featurization here, the analytic prior in calibration)
+PEAK_FLOPS = np.array([DEVICES[n].peak_flops_bf16 for n in DEVICE_NAMES])
+MEM_BW = np.array([DEVICES[n].mem_bw for n in DEVICE_NAMES])
+INTRA_BW = np.array([DEVICES[n].intra_node_bw for n in DEVICE_NAMES])
+INTER_BW = np.array([DEVICES[n].inter_node_bw for n in DEVICE_NAMES])
+MACHINE_BALANCE = PEAK_FLOPS / MEM_BW
+
+
+def gather_attr(ops: "Sequence", attr: str, dtype=np.float64) -> np.ndarray:
+    """One float array from an op attribute (the vectorization workhorse)."""
+    return np.fromiter(
+        (getattr(op, attr) for op in ops), dtype=dtype, count=len(ops)
+    )
+
+
+def gather_device_ids(ops: "Sequence") -> np.ndarray:
+    return np.fromiter(
+        (_DEVICE_IDS[op.device] for op in ops), dtype=np.intp, count=len(ops)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,11 +138,80 @@ def elementwise_op(device: str, elements: int, dtype_bytes: int = 2, reads: int 
 
 
 def featurize_compute(ops: Sequence[ComputeOp]) -> np.ndarray:
-    return np.stack([op.features() for op in ops])
+    """Vectorized feature matrix; row i == ``ops[i].features()`` exactly.
+
+    One NumPy pass per column instead of one 13-element array per op — this
+    is the GBT-prediction hot path (every cold-cache chunk featurizes all
+    its unseen ops). The quantization columns stay in exact integer
+    arithmetic (``m*n*k`` overflows int64 for the optimizer-update shapes),
+    matching the per-op path bit for bit.
+    """
+    if not len(ops):
+        return np.zeros((0, 13))
+    kind = np.fromiter((COMPUTE_KINDS.index(op.kind) for op in ops),
+                       dtype=np.float64, count=len(ops))
+    dev = gather_device_ids(ops)
+    m, n, k = gather_attr(ops, "m"), gather_attr(ops, "n"), gather_attr(ops, "k")
+    flops = gather_attr(ops, "flops")
+    nbytes = gather_attr(ops, "bytes_accessed")
+    dtype_bytes = gather_attr(ops, "dtype_bytes")
+
+    def quant(tile: int) -> np.ndarray:
+        # exact Python-int arithmetic (the products exceed 2**53)
+        def c(x: int) -> int:
+            return ((max(x, 1) + tile - 1) // tile) * tile
+
+        return np.fromiter(
+            (
+                (op.m * op.n * op.k) / (c(op.m) * c(op.n) * c(op.k))
+                for op in ops
+            ),
+            dtype=np.float64, count=len(ops),
+        )
+
+    ai = flops / np.maximum(nbytes, 1.0)
+    ai_ratio = ai / MACHINE_BALANCE[dev]
+    cols = [
+        kind,
+        dev.astype(np.float64),
+        np.log2(np.maximum(m, 1)),
+        np.log2(np.maximum(n, 1)),
+        np.log2(np.maximum(k, 1)),
+        quant(64),
+        quant(128),
+        np.log2(np.maximum(flops, 1.0)),
+        np.log2(np.maximum(nbytes, 1.0)),
+        np.log2(np.maximum(ai, 1e-3)),
+        np.minimum(ai_ratio, 1.0),
+        np.log2(np.maximum(ai_ratio, 1e-6)),
+        dtype_bytes,
+    ]
+    return np.stack(cols, axis=1)
 
 
 def featurize_comm(ops: Sequence[CommOp]) -> np.ndarray:
-    return np.stack([op.features() for op in ops])
+    """Vectorized feature matrix; row i == ``ops[i].features()`` exactly."""
+    if not len(ops):
+        return np.zeros((0, 7))
+    kind = np.fromiter((COMM_KINDS.index(op.kind) for op in ops),
+                       dtype=np.float64, count=len(ops))
+    dev = gather_device_ids(ops).astype(np.float64)
+    group = gather_attr(ops, "group")
+    payload = gather_attr(ops, "payload_bytes")
+    intra = np.fromiter((op.intra_node for op in ops), dtype=np.float64,
+                        count=len(ops))
+    half = np.where(intra > 0, float(1 << 20), float(8 << 20))
+    sat = payload / (payload + half)
+    cols = [
+        kind,
+        dev,
+        np.log2(np.maximum(group, 1.0)),
+        np.log2(np.maximum(payload, 1.0)),
+        np.log2(np.maximum(payload / np.maximum(group, 1.0), 1.0)),
+        sat,
+        intra,
+    ]
+    return np.stack(cols, axis=1)
 
 
 def device_spec(op) -> DeviceSpec:

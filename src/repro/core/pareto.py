@@ -1,14 +1,24 @@
-"""Money-limit search (paper §3.6, Eq. 29-33).
+"""Money-limit search (paper §3.6, Eq. 29-33) + incremental ranking.
 
 The optimal pool keeps strategies not dominated in (throughput up, cost
 down); the final pick is the highest-throughput pool member whose monetary
 cost (Eq. 32: M_i = T_i * N_g * F_g, with T_i the time to train the user's
 token budget) fits the user's limit.
+
+Besides the batch functions (``optimal_pool`` / ``sort_strategies`` /
+``pick_within_budget``), this module hosts their incremental counterparts —
+:class:`TopK` and :class:`ParetoStaircase` — which the streaming evaluator
+pushes candidates through one at a time so a search never materializes its
+full ``CostedStrategy`` list. Both are proven equivalent to the batch
+functions on the same candidate multiset (tests/test_batch_sim.py).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Optional, Sequence
+import heapq
+import itertools
+from typing import Callable, Optional, Sequence
 
 from repro.core.params import ParallelStrategy
 from repro.core.simulate import SimResult
@@ -55,3 +65,74 @@ def pick_within_budget(
         if money_limit is None or c.money <= money_limit:
             return c
     return None
+
+
+# ---------------------------------------------------------------------------
+# incremental (streaming) counterparts
+# ---------------------------------------------------------------------------
+
+def _eq33_key(c: CostedStrategy) -> tuple:
+    """Bigger-is-better key realizing the Eq. 33 order."""
+    return (c.throughput, -c.money)
+
+
+class TopK:
+    """Incremental top-k under a bigger-is-better key (default: Eq. 33 —
+    throughput descending, money-cost tiebreak ascending). Matches
+    ``sort_strategies(all)[:k]`` for the default key."""
+
+    def __init__(self, k: int, key: Callable[[CostedStrategy], tuple] = _eq33_key):
+        self.k = max(k, 0)
+        self.key = key
+        self._heap: list = []  # (key, tiebreak, CostedStrategy)
+        self._counter = itertools.count()
+
+    def push(self, c: CostedStrategy) -> None:
+        if self.k == 0:
+            return
+        key = self.key(c) + (-next(self._counter),)
+        if len(self._heap) < self.k:
+            heapq.heappush(self._heap, (key, c))
+        elif key > self._heap[0][0]:
+            heapq.heapreplace(self._heap, (key, c))
+
+    def sorted(self) -> list[CostedStrategy]:
+        # stable descending sort on the tiebroken key reproduces the batch
+        # sort order exactly (earliest-seen wins full-key ties)
+        return [c for _, c in sorted(self._heap, reverse=True)]
+
+
+class ParetoStaircase:
+    """Incremental Eq. 30-31 non-dominated pool.
+
+    Invariant: ``_thr`` ascending, ``_money`` strictly ascending (each pool
+    member trades money for throughput). Matches :func:`optimal_pool` on the
+    same candidate multiset.
+    """
+
+    def __init__(self):
+        self._thr: list[float] = []
+        self._money: list[float] = []
+        self._items: list[CostedStrategy] = []
+
+    def push(self, c: CostedStrategy) -> None:
+        thr, money = c.throughput, c.money
+        i = bisect.bisect_right(self._thr, thr)
+        # dominated (or duplicate): an as-fast-or-faster member at most as
+        # expensive. Equal-throughput members sit at i-1; strictly faster
+        # members start at i with the cheapest of them first.
+        if i > 0 and self._thr[i - 1] == thr and self._money[i - 1] <= money:
+            return
+        if i < len(self._thr) and self._money[i] <= money:
+            return
+        # remove members this candidate dominates (<= throughput, >= money)
+        k = i
+        while k > 0 and self._money[k - 1] >= money:
+            k -= 1
+        del self._thr[k:i], self._money[k:i], self._items[k:i]
+        self._thr.insert(k, thr)
+        self._money.insert(k, money)
+        self._items.insert(k, c)
+
+    def sorted(self) -> list[CostedStrategy]:
+        return list(reversed(self._items))  # throughput descending

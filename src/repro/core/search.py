@@ -3,11 +3,17 @@
 ``generate_strategies`` materializes S = {s_i} = C_gpu x f(P) x M (Eq. 8-9),
 then applies the rule-based filter (Eq. 10) and the memory-based filter
 (Eq. 20-21) in that order, tracking counts for the paper's Table-1 metrics.
+
+:class:`FilterBank` wraps both filters with result memoization keyed on the
+exact strategy fields each filter reads, so one bank shared across the cells
+of a search (e.g. mode-3's device-count sweep, or mode-2's placement grid)
+evaluates each distinct filter input once instead of once per candidate.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import operator
 import time
 from typing import Iterable, Optional, Sequence
 
@@ -43,6 +49,118 @@ def strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
 
 
 _strategy_env = strategy_env  # backwards-compat alias
+
+
+# ---------------------------------------------------------------------------
+# memoized filter bank
+# ---------------------------------------------------------------------------
+
+# env names the rule DSL can reference, resolved directly from the strategy
+# (avoids building the full $param env on memo hits)
+_STRATEGY_ENV_GETTERS: dict = {
+    **{
+        f.name: operator.attrgetter(f.name)
+        for f in dataclasses.fields(ParallelStrategy)
+        if f.name != "hetero"
+    },
+    "data_parallel": operator.attrgetter("data_parallel"),
+    "num_gpus": operator.attrgetter("num_devices"),
+    "pipeline_model_parallel_size": operator.attrgetter("pipeline_parallel"),
+    "tensor_model_parallel_size": operator.attrgetter("tensor_parallel"),
+    "data_model_parallel_size": operator.attrgetter("data_parallel"),
+    "expert_model_parallel_size": operator.attrgetter("expert_parallel"),
+}
+# env names that are constant for a fixed arch (excluded from memo keys)
+_ARCH_ENV_KEYS = frozenset(
+    {"num_layers", "hidden_size", "attention_heads", "intermediate_size",
+     "vocab_size", "num_experts", "moe_router_topk"}
+)
+
+
+def _referenced_vars(ast) -> set[str]:
+    """All $vars a rule AST reads (normalized to env-key spelling)."""
+    out: set[str] = set()
+
+    def walk(node):
+        if not isinstance(node, tuple) or not node:
+            return
+        if node[0] == "var":
+            out.add(str(node[1]).replace("-", "_"))
+            return
+        for child in node[1:]:
+            walk(child)
+
+    walk(ast)
+    return out
+
+
+def _memory_key(s: ParallelStrategy) -> tuple:
+    """Projection of a strategy onto the fields the memory model reads.
+
+    Everything else (recompute_num_layers, virtual pipeline, the overlap
+    toggles, num_devices beyond dp) provably cannot change the Eq. 20-21
+    verdict, so strategies differing only there share one evaluation. The
+    ZeRO data-parallel divisor only matters with the distributed optimizer,
+    which is what lets non-ZeRO checks dedupe across a device-count sweep.
+    """
+    return (
+        s.device, s.hetero, s.tensor_parallel, s.pipeline_parallel,
+        s.micro_batch_size, s.sequence_parallel, s.use_flash_attn,
+        s.use_distributed_optimizer, s.offload_optimizer,
+        s.recompute_granularity, s.expert_parallel,
+        s.data_parallel if s.use_distributed_optimizer else 0,
+    )
+
+
+class FilterBank:
+    """Rule + memory filters with shared, memoized evaluations.
+
+    One bank is created per search and threaded through every candidate
+    stream the planner lowers a spec into, so repeated filter inputs across
+    sweep counts / placement cells are evaluated exactly once. Verdicts are
+    identical to the unmemoized filters by construction (the memo key is the
+    full projection of the fields each filter reads).
+    """
+
+    def __init__(self, arch: ModelArch, seq: int,
+                 rules: Sequence[str] = DEFAULT_RULES):
+        self.arch = arch
+        self.rule_filter = RuleFilter(rules)
+        self.mem_filter = MemoryFilter(seq=seq)
+        self._rule_memo: dict = {}
+        self._mem_memo: dict = {}
+        # resolve each referenced $var to a strategy getter; a rule set that
+        # reads a name we cannot resolve falls back to unmemoized evaluation
+        referenced = set()
+        for r in self.rule_filter.rules:
+            referenced |= _referenced_vars(r.ast)
+        referenced -= _ARCH_ENV_KEYS  # constant for this bank's arch
+        try:
+            self._rule_getters: Optional[list] = [
+                _STRATEGY_ENV_GETTERS[name] for name in sorted(referenced)
+            ]
+        except KeyError:
+            self._rule_getters = None
+
+    def rules_ok(self, s: ParallelStrategy) -> bool:
+        if self._rule_getters is None:
+            return self.rule_filter.is_valid(strategy_env(self.arch, s))
+        key = tuple(g(s) for g in self._rule_getters)
+        try:
+            return self._rule_memo[key]
+        except KeyError:
+            ok = self.rule_filter.is_valid(strategy_env(self.arch, s))
+            self._rule_memo[key] = ok
+            return ok
+
+    def memory_ok(self, s: ParallelStrategy) -> bool:
+        key = _memory_key(s)
+        try:
+            return self._mem_memo[key]
+        except KeyError:
+            ok = self.mem_filter.is_valid(self.arch, s)
+            self._mem_memo[key] = ok
+            return ok
 
 
 def iter_raw_strategies(
@@ -84,13 +202,17 @@ def iter_valid_strategies(
     rules: Sequence[str] = DEFAULT_RULES,
     space: Optional[dict[str, list]] = None,
     counts: Optional[SearchCounts] = None,
+    filters: Optional[FilterBank] = None,
 ) -> Iterable[ParallelStrategy]:
     """Streaming S_valid (Eq. 21): yields survivors of the full filter
     funnel while mutating ``counts`` in place. The batched engine consumes
     this lazily so mode-3's device-count sweep never holds the whole valid
-    set in memory; ``generate_strategies`` is the materializing wrapper."""
-    rule_filter = RuleFilter(rules)
-    mem_filter = MemoryFilter(seq=seq)
+    set in memory; ``generate_strategies`` is the materializing wrapper.
+
+    Pass a shared :class:`FilterBank` as ``filters`` to reuse memoized
+    rule/memory verdicts across several streams of one search (``rules`` is
+    ignored then — the bank carries its own rule set)."""
+    bank = filters if filters is not None else FilterBank(arch, seq, rules)
     if counts is None:
         counts = SearchCounts()
     for gpu in gpus:
@@ -99,10 +221,10 @@ def iter_valid_strategies(
             if not s.is_divisible(arch, global_batch):
                 continue
             counts.divisible += 1
-            if not rule_filter.is_valid(strategy_env(arch, s)):
+            if not bank.rules_ok(s):
                 continue
             counts.after_rules += 1
-            if not mem_filter.is_valid(arch, s):
+            if not bank.memory_ok(s):
                 continue
             counts.after_memory += 1
             yield s

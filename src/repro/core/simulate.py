@@ -156,6 +156,23 @@ class CostSimulator:
         per_stage = [self.stage_times(c, s) for c in censuses]
         return compose_sim_result(s, per_stage, global_batch=global_batch, seq=seq)
 
+    def simulate_batch(
+        self,
+        arch: ModelArch,
+        strategies: Sequence[ParallelStrategy],
+        *,
+        global_batch: int,
+        seq: int,
+    ) -> list[SimResult]:
+        """Reference batch evaluation: one :meth:`simulate` per strategy.
+
+        Same signature as the batched engine so the streaming evaluator
+        (:func:`repro.core.batch.stream_evaluate`) can run either one."""
+        return [
+            self.simulate(arch, s, global_batch=global_batch, seq=seq)
+            for s in strategies
+        ]
+
     @staticmethod
     def _money_per_hour(s: ParallelStrategy) -> float:
         return strategy_money_per_hour(s)

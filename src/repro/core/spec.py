@@ -1,0 +1,214 @@
+"""Declarative search specification (the unified entry point's input).
+
+A :class:`SearchSpec` is a serializable description of one Astra search:
+*what* to search (arch + workload), *over which pool* (one of the three
+``PoolSpec`` shapes, unifying the paper's three modes), *optimizing what*
+(an :class:`ObjectiveSpec`), under which space/limits. The planner
+(:mod:`repro.core.planner`) lowers a spec into tagged candidate streams and
+the streaming evaluator scores them — no mode-specific code paths.
+
+Specs round-trip through JSON (``to_json`` / ``from_json``) so a search can
+be shipped to a service, queued, or replayed byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Union
+
+from repro.core.arch import ModelArch
+from repro.core.hetero import HeteroPool
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """The training workload a strategy is scored on."""
+
+    global_batch: int
+    seq: int
+    train_tokens: float = 1e9  # token budget for the Eq. 32 money cost
+
+
+# ---------------------------------------------------------------------------
+# pool union: the paper's three GPU-pool shapes as one declarative type
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FixedPool:
+    """Mode 1: one device type at a fixed count."""
+
+    device: str
+    num_devices: int
+
+    kind = "fixed"
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroCaps:
+    """Mode 2: total budget + per-type caps (paper Eq. 2).
+
+    ``fast`` picks the water-filling placement solver over the paper's full
+    enumeration; ``prune_slack`` bounds the per-composition water-filling
+    minimax and skips dominated compositions (``None`` disables pruning).
+    """
+
+    total_devices: int
+    type_caps: tuple[tuple[str, int], ...]
+    fast: bool = True
+    prune_slack: Optional[float] = 1.5
+
+    kind = "hetero"
+
+    def to_pool(self) -> HeteroPool:
+        return HeteroPool(
+            total_devices=self.total_devices, type_caps=self.type_caps
+        )
+
+    @staticmethod
+    def of(pool: HeteroPool, *, fast: bool = True,
+           prune_slack: Optional[float] = 1.5) -> "HeteroCaps":
+        return HeteroCaps(
+            total_devices=pool.total_devices, type_caps=pool.type_caps,
+            fast=fast, prune_slack=prune_slack,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSweep:
+    """Mode 3: device type(s) x power-of-two count sweep up to a cap."""
+
+    devices: tuple[str, ...]
+    max_devices: int
+    min_devices: int = 2
+
+    kind = "sweep"
+
+    def counts(self) -> list[int]:
+        out, n = [], self.min_devices
+        while n <= self.max_devices:
+            out.append(n)
+            n *= 2
+        return out
+
+
+PoolSpec = Union[FixedPool, HeteroCaps, DeviceSweep]
+_POOL_KINDS = {"fixed": FixedPool, "hetero": HeteroCaps, "sweep": DeviceSweep}
+
+
+# ---------------------------------------------------------------------------
+# objective + limits
+# ---------------------------------------------------------------------------
+
+OBJECTIVE_KINDS = ("throughput", "money", "pareto")
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    """What the search optimizes.
+
+    ``throughput`` — fastest plan (Eq. 33 ranking).
+    ``money``      — cheapest plan for the token budget (optionally under
+                     ``budget`` dollars).
+    ``pareto``     — keep the Eq. 30-31 non-dominated pool; the best pick is
+                     the fastest pool member within ``budget`` (the paper's
+                     money-limit mode; ``budget=None`` means unlimited).
+    """
+
+    kind: str = "throughput"
+    budget: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in OBJECTIVE_KINDS:
+            raise ValueError(
+                f"unknown objective {self.kind!r}; expected one of {OBJECTIVE_KINDS}"
+            )
+
+    @staticmethod
+    def throughput() -> "ObjectiveSpec":
+        return ObjectiveSpec("throughput")
+
+    @staticmethod
+    def money(budget: Optional[float] = None) -> "ObjectiveSpec":
+        return ObjectiveSpec("money", budget)
+
+    @staticmethod
+    def pareto(budget: Optional[float] = None) -> "ObjectiveSpec":
+        return ObjectiveSpec("pareto", budget)
+
+
+@dataclasses.dataclass(frozen=True)
+class Limits:
+    """Search-side resource knobs (all optional)."""
+
+    top_k: int = 5
+    chunk_size: Optional[int] = None  # None -> the facade's default
+    max_candidates: Optional[int] = None  # cap on candidates streamed
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """One declarative Astra search. See the module docstring."""
+
+    arch: ModelArch
+    pool: PoolSpec
+    workload: Workload
+    objective: ObjectiveSpec = ObjectiveSpec()
+    space: Optional[dict] = None  # parameter-space override (Eq. 9), mode 1/3
+    hetero_base: Optional[dict] = None  # base strategy fields, mode 2
+    limits: Limits = Limits()
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        pool_d = dataclasses.asdict(self.pool)
+        pool_d["kind"] = self.pool.kind
+        return {
+            "version": 1,
+            "arch": dataclasses.asdict(self.arch),
+            "pool": pool_d,
+            "workload": dataclasses.asdict(self.workload),
+            "objective": dataclasses.asdict(self.objective),
+            "space": self.space,
+            "hetero_base": self.hetero_base,
+            "limits": dataclasses.asdict(self.limits),
+        }
+
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchSpec":
+        version = d.get("version", 1)
+        if version != 1:
+            raise ValueError(f"unsupported SearchSpec version {version!r}")
+        pool_d = dict(d["pool"])
+        kind = pool_d.pop("kind")
+        try:
+            pool_cls = _POOL_KINDS[kind]
+        except KeyError:
+            raise ValueError(
+                f"unknown pool kind {kind!r}; expected one of {sorted(_POOL_KINDS)}"
+            ) from None
+        if pool_cls is HeteroCaps:
+            pool_d["type_caps"] = tuple(
+                (str(dev), int(cap)) for dev, cap in pool_d["type_caps"]
+            )
+        if pool_cls is DeviceSweep:
+            pool_d["devices"] = tuple(pool_d["devices"])
+        pool = pool_cls(**pool_d)
+        return cls(
+            arch=ModelArch(**d["arch"]),
+            pool=pool,
+            workload=Workload(**d["workload"]),
+            objective=ObjectiveSpec(**d["objective"]),
+            space=d.get("space"),
+            hetero_base=d.get("hetero_base"),
+            limits=Limits(**d.get("limits", {})),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "SearchSpec":
+        return cls.from_dict(json.loads(text))

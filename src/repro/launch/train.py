@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.calibration.fit import AnalyticEtaModel, load_or_train
 from repro.checkpoint import CheckpointManager
 from repro.configs import PAPER_MODELS, get_arch, get_reduced
-from repro.core import Astra
+from repro.core import Astra, FixedPool, SearchSpec, Workload
 from repro.data import MarkovCorpus, SyntheticPipeline
 from repro.launch.mesh import make_mesh
 from repro.models.lm import ModelCfg, init_params
@@ -40,10 +40,11 @@ def pick_strategy(arch, num_devices: int, global_batch: int, seq: int):
     except Exception:
         eta = AnalyticEtaModel()
     astra = Astra(eta)
-    report = astra.search_homogeneous(
-        arch, "tpu-v5e", max(num_devices, 1),
-        global_batch=global_batch, seq=seq,
-    )
+    report = astra.search(SearchSpec(
+        arch=arch,
+        pool=FixedPool("tpu-v5e", max(num_devices, 1)),
+        workload=Workload(global_batch, seq),
+    ))
     return report.best
 
 

@@ -216,6 +216,33 @@ def test_cache_trim_across_batches(llama7b, monkeypatch):
         assert b.step_time == pytest.approx(a.step_time, rel=REL)
 
 
+def test_op_table_trim_across_batches(llama7b, monkeypatch):
+    """The persistent op->time tables must stay bounded across batches (a
+    long-lived search service) without changing results."""
+    import repro.core.batch as batch_mod
+
+    monkeypatch.setattr(batch_mod, "_OP_TABLE_MAX", 8)
+    strategies, _ = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], GB, SEQ
+    )
+    strategies = strategies[:40]
+    sim = BatchedCostSimulator(AnalyticEtaModel())
+    ref = BatchedCostSimulator(AnalyticEtaModel())
+    expect = ref.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    got = []
+    for i in range(0, len(strategies), 5):
+        got.extend(
+            sim.simulate_batch(
+                llama7b, strategies[i:i + 5], global_batch=GB, seq=SEQ
+            )
+        )
+    for a, b in zip(expect, got):
+        assert b.step_time == pytest.approx(a.step_time, rel=REL)
+    # the trim actually fired: the chunked run's tables hold only the ops
+    # resolved since the last trim, not the whole search's distinct-op set
+    assert len(sim._comp.index) < len(ref._comp.index)
+
+
 def test_mode2_counts_are_honest(llama7b):
     astra = Astra(AnalyticEtaModel())
     pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))

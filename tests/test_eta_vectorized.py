@@ -1,0 +1,102 @@
+"""Vectorized analytic-prior / featurization parity with the scalar path.
+
+The batched engine resolves whole op chunks through ``compute_times`` /
+``comm_times`` in one call; these tests pin the vectorized implementations
+to the scalar reference definitions *exactly* (same IEEE operations in the
+same order), so cold-cache chunks get the NumPy fast path without any
+step-time drift.
+"""
+import numpy as np
+import pytest
+
+from repro.calibration.fit import (
+    AnalyticEtaModel,
+    sample_comm_ops,
+    sample_compute_ops,
+)
+from repro.core.opspec import CommOp, featurize_comm, featurize_compute
+from repro.hw.catalog import DEVICES
+
+
+@pytest.fixture(scope="module")
+def ops(rng=None):
+    rng = np.random.default_rng(7)
+    devices = list(DEVICES)
+    return sample_compute_ops(rng, 400, devices), sample_comm_ops(rng, 400, devices)
+
+
+def test_analytic_compute_times_match_scalar_exactly(ops):
+    comp, _ = ops
+    prior = AnalyticEtaModel()
+    vec = prior.compute_times(comp)
+    ref = np.array([prior.compute_time(op) for op in comp])
+    assert np.array_equal(vec, ref)
+
+
+def test_analytic_comm_times_match_scalar_exactly(ops):
+    _, comm = ops
+    prior = AnalyticEtaModel()
+    vec = prior.comm_times(comm)
+    ref = np.array([prior.comm_time(op) for op in comm])
+    assert np.array_equal(vec, ref)
+
+
+def test_comm_times_group_one_is_zero():
+    prior = AnalyticEtaModel()
+    op = CommOp("all_reduce", "A800", 1, 1 << 20, intra_node=True)
+    assert prior.comm_time(op) == 0.0
+    assert prior.comm_times([op]).tolist() == [0.0]
+
+
+def test_eta_views_match_scalar(ops):
+    comp, comm = ops
+    prior = AnalyticEtaModel()
+    ec_ref = np.array([
+        np.clip(
+            op.flops / (DEVICES[op.device].peak_flops_bf16 * prior.compute_time(op)),
+            1e-9, 1.0,
+        )
+        for op in comp
+    ])
+    assert np.array_equal(prior.eta_compute(comp), ec_ref)
+    # comm eta: wire/(bw*t), defined as 1.0 when t == 0
+    from repro.hw.topology import collective_bytes_on_wire
+
+    em_ref = []
+    for op in comm:
+        wire = collective_bytes_on_wire(op.kind, op.group, op.payload_bytes)
+        dev = DEVICES[op.device]
+        bw = dev.intra_node_bw if op.intra_node else dev.inter_node_bw
+        t = prior.comm_time(op)
+        em_ref.append(np.clip(wire / (bw * t), 1e-9, 1.0) if t > 0 else 1.0)
+    assert np.array_equal(prior.eta_comm(comm), np.array(em_ref))
+
+
+def test_featurize_matches_per_op_features_exactly(ops):
+    comp, comm = ops
+    assert np.array_equal(featurize_compute(comp), np.stack([o.features() for o in comp]))
+    assert np.array_equal(featurize_comm(comm), np.stack([o.features() for o in comm]))
+
+
+def test_featurize_empty():
+    assert featurize_compute([]).shape == (0, 13)
+    assert featurize_comm([]).shape == (0, 7)
+    prior = AnalyticEtaModel()
+    assert prior.compute_times([]).shape == (0,)
+    assert prior.comm_times([]).shape == (0,)
+
+
+def test_batched_engine_uses_vectorized_prior_with_identical_results(llama7b):
+    """The op-time table should take the batch path for AnalyticEtaModel and
+    produce the same step times as scalar per-op prediction."""
+    from repro.core.batch import BatchedCostSimulator
+    from repro.core.params import ParallelStrategy
+    from repro.core.simulate import CostSimulator
+
+    prior = AnalyticEtaModel()
+    assert hasattr(prior, "compute_times")  # batch path available
+    s = ParallelStrategy(device="A800", num_devices=64, tensor_parallel=2,
+                         pipeline_parallel=4, micro_batch_size=2)
+    rb = BatchedCostSimulator(prior).simulate(llama7b, s, global_batch=128, seq=2048)
+    ra = CostSimulator(prior).simulate(llama7b, s, global_batch=128, seq=2048)
+    assert rb.step_time == pytest.approx(ra.step_time, rel=1e-12)

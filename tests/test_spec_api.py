@@ -1,0 +1,377 @@
+"""SearchSpec -> plan -> stream pipeline: golden parity with the legacy
+facades, JSON round-trips, deprecation semantics, streaming bounds, and the
+mode-2 composition pruning."""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import (
+    Astra,
+    DeviceSweep,
+    FixedPool,
+    GpuConfig,
+    HeteroCaps,
+    HeteroPool,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
+from repro.core.api import _DEPRECATION_WARNED
+from repro.core.batch import BatchedCostSimulator
+from repro.core.hetero import balanced_placements_for, iter_hetero_strategies
+from repro.core.objectives import (
+    MoneyObjective,
+    ParetoObjective,
+    ThroughputObjective,
+    make_objective,
+)
+from repro.core.pareto import (
+    CostedStrategy,
+    money_cost,
+    optimal_pool,
+    pick_within_budget,
+    sort_strategies,
+)
+from repro.core.planner import build_plan
+from repro.core.search import FilterBank, generate_strategies
+
+GB, SEQ = 128, 2048
+POOL = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
+
+
+def _astra() -> Astra:
+    return Astra(AnalyticEtaModel())
+
+
+def _spec_mode1(llama7b, **limits) -> SearchSpec:
+    return SearchSpec(
+        arch=llama7b,
+        pool=FixedPool("A800", 64),
+        workload=Workload(GB, SEQ),
+        limits=Limits(**limits) if limits else Limits(),
+    )
+
+
+def _assert_reports_equal(a, b, *, check_pool=True):
+    assert a.mode == b.mode
+    assert a.best == b.best
+    assert [c.strategy for c in a.top] == [c.strategy for c in b.top]
+    ca, cb = a.counts, b.counts
+    assert (ca.generated, ca.divisible, ca.after_rules, ca.after_memory) == (
+        cb.generated, cb.divisible, cb.after_rules, cb.after_memory
+    )
+    if check_pool:
+        assert [c.strategy for c in a.pool] == [c.strategy for c in b.pool]
+
+
+# ---------------------------------------------------------------------------
+# golden parity: legacy facade == SearchSpec equivalent, all three modes
+# ---------------------------------------------------------------------------
+
+def test_mode1_spec_matches_legacy_facade(llama7b):
+    astra = _astra()
+    legacy = astra.search_homogeneous(llama7b, "A800", 64, global_batch=GB, seq=SEQ)
+    via_spec = _astra().search(_spec_mode1(llama7b))
+    _assert_reports_equal(legacy, via_spec)
+
+
+def test_mode2_spec_matches_legacy_facade(llama7b):
+    # the shim keeps the legacy exhaustive sweep (prune_slack=None), so the
+    # equivalent spec must too; pruning is opt-in via HeteroCaps directly
+    astra = _astra()
+    legacy = astra.search_heterogeneous(llama7b, POOL, global_batch=GB, seq=SEQ)
+    via_spec = _astra().search(
+        SearchSpec(arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=None),
+                   workload=Workload(GB, SEQ))
+    )
+    _assert_reports_equal(legacy, via_spec)
+    assert via_spec.best is not None and via_spec.best.hetero is not None
+
+
+def test_mode3_spec_matches_legacy_facade(llama7b):
+    astra = _astra()
+    legacy = astra.search_cost(
+        llama7b, ["A800", "H100"], 64, global_batch=GB, seq=SEQ,
+        money_limit=None, top_k=3,
+    )
+    via_spec = _astra().search(
+        SearchSpec(
+            arch=llama7b, pool=DeviceSweep(("A800", "H100"), 64),
+            workload=Workload(GB, SEQ), objective=ObjectiveSpec.pareto(None),
+            limits=Limits(top_k=3),
+        )
+    )
+    _assert_reports_equal(legacy, via_spec)
+    assert via_spec.pool
+
+
+# ---------------------------------------------------------------------------
+# golden parity: the streamed pipeline == a hand-rolled materialize+sort
+# reference built from the primitives (guards the whole redesign, not just
+# the shim delegation)
+# ---------------------------------------------------------------------------
+
+def test_mode1_pipeline_matches_materialized_reference(llama7b):
+    report = _astra().search(_spec_mode1(llama7b, top_k=5))
+
+    strategies, counts = generate_strategies(
+        llama7b, [GpuConfig("A800", 64)], GB, SEQ
+    )
+    engine = BatchedCostSimulator(AnalyticEtaModel())
+    sims = engine.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    costed = [
+        CostedStrategy(strategy=s, sim=r, throughput=r.throughput_tokens,
+                       money=money_cost(r, 1e9))
+        for s, r in zip(strategies, sims)
+    ]
+    ranked = sort_strategies(costed)
+    assert report.best == ranked[0].strategy
+    assert [c.strategy for c in report.top] == [c.strategy for c in ranked[:5]]
+    assert report.counts.generated == counts.generated
+    assert report.counts.after_memory == counts.after_memory == report.evaluated
+
+
+def test_mode3_pipeline_matches_materialized_reference(llama7b):
+    budget = 120.0
+    report = _astra().search(
+        SearchSpec(
+            arch=llama7b, pool=DeviceSweep(("A800", "H100"), 64),
+            workload=Workload(GB, SEQ), objective=ObjectiveSpec.pareto(budget),
+        )
+    )
+    gpus = [GpuConfig(d, n) for d in ("A800", "H100") for n in (2, 4, 8, 16, 32, 64)]
+    strategies, _ = generate_strategies(llama7b, gpus, GB, SEQ)
+    engine = BatchedCostSimulator(AnalyticEtaModel())
+    sims = engine.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    costed = [
+        CostedStrategy(strategy=s, sim=r, throughput=r.throughput_tokens,
+                       money=money_cost(r, 1e9))
+        for s, r in zip(strategies, sims)
+    ]
+    pool = optimal_pool(costed)
+    assert [c.strategy for c in report.pool] == [c.strategy for c in pool]
+    best = pick_within_budget(pool, budget)
+    assert report.best == (best.strategy if best else None)
+
+
+def test_scalar_and_batched_engines_agree_via_spec(llama7b):
+    space = {
+        "tensor_parallel": [2, 4],
+        "pipeline_parallel": [2, 4],
+        "micro_batch_size": [1, 2],
+        "use_distributed_optimizer": [True],
+        "recompute_granularity": ["none", "full"],
+    }
+    spec = dataclasses.replace(_spec_mode1(llama7b), space=space)
+    r_fast = Astra(AnalyticEtaModel(), use_batched=True).search(spec)
+    r_ref = Astra(AnalyticEtaModel(), use_batched=False).search(spec)
+    assert r_fast.best == r_ref.best
+    assert [c.strategy for c in r_fast.top] == [c.strategy for c in r_ref.top]
+    assert r_fast.best_sim.step_time == pytest.approx(
+        r_ref.best_sim.step_time, rel=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_pool", [
+    lambda: FixedPool("A800", 64),
+    lambda: HeteroCaps(32, (("A800", 16), ("H100", 16)), fast=True,
+                       prune_slack=1.5),
+    lambda: DeviceSweep(("A800", "H100"), 128, min_devices=4),
+])
+def test_spec_json_round_trip(llama7b, make_pool):
+    spec = SearchSpec(
+        arch=llama7b,
+        pool=make_pool(),
+        workload=Workload(512, 4096, train_tokens=2e9),
+        objective=ObjectiveSpec.pareto(80.0),
+        space={"tensor_parallel": [1, 2]},
+        hetero_base={"use_flash_attn": True},
+        limits=Limits(top_k=7, chunk_size=128, max_candidates=1000),
+    )
+    text = spec.to_json()
+    json.loads(text)  # valid JSON
+    assert SearchSpec.from_json(text) == spec
+
+
+def test_spec_json_round_trip_search_identical(llama7b):
+    spec = _spec_mode1(llama7b)
+    r1 = _astra().search(spec)
+    r2 = _astra().search(SearchSpec.from_json(spec.to_json()))
+    _assert_reports_equal(r1, r2)
+
+
+def test_spec_rejects_unknown_kinds(llama7b):
+    with pytest.raises(ValueError):
+        ObjectiveSpec("latency")
+    d = _spec_mode1(llama7b).to_dict()
+    d["pool"]["kind"] = "quantum"
+    with pytest.raises(ValueError):
+        SearchSpec.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# deprecation semantics
+# ---------------------------------------------------------------------------
+
+def test_legacy_shims_warn_futurewarning_exactly_once(llama7b):
+    _DEPRECATION_WARNED.discard("search_homogeneous")
+    astra = _astra()
+    kw = dict(global_batch=GB, seq=SEQ)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        astra.search_homogeneous(llama7b, "A800", 32, **kw)
+        astra.search_homogeneous(llama7b, "A800", 32, **kw)
+    future = [w for w in caught if issubclass(w.category, FutureWarning)]
+    assert len(future) == 1
+    assert "SearchSpec" in str(future[0].message)
+
+
+def test_spec_entry_point_does_not_warn(llama7b):
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _astra().search(_spec_mode1(llama7b))
+    assert not [w for w in caught if issubclass(w.category, FutureWarning)]
+
+
+# ---------------------------------------------------------------------------
+# streaming bounds
+# ---------------------------------------------------------------------------
+
+def test_mode2_streams_without_materializing(llama7b, monkeypatch):
+    """Mode 2 must hand the evaluator chunks bounded by chunk_size — never
+    the whole candidate list."""
+    chunk_size = 16
+    seen = []
+    orig = BatchedCostSimulator.simulate_batch
+
+    def spy(self, arch, strategies, **kw):
+        seen.append(len(strategies))
+        return orig(self, arch, strategies, **kw)
+
+    monkeypatch.setattr(BatchedCostSimulator, "simulate_batch", spy)
+    report = _astra().search(
+        SearchSpec(
+            arch=llama7b, pool=HeteroCaps.of(POOL),
+            workload=Workload(GB, SEQ), limits=Limits(chunk_size=chunk_size),
+        )
+    )
+    assert report.best is not None
+    assert seen and max(seen) <= chunk_size
+    assert sum(seen) == report.evaluated == report.counts.after_memory
+
+
+def test_max_candidates_limit_caps_evaluation(llama7b):
+    capped = _astra().search(_spec_mode1(llama7b, max_candidates=100))
+    assert capped.evaluated == 100
+    assert capped.counts.after_memory == 100  # funnel reflects the cutoff
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+def test_make_objective_dispatch():
+    assert isinstance(make_objective(ObjectiveSpec.throughput()), ThroughputObjective)
+    assert isinstance(make_objective(ObjectiveSpec.money(5.0)), MoneyObjective)
+    assert isinstance(make_objective(ObjectiveSpec.pareto(5.0)), ParetoObjective)
+
+
+def test_money_objective_picks_cheapest(llama7b):
+    thr = _astra().search(_spec_mode1(llama7b))
+    cheap = _astra().search(
+        dataclasses.replace(_spec_mode1(llama7b), objective=ObjectiveSpec.money())
+    )
+    best_thr = thr.top[0]
+    best_cheap = cheap.top[0]
+    assert best_cheap.money <= best_thr.money
+    # money ranking is ascending in cost
+    monies = [c.money for c in cheap.top]
+    assert monies == sorted(monies)
+    # cheapest pick must sit on the Pareto pool
+    assert cheap.pool
+    assert min(c.money for c in cheap.pool) == pytest.approx(best_cheap.money)
+
+
+# ---------------------------------------------------------------------------
+# mode-2 composition pruning
+# ---------------------------------------------------------------------------
+
+def test_pruned_placements_are_subset_and_keep_best(llama7b):
+    astra_full = _astra()
+    astra_pruned = _astra()
+    w = Workload(GB, SEQ)
+    full = astra_full.search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=None), workload=w))
+    pruned = astra_pruned.search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=1.5), workload=w))
+    assert pruned.counts.generated < full.counts.generated
+    assert pruned.best == full.best
+    assert pruned.best_sim.throughput_tokens == pytest.approx(
+        full.best_sim.throughput_tokens, rel=1e-9
+    )
+
+
+def test_balanced_placements_cell_cache_prunes_dominated(llama7b):
+    full = balanced_placements_for(
+        llama7b, POOL, pipeline_parallel=4, devices_per_stage=4,
+        prune_slack=None,
+    )
+    pruned = balanced_placements_for(
+        llama7b, POOL, pipeline_parallel=4, devices_per_stage=4,
+        prune_slack=1.5,
+    )
+    assert set(pruned) <= set(full)
+    assert 0 < len(pruned) <= len(full)
+    # every placement still spans the full layer budget
+    for pl in pruned:
+        assert pl.total_layers == llama7b.num_layers
+
+
+def test_hetero_funnel_counts_stay_honest_under_pruning(llama7b):
+    """generated must equal what the generator actually emitted."""
+    emitted = sum(
+        1 for _ in iter_hetero_strategies(
+            llama7b, POOL, GB, fast=True, prune_slack=1.5
+        )
+    )
+    report = _astra().search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=1.5),
+        workload=Workload(GB, SEQ),
+    ))
+    assert report.counts.generated == emitted
+    c = report.counts
+    assert c.generated == c.divisible >= c.after_rules >= c.after_memory > 0
+
+
+# ---------------------------------------------------------------------------
+# filter bank
+# ---------------------------------------------------------------------------
+
+def test_filter_bank_memoizes_without_changing_verdicts(llama7b):
+    from repro.core.memory import MemoryFilter
+    from repro.core.rules import DEFAULT_RULES, RuleFilter
+    from repro.core.search import iter_raw_strategies, strategy_env
+
+    bank = FilterBank(llama7b, SEQ, DEFAULT_RULES)
+    rule_ref = RuleFilter(DEFAULT_RULES)
+    mem_ref = MemoryFilter(seq=SEQ)
+    checked = 0
+    for gpu in (GpuConfig("A800", 32), GpuConfig("A800", 64)):
+        for s in iter_raw_strategies(llama7b, gpu, GB):
+            if not s.is_divisible(llama7b, GB):
+                continue
+            assert bank.rules_ok(s) == rule_ref.is_valid(strategy_env(llama7b, s))
+            assert bank.memory_ok(s) == mem_ref.is_valid(llama7b, s)
+            checked += 1
+    assert checked > 500
+    # memoization actually deduplicates: far fewer distinct keys than checks
+    assert len(bank._mem_memo) < checked
+    assert len(bank._rule_memo) < checked
