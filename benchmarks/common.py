@@ -23,6 +23,7 @@ from repro.core import (
     FixedPool,
     ModelArch,
     ParallelStrategy,
+    SearchReport,
     SearchSpec,
     Workload,
 )
@@ -136,12 +137,15 @@ def astra_throughput_on_truth(
     astra: Astra, arch: ModelArch, device: str, num_devices: int,
     global_batch: int, seq: int, sim: Optional[CostSimulator] = None,
 ):
-    """Search with the GBT model; score the winner on the ground truth."""
-    report = astra.search(SearchSpec(
+    """Search with the GBT model; score the winner on the ground truth.
+
+    The report is consumed through the wire format (to_json/from_json), so
+    the benchmarked path is the same one the search service serves."""
+    report = SearchReport.from_json(astra.search(SearchSpec(
         arch=arch,
         pool=FixedPool(device, num_devices),
         workload=Workload(global_batch, seq),
-    ))
+    )).to_json())
     sim = sim or truth_simulator()
     if report.best is None:
         return report, 0.0

@@ -92,3 +92,45 @@ cb = cheap.best
 print(f"\n[sweep+money] cheapest plan: {cb.device} x{cb.num_devices} at "
       f"${cheap.top[0].money:.2f} per 1B tokens "
       f"({cheap.top[0].throughput:,.0f} tok/s)")
+
+# ---- latency SLO: cheapest plan whose step time meets the deadline --------
+slo = rep.best_sim.step_time * 1.5  # give the scheduler 50% headroom
+slo_rep = astra.search(SearchSpec(
+    arch=llama7b,
+    pool=FixedPool("A800", 64),
+    workload=workload,
+    objective=ObjectiveSpec.latency(slo_seconds=slo),
+))
+sb = slo_rep.best
+print(f"\n[latency slo] step <= {slo:.2f}s: "
+      f"tp={sb.tensor_parallel} pp={sb.pipeline_parallel} "
+      f"step {slo_rep.best_sim.step_time:.2f}s, "
+      f"${slo_rep.top[0].money:.2f} per 1B tokens")
+
+# ---- the service flow: spec -> POST -> cached report ----------------------
+# Both ends of the pipeline are wire formats. A spec has a canonical
+# identity — insensitive to JSON key order and no-op defaults — that a
+# result cache keys on:
+spec = SearchSpec(arch=llama7b, pool=FixedPool("A800", 64), workload=workload)
+print(f"\n[service] spec cache key: {spec.cache_key()[:16]}...")
+
+# SearchService wraps Astra with that cache (plus single-flight dedup of
+# concurrent identical specs). Every report it returns passed through
+# SearchReport.to_json/from_json — the serialized path is the only path:
+from repro.serve import SearchService
+
+service = SearchService(astra)
+r_cold = service.search(spec)  # runs the search, caches the report JSON
+r_warm = service.search(spec)  # served from cache, bit-identical
+assert r_warm == r_cold
+print(f"[service] warm hit == cold report; "
+      f"stats: {service.stats_dict()['hits']} hit / "
+      f"{service.stats_dict()['misses']} miss")
+
+# The same service speaks HTTP (see examples/README.md for the contract):
+#     python -m repro.serve.search_service serve --port 8123
+#     python -m repro.serve.search_service search \
+#         --url http://localhost:8123 --spec spec.json
+# and a serving host deploys the strategy it answers with:
+#     python examples/serve_batched.py --search-spec spec.json \
+#         --search-url http://localhost:8123

@@ -3,10 +3,14 @@
     PYTHONPATH=src python examples/serve_batched.py --arch qwen3-8b --tokens 24
 
 With ``--search-spec spec.json`` the server first replays a serialized
-:class:`repro.core.SearchSpec` (e.g. produced by ``SearchSpec.to_json`` on
-a control plane) through ``Astra.search`` and reports the strategy it would
-deploy — the JSON spec is the wire format between the search service and
-the serving fleet.
+:class:`repro.core.SearchSpec` through the spec-keyed
+:class:`repro.serve.SearchService` and reports the strategy it would deploy
+— both the spec and the report are wire formats (see examples/README.md for
+the endpoint contract), so the replayed report is exactly what a control
+plane would have served. Pass ``--search-url http://host:port`` to fetch
+the report from a remote service (``python -m repro.serve.search_service
+serve``) instead of searching in-process; repeated deploys of the same spec
+then hit the fleet-wide cache.
 """
 import argparse
 import os
@@ -24,15 +28,30 @@ from repro.models import lm
 from repro.serve import ServeEngine
 
 
-def pick_strategy_from_spec(path: str):
-    """Replay a serialized SearchSpec and return its search report."""
-    from repro.calibration.fit import load_or_train
-    from repro.core import Astra, SearchSpec
+def pick_strategy_from_spec(path: str, url: str = None):
+    """Replay a serialized SearchSpec through the search service.
+
+    In-process by default; with ``url`` the spec is POSTed to a remote
+    service. Either way the report arrives through the wire format."""
+    from repro.core import SearchSpec
 
     with open(path) as f:
-        spec = SearchSpec.from_json(f.read())
+        spec_json = f.read()
+    spec = SearchSpec.from_json(spec_json)
+
+    if url:
+        from repro.serve.search_service import post_spec
+
+        key, report, cached = post_spec(url, spec_json)
+        print(f"served by {url} (key={key} cached={cached})")
+        return spec, report
+
+    from repro.calibration.fit import load_or_train
+    from repro.core import Astra
+    from repro.serve import SearchService
+
     eta, _ = load_or_train()
-    return spec, Astra(eta).search(spec)
+    return spec, SearchService(Astra(eta)).search(spec)
 
 
 def main():
@@ -45,10 +64,14 @@ def main():
     ap.add_argument("--search-spec", default=None, metavar="SPEC_JSON",
                     help="replay a serialized SearchSpec and report the "
                          "strategy this deployment would use")
+    ap.add_argument("--search-url", default=None, metavar="URL",
+                    help="fetch the report from a running search service "
+                         "instead of searching in-process")
     args = ap.parse_args()
 
     if args.search_spec:
-        spec, report = pick_strategy_from_spec(args.search_spec)
+        spec, report = pick_strategy_from_spec(args.search_spec,
+                                               url=args.search_url)
         b = report.best
         if b is None:
             print(f"search spec {args.search_spec}: no feasible strategy")

@@ -12,9 +12,12 @@ Layout mirrors the paper's pipeline (Fig. 2):
   hetero.py   — heterogeneous placement search (Eq. 23)
   pareto.py   — money-limit search (Eq. 29-33) + incremental ranking
   spec.py     — declarative SearchSpec (pool union, objective, workload)
+                + canonical identity (canonicalize / cache_key)
   planner.py  — spec -> tagged candidate streams over a shared FilterBank
   objectives.py — pluggable ranking / budget selection
-  api.py      — Astra.search(spec): the unified pipeline (+ legacy shims)
+  wire.py     — bit-exact JSON float encoding + versioned envelopes
+  api.py      — Astra.search(spec): the unified pipeline; SearchReport is
+                the wire-exact result (to_json/from_json)
 """
 from repro.core.api import Astra, SearchReport
 from repro.core.batch import BatchedCostSimulator

@@ -1,4 +1,4 @@
-"""Astra's top-level API: one declarative search pipeline.
+"""Astra's top-level API: one declarative, wire-native search pipeline.
 
 The primary entry point is :meth:`Astra.search`, which takes a
 :class:`~repro.core.spec.SearchSpec` — a serializable description of the
@@ -17,6 +17,34 @@ The paper's three modes are three pool shapes of the same spec:
                    + ``ObjectiveSpec.pareto(budget)``     -> best affordable
                                                              strategy
 
+Both ends of the pipeline are wire formats. The input side serializes via
+``SearchSpec.to_json/from_json`` and has a canonical identity
+(:meth:`~repro.core.spec.SearchSpec.cache_key` — a content hash insensitive
+to JSON key order and no-op defaults). The output side — :class:`SearchReport`
+and everything it nests (:class:`~repro.core.params.ParallelStrategy`,
+:class:`~repro.core.simulate.SimResult`,
+:class:`~repro.core.pareto.CostedStrategy`,
+:class:`~repro.core.search.SearchCounts`) — round-trips exactly through
+``to_json/from_json`` with a versioned envelope; ranking-sensitive floats are
+encoded with ``float.hex`` so ``SearchReport.from_json(r.to_json()) == r``
+bit for bit (see :mod:`repro.core.wire`).
+
+That pair is what makes search a shared fleet resource: a client POSTs a
+spec to the :class:`~repro.serve.search_service.SearchService` endpoint,
+the service runs (or replays from its spec-keyed cache) the search, and the
+report JSON it returns is the exact in-process report::
+
+    spec = SearchSpec(
+        arch=llama7b,
+        pool=FixedPool("A800", 64),
+        workload=Workload(global_batch=512, seq=4096),
+    )
+    report = Astra(eta_model).search(spec)          # in-process
+    # or through the service wire (cached across the fleet):
+    service = SearchService(Astra(eta_model))
+    report2 = service.search(spec)                  # == report, via JSON
+    # or over HTTP: POST spec.to_json() to /v1/search
+
 Every search returns a SearchReport carrying the funnel counts and the
 search/simulation wall-times (the paper's Table-1 columns); the split is
 measured by wrapping the candidate streams in :func:`_timed`, so generation
@@ -30,34 +58,17 @@ pipeline is identical — the scalar engine just replaces ``simulate_batch``).
 Candidates always stream through chunked evaluation with incremental top-k
 / Pareto tracking, so no mode materializes its candidate list: peak held
 candidates are bounded by the chunk size plus the collector's survivors.
-
-Example::
-
-    spec = SearchSpec(
-        arch=llama7b,
-        pool=FixedPool("A800", 64),
-        workload=Workload(global_batch=512, seq=4096),
-    )
-    report = Astra(eta_model).search(spec)
-    # ship the exact same search to a service:
-    payload = spec.to_json()
-    report2 = Astra(eta_model).search(SearchSpec.from_json(payload))
-
-The legacy facade methods (``search_homogeneous`` / ``search_heterogeneous``
-/ ``search_cost``) remain as thin deprecated shims that build the
-equivalent spec; they emit a :class:`FutureWarning` once per process.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import time
-import warnings
 from typing import Iterable, Iterator, Optional, Sequence
 
-from repro.core.arch import ModelArch
+from repro.core import wire
 from repro.core.batch import BatchedCostSimulator, stream_evaluate
-from repro.core.hetero import HeteroPool
 from repro.core.objectives import make_objective
 from repro.core.params import ParallelStrategy
 from repro.core.pareto import CostedStrategy
@@ -65,15 +76,9 @@ from repro.core.planner import build_plan
 from repro.core.rules import DEFAULT_RULES
 from repro.core.search import SearchCounts
 from repro.core.simulate import CostSimulator, SimResult
-from repro.core.spec import (
-    DeviceSweep,
-    FixedPool,
-    HeteroCaps,
-    Limits,
-    ObjectiveSpec,
-    SearchSpec,
-    Workload,
-)
+from repro.core.spec import SearchSpec
+
+_REPORT_KIND = "astra.search_report"
 
 
 @dataclasses.dataclass
@@ -92,21 +97,48 @@ class SearchReport:
     def e2e_seconds(self) -> float:
         return self.search_seconds + self.simulate_seconds
 
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Versioned wire envelope; exact (``from_dict(to_dict(r)) == r``)."""
+        return {
+            "version": wire.WIRE_VERSION,
+            "kind": _REPORT_KIND,
+            "mode": self.mode,
+            "best": self.best.to_dict() if self.best is not None else None,
+            "best_sim": self.best_sim.to_dict()
+            if self.best_sim is not None else None,
+            "top": [c.to_dict() for c in self.top],
+            "counts": self.counts.to_dict(),
+            "search_seconds": wire.dump_float(self.search_seconds),
+            "simulate_seconds": wire.dump_float(self.simulate_seconds),
+            "pool": [c.to_dict() for c in self.pool],
+            "evaluated": self.evaluated,
+        }
 
-_DEPRECATION_WARNED: set = set()
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchReport":
+        wire.check_envelope(d, _REPORT_KIND)
+        best = d.get("best")
+        best_sim = d.get("best_sim")
+        return cls(
+            mode=d["mode"],
+            best=ParallelStrategy.from_dict(best) if best is not None else None,
+            best_sim=SimResult.from_dict(best_sim)
+            if best_sim is not None else None,
+            top=[CostedStrategy.from_dict(c) for c in d["top"]],
+            counts=SearchCounts.from_dict(d["counts"]),
+            search_seconds=wire.load_float(d["search_seconds"]),
+            simulate_seconds=wire.load_float(d["simulate_seconds"]),
+            pool=[CostedStrategy.from_dict(c) for c in d.get("pool", [])],
+            evaluated=int(d.get("evaluated", 0)),
+        )
 
-def _warn_deprecated(name: str) -> None:
-    """FutureWarning, exactly once per legacy facade method per process."""
-    if name in _DEPRECATION_WARNED:
-        return
-    _DEPRECATION_WARNED.add(name)
-    warnings.warn(
-        f"Astra.{name}() is deprecated; build a SearchSpec and call "
-        f"Astra.search(spec) instead (see repro.core.spec)",
-        FutureWarning,
-        stacklevel=3,
-    )
+    @classmethod
+    def from_json(cls, text: str) -> "SearchReport":
+        return cls.from_dict(json.loads(text))
 
 
 class Astra:
@@ -165,88 +197,6 @@ class Astra:
             simulate_seconds=max(total - search_seconds, 0.0),
             pool=pool,
             evaluated=evaluated,
-        )
-
-    # -- legacy facades (deprecated shims over SearchSpec) ------------------
-    def search_homogeneous(
-        self,
-        arch: ModelArch,
-        device: str,
-        num_devices: int,
-        *,
-        global_batch: int,
-        seq: int,
-        train_tokens: float = 1e9,
-        top_k: int = 5,
-        space: Optional[dict] = None,
-    ) -> SearchReport:
-        """Deprecated: use ``search(SearchSpec(pool=FixedPool(...)))``."""
-        _warn_deprecated("search_homogeneous")
-        return self.search(
-            SearchSpec(
-                arch=arch,
-                pool=FixedPool(device, num_devices),
-                workload=Workload(global_batch, seq, train_tokens),
-                objective=ObjectiveSpec.throughput(),
-                space=space,
-                limits=Limits(top_k=top_k),
-            )
-        )
-
-    def search_heterogeneous(
-        self,
-        arch: ModelArch,
-        pool: HeteroPool,
-        *,
-        global_batch: int,
-        seq: int,
-        train_tokens: float = 1e9,
-        top_k: int = 5,
-        fast: bool = True,
-        base_kwargs: Optional[dict] = None,
-    ) -> SearchReport:
-        """Deprecated: use ``search(SearchSpec(pool=HeteroCaps(...)))``.
-
-        Keeps the legacy exhaustive composition sweep (``prune_slack=None``)
-        so pre-spec callers see byte-identical funnel counts; opt into the
-        water-filling pruning by building a ``HeteroCaps`` spec directly.
-        """
-        _warn_deprecated("search_heterogeneous")
-        return self.search(
-            SearchSpec(
-                arch=arch,
-                pool=HeteroCaps.of(pool, fast=fast, prune_slack=None),
-                workload=Workload(global_batch, seq, train_tokens),
-                objective=ObjectiveSpec.throughput(),
-                hetero_base=base_kwargs,
-                limits=Limits(top_k=top_k),
-            )
-        )
-
-    def search_cost(
-        self,
-        arch: ModelArch,
-        devices: Sequence[str],
-        max_devices: int,
-        *,
-        global_batch: int,
-        seq: int,
-        money_limit: Optional[float],
-        train_tokens: float = 1e9,
-        top_k: int = 5,
-        min_devices: int = 2,
-    ) -> SearchReport:
-        """Deprecated: use ``search(SearchSpec(pool=DeviceSweep(...),
-        objective=ObjectiveSpec.pareto(budget)))``."""
-        _warn_deprecated("search_cost")
-        return self.search(
-            SearchSpec(
-                arch=arch,
-                pool=DeviceSweep(tuple(devices), max_devices, min_devices),
-                workload=Workload(global_batch, seq, train_tokens),
-                objective=ObjectiveSpec.pareto(money_limit),
-                limits=Limits(top_k=top_k),
-            )
         )
 
 

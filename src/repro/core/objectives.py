@@ -92,6 +92,33 @@ class MoneyObjective(Objective):
         return None
 
 
+@dataclasses.dataclass
+class LatencyObjective(Objective):
+    """Latency-SLO objective: cheapest plan whose simulated step time meets
+    ``slo_seconds``. SLO-satisfiers rank first (money ascending, throughput
+    tiebreak); ``select`` returns None when nothing meets the SLO. With no
+    SLO it degenerates to the lowest-step-time plan.
+    """
+
+    slo_seconds: Optional[float] = None
+    wants_pool = True
+
+    def meets(self, c: CostedStrategy) -> bool:
+        return self.slo_seconds is None or c.sim.step_time <= self.slo_seconds
+
+    def collector(self, top_k: int) -> Collector:
+        if self.slo_seconds is None:
+            key = lambda c: (-c.sim.step_time, c.throughput)  # noqa: E731
+        else:
+            key = lambda c: (self.meets(c), -c.money, c.throughput)  # noqa: E731
+        return Collector(top_k, keep_pool=True, key=key)
+
+    def select(self, top, pool):
+        if top and self.meets(top[0]):
+            return top[0]
+        return None
+
+
 def make_objective(spec: ObjectiveSpec) -> Objective:
     """Lower a declarative :class:`ObjectiveSpec` onto its implementation."""
     if spec.kind == "throughput":
@@ -100,4 +127,6 @@ def make_objective(spec: ObjectiveSpec) -> Objective:
         return MoneyObjective(budget=spec.budget)
     if spec.kind == "pareto":
         return ParetoObjective(budget=spec.budget)
+    if spec.kind == "latency":
+        return LatencyObjective(slo_seconds=spec.slo_seconds)
     raise ValueError(f"unknown objective kind {spec.kind!r}")

@@ -59,6 +59,22 @@ class HeteroPlacement:
             out.extend([(dev, n)] * m)
         return out
 
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "devices": list(self.devices),
+            "stages_per_type": list(self.stages_per_type),
+            "layers_per_stage": list(self.layers_per_stage),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HeteroPlacement":
+        return cls(
+            devices=tuple(str(x) for x in d["devices"]),
+            stages_per_type=tuple(int(x) for x in d["stages_per_type"]),
+            layers_per_stage=tuple(int(x) for x in d["layers_per_stage"]),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelStrategy:
@@ -134,6 +150,22 @@ class ParallelStrategy:
         elif ep != 1:
             return False
         return True
+
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Pure field dict (wire form; every field is JSON-exact)."""
+        d = dataclasses.asdict(self)
+        d["hetero"] = self.hetero.to_dict() if self.hetero is not None else None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ParallelStrategy":
+        d = dict(d)
+        h = d.pop("hetero", None)
+        return cls(
+            hetero=HeteroPlacement.from_dict(h) if h is not None else None,
+            **d,
+        )
 
     def to_flat_dict(self) -> dict:
         """$param view used by the rule DSL and serialization."""

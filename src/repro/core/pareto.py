@@ -20,6 +20,7 @@ import heapq
 import itertools
 from typing import Callable, Optional, Sequence
 
+from repro.core import wire
 from repro.core.params import ParallelStrategy
 from repro.core.simulate import SimResult
 
@@ -30,6 +31,24 @@ class CostedStrategy:
     sim: SimResult
     throughput: float  # P_i (tokens/s)
     money: float  # C_i ($ for the training budget)
+
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "strategy": self.strategy.to_dict(),
+            "sim": self.sim.to_dict(),
+            "throughput": wire.dump_float(self.throughput),
+            "money": wire.dump_float(self.money),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostedStrategy":
+        return cls(
+            strategy=ParallelStrategy.from_dict(d["strategy"]),
+            sim=SimResult.from_dict(d["sim"]),
+            throughput=wire.load_float(d["throughput"]),
+            money=wire.load_float(d["money"]),
+        )
 
 
 def money_cost(sim: SimResult, train_tokens: float) -> float:

@@ -17,6 +17,7 @@ import operator
 import time
 from typing import Iterable, Optional, Sequence
 
+from repro.core import wire
 from repro.core.arch import ModelArch
 from repro.core.memory import MemoryFilter
 from repro.core.params import GpuConfig, ParallelStrategy, default_parameter_space
@@ -31,6 +32,26 @@ class SearchCounts:
     after_rules: int = 0
     after_memory: int = 0
     gen_seconds: float = 0.0
+
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "generated": self.generated,
+            "divisible": self.divisible,
+            "after_rules": self.after_rules,
+            "after_memory": self.after_memory,
+            "gen_seconds": wire.dump_float(self.gen_seconds),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchCounts":
+        return cls(
+            generated=int(d["generated"]),
+            divisible=int(d["divisible"]),
+            after_rules=int(d["after_rules"]),
+            after_memory=int(d["after_memory"]),
+            gen_seconds=wire.load_float(d["gen_seconds"]),
+        )
 
 
 def strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:

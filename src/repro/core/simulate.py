@@ -21,6 +21,7 @@ import dataclasses
 from collections import Counter
 from typing import Optional, Sequence
 
+from repro.core import wire
 from repro.core.arch import ModelArch
 from repro.core.costmodel import StageCensus, build_stage_census
 from repro.core.opspec import CommOp, ComputeOp
@@ -52,6 +53,25 @@ class SimResult:
         if self.throughput_tokens <= 0:
             return float("inf")
         return self.money_per_hour / 3600.0 / self.throughput_tokens * 1e6
+
+    # -- wire format -------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Bit-exact wire form: every field is a hex float (or list of)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = wire.dump_floats(v) if isinstance(v, list) \
+                else wire.dump_float(v)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimResult":
+        kw = {}
+        for f in dataclasses.fields(cls):
+            v = d[f.name]
+            kw[f.name] = wire.load_floats(v) if isinstance(v, list) \
+                else wire.load_float(v)
+        return cls(**kw)
 
 
 class CostSimulator:

@@ -13,6 +13,7 @@ be shipped to a service, queued, or replayed byte-for-byte.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Optional, Union
 
@@ -99,7 +100,7 @@ _POOL_KINDS = {"fixed": FixedPool, "hetero": HeteroCaps, "sweep": DeviceSweep}
 # objective + limits
 # ---------------------------------------------------------------------------
 
-OBJECTIVE_KINDS = ("throughput", "money", "pareto")
+OBJECTIVE_KINDS = ("throughput", "money", "pareto", "latency")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,16 +113,28 @@ class ObjectiveSpec:
     ``pareto``     — keep the Eq. 30-31 non-dominated pool; the best pick is
                      the fastest pool member within ``budget`` (the paper's
                      money-limit mode; ``budget=None`` means unlimited).
+    ``latency``    — cheapest plan whose simulated step time meets
+                     ``slo_seconds`` (``slo_seconds=None`` degenerates to
+                     the lowest-step-time plan).
     """
 
     kind: str = "throughput"
     budget: Optional[float] = None
+    slo_seconds: Optional[float] = None
 
     def __post_init__(self):
         if self.kind not in OBJECTIVE_KINDS:
             raise ValueError(
                 f"unknown objective {self.kind!r}; expected one of {OBJECTIVE_KINDS}"
             )
+        if self.slo_seconds is not None:
+            if self.kind != "latency":
+                raise ValueError(
+                    f"slo_seconds only applies to the latency objective, "
+                    f"not {self.kind!r}"
+                )
+            if self.slo_seconds <= 0:
+                raise ValueError("slo_seconds must be positive")
 
     @staticmethod
     def throughput() -> "ObjectiveSpec":
@@ -134,6 +147,10 @@ class ObjectiveSpec:
     @staticmethod
     def pareto(budget: Optional[float] = None) -> "ObjectiveSpec":
         return ObjectiveSpec("pareto", budget)
+
+    @staticmethod
+    def latency(slo_seconds: Optional[float] = None) -> "ObjectiveSpec":
+        return ObjectiveSpec("latency", slo_seconds=slo_seconds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,12 +220,50 @@ class SearchSpec:
             arch=ModelArch(**d["arch"]),
             pool=pool,
             workload=Workload(**d["workload"]),
-            objective=ObjectiveSpec(**d["objective"]),
+            objective=ObjectiveSpec(**(d.get("objective") or {})),
             space=d.get("space"),
             hetero_base=d.get("hetero_base"),
-            limits=Limits(**d.get("limits", {})),
+            limits=Limits(**(d.get("limits") or {})),
         )
 
     @classmethod
     def from_json(cls, text: str) -> "SearchSpec":
         return cls.from_dict(json.loads(text))
+
+    # -- canonical identity ------------------------------------------------
+    def canonicalize(self) -> dict:
+        """Canonical content dict: the semantic identity of this search.
+
+        Two specs that compare equal — regardless of how their JSON was
+        spelled (key order, explicit nulls, omitted default sections,
+        ``2e9`` vs ``2000000000``) — canonicalize to the same dict, because
+        the form is derived from the constructed dataclasses (defaults
+        already applied) with ``None`` entries dropped and integral floats
+        normalized to ints.
+        """
+        return _canonical(self.to_dict())
+
+    def canonical_json(self) -> str:
+        return json.dumps(
+            self.canonicalize(), sort_keys=True, separators=(",", ":")
+        )
+
+    def cache_key(self) -> str:
+        """Stable content hash of :meth:`canonicalize` — the identity a
+        result cache (see :class:`repro.serve.search_service.SearchService`)
+        keys a :class:`~repro.core.api.SearchReport` on."""
+        return hashlib.sha256(self.canonical_json().encode()).hexdigest()
+
+
+def _canonical(v):
+    """Recursive canonical form: sorted keys, no None entries, integral
+    floats as ints (JSON ``2e9`` == ``2000000000``), tuples as lists."""
+    if isinstance(v, dict):
+        return {
+            k: _canonical(x) for k, x in sorted(v.items()) if x is not None
+        }
+    if isinstance(v, (list, tuple)):
+        return [_canonical(x) for x in v]
+    if isinstance(v, float) and not isinstance(v, bool) and v.is_integer():
+        return int(v)
+    return v

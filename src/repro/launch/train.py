@@ -29,18 +29,25 @@ from repro.data import MarkovCorpus, SyntheticPipeline
 from repro.launch.mesh import make_mesh
 from repro.models.lm import ModelCfg, init_params
 from repro.parallel.sharding import batch_spec, make_plan, param_specs
+from repro.serve.search_service import SearchService
 from repro.train.optimizer import adamw_init
 from repro.train.train_step import TrainStepCfg, make_train_step
 
 
 def pick_strategy(arch, num_devices: int, global_batch: int, seq: int):
-    """Run the paper's mode-1 search for this cluster (v5e chips)."""
+    """Run the paper's mode-1 search for this cluster (v5e chips).
+
+    Goes through the spec-keyed :class:`SearchService`, so the report
+    arrives via the wire format — exactly what a shared fleet service would
+    answer. (The service cache is per-process; pointing this at a remote
+    service, once one is deployed, is what makes repeated launches hit a
+    shared cache.)"""
     try:
         eta, _ = load_or_train()
     except Exception:
         eta = AnalyticEtaModel()
-    astra = Astra(eta)
-    report = astra.search(SearchSpec(
+    service = SearchService(Astra(eta))
+    report = service.search(SearchSpec(
         arch=arch,
         pool=FixedPool("tpu-v5e", max(num_devices, 1)),
         workload=Workload(global_batch, seq),

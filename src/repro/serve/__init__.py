@@ -1,4 +1,17 @@
-"""Serving layer: batched generation over the prefill/decode entry points."""
+"""Serving layer: batched generation + the spec-keyed search service."""
 from repro.serve.engine import GenerateResult, ServeEngine
 
-__all__ = ["ServeEngine", "GenerateResult"]
+__all__ = ["ServeEngine", "GenerateResult", "SearchService", "ServiceStats",
+           "make_server"]
+
+_SERVICE_EXPORTS = ("SearchService", "ServiceStats", "make_server")
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.serve.search_service` doesn't double-import
+    # the module it is executing
+    if name in _SERVICE_EXPORTS:
+        from repro.serve import search_service
+
+        return getattr(search_service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -49,8 +49,8 @@ class ServeEngine:
             self.arch, self.cfg, B, self.max_len,
             enc_features=enc_features, params=self.params,
         )
-        logits, caches = lm.prefill(
-            self.params, self.arch, self.cfg, caches, jnp.asarray(prompts),
+        logits, caches = self._prefill(
+            self.params, caches=caches, tokens=jnp.asarray(prompts),
             frontend=frontend,
         )
         key = jax.random.PRNGKey(seed)
@@ -65,8 +65,8 @@ class ServeEngine:
                 nxt = jnp.argmax(last, axis=-1)
             nxt = nxt[:, None].astype(jnp.int32)
             out.append(np.asarray(nxt))
-            logits, caches = lm.decode_step(
-                self.params, self.arch, self.cfg, caches, nxt, pos + i
+            logits, caches = self._decode(
+                self.params, caches=caches, tokens=nxt, position=pos + i
             )
             last = logits[:, -1, :]
         return GenerateResult(tokens=np.concatenate(out, axis=1), prompt_len=S)

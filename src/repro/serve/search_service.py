@@ -1,0 +1,465 @@
+"""Spec-keyed search service: strategy search as a shared fleet resource.
+
+The paper's headline costs (1.27 s mode-1 search, ~1 min simulation sweeps)
+only pay off at fleet scale when results are cached and reusable. This
+module wraps :class:`~repro.core.api.Astra` behind a :class:`SearchService`
+that
+
+* caches serialized :class:`~repro.core.api.SearchReport` JSON in an
+  LRU+TTL store keyed on :meth:`~repro.core.spec.SearchSpec.cache_key`
+  (the canonical content hash — re-ordered or default-padded spec JSON hits
+  the same entry),
+* single-flights identical concurrent specs (one search runs; the other
+  callers wait on it and share the result), and
+* serves the whole thing over stdlib ``http.server``:
+
+      POST /v1/search            body = SearchSpec JSON -> report envelope
+      POST /v1/search?async=1    -> 202 {key, status}; poll the result
+      GET  /v1/results/<key>     -> 200 report | 202 pending | 404 unknown
+      GET  /v1/stats             -> cache hit/miss/eviction counters
+
+Every result a caller sees — cached or fresh, in-process or over HTTP —
+passes through ``SearchReport.to_json``/``from_json``, so the serialized
+path is the only path and is exact by construction (see
+:mod:`repro.core.wire`).
+
+A small CLI rides along::
+
+    python -m repro.serve.search_service serve --port 8123
+    python -m repro.serve.search_service search --url http://host:8123 \\
+        --spec spec.json [--async-poll]
+    python -m repro.serve.search_service stats --url http://host:8123
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import http.server
+import json
+import threading
+import time
+import urllib.error
+import urllib.parse
+import urllib.request
+from collections import OrderedDict
+from typing import Callable, Optional
+
+from repro.core.api import Astra, SearchReport
+from repro.core.spec import SearchSpec
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Counters behind ``GET /v1/stats``."""
+
+    hits: int = 0
+    misses: int = 0
+    coalesced: int = 0  # callers that joined an in-flight identical search
+    evictions: int = 0  # LRU capacity drops
+    expirations: int = 0  # TTL drops
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses + self.coalesced
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "coalesced": self.coalesced,
+            "evictions": self.evictions,
+            "expirations": self.expirations,
+            "requests": self.requests,
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+
+class _Flight:
+    """One in-flight search other callers of the same key can wait on."""
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.report_json: Optional[str] = None
+        self.error: Optional[BaseException] = None
+
+
+class SearchService:
+    """LRU+TTL result cache + single-flight dedup over ``Astra.search``.
+
+    The cache stores report *JSON text*; :meth:`search` deserializes it, so
+    a caller can never observe an object that didn't round-trip the wire.
+    ``ttl_seconds=None`` disables expiry; ``clock`` is injectable for tests.
+    Actual searches are serialized by a lock — the underlying engines share
+    memo tables that are not audited for concurrent mutation — but distinct
+    specs still overlap with cache reads and with each other's waiters.
+    """
+
+    def __init__(
+        self,
+        astra: Astra,
+        *,
+        max_entries: int = 128,
+        ttl_seconds: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.astra = astra
+        self.max_entries = max_entries
+        self.ttl_seconds = ttl_seconds
+        self.clock = clock
+        self.stats = ServiceStats()
+        self._cache: "OrderedDict[str, tuple[Optional[float], str]]" = OrderedDict()
+        self._inflight: dict[str, _Flight] = {}
+        self._errors: "OrderedDict[str, str]" = OrderedDict()
+        self._lock = threading.Lock()  # cache + flight bookkeeping
+        self._search_lock = threading.Lock()  # serializes Astra.search
+
+    # -- cache internals (call with self._lock held) -----------------------
+    def _cache_get(self, key: str) -> Optional[str]:
+        item = self._cache.get(key)
+        if item is None:
+            return None
+        expires, text = item
+        if expires is not None and self.clock() >= expires:
+            del self._cache[key]
+            self.stats.expirations += 1
+            return None
+        self._cache.move_to_end(key)
+        return text
+
+    def _cache_put(self, key: str, text: str) -> None:
+        expires = (
+            self.clock() + self.ttl_seconds
+            if self.ttl_seconds is not None else None
+        )
+        self._cache[key] = (expires, text)
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+
+    # -- core entry points -------------------------------------------------
+    def search_json(self, spec_json: str) -> tuple[str, str, bool]:
+        """Run (or replay) the search described by ``spec_json``.
+
+        Returns ``(cache_key, report_json, cached)`` where ``cached`` is
+        True when the report came from the cache or an in-flight search
+        rather than a fresh run owned by this caller.
+        """
+        spec = SearchSpec.from_json(spec_json)
+        key = spec.cache_key()
+        hit, flight, leader = self._join_or_lead(key)
+        if hit is not None:
+            return key, hit, True
+        if leader:
+            self._run_flight(key, spec, flight)
+        else:
+            flight.done.wait()
+        if flight.error is not None:
+            raise flight.error
+        return key, flight.report_json, not leader
+
+    def search(self, spec: SearchSpec) -> SearchReport:
+        """Spec in, report out — always through the wire format."""
+        _, text, _ = self.search_json(spec.to_json())
+        return SearchReport.from_json(text)
+
+    def submit_json(self, spec_json: str) -> tuple[str, str, Optional[str]]:
+        """Async variant: start (or join) the search, return immediately.
+
+        Returns ``(cache_key, status, report_json)``: status ``ready`` with
+        the cached report (fetched atomically with the lookup, so a TTL
+        expiry cannot strand the caller), or ``pending`` with None (running
+        in a background thread; poll :meth:`result_json`).
+        """
+        spec = SearchSpec.from_json(spec_json)
+        key = spec.cache_key()
+        hit, flight, leader = self._join_or_lead(key)
+        if hit is not None:
+            return key, "ready", hit
+        if leader:
+            threading.Thread(
+                target=self._run_flight, args=(key, spec, flight), daemon=True
+            ).start()
+        return key, "pending", None
+
+    def result_json(self, key: str) -> tuple[str, Optional[str]]:
+        """Poll a key: ``(status, report_json|error|None)`` with status one
+        of ``ready`` / ``pending`` / ``failed`` / ``unknown``."""
+        with self._lock:
+            text = self._cache_get(key)
+            if text is not None:
+                return "ready", text
+            if key in self._inflight:
+                return "pending", None
+            if key in self._errors:
+                return "failed", self._errors[key]
+        return "unknown", None
+
+    # -- single-flight machinery -------------------------------------------
+    def _join_or_lead(self, key: str) -> tuple[Optional[str], Optional[_Flight], bool]:
+        """One atomic lookup: ``(cached_json, flight, leader)`` — a hit
+        returns the text; otherwise join the in-flight search or lead a
+        fresh one."""
+        with self._lock:
+            text = self._cache_get(key)
+            if text is not None:
+                self.stats.hits += 1
+                return text, None, False
+            flight = self._inflight.get(key)
+            if flight is not None:
+                self.stats.coalesced += 1
+                return None, flight, False
+            flight = _Flight()
+            self._inflight[key] = flight
+            self.stats.misses += 1
+            self._errors.pop(key, None)
+            return None, flight, True
+
+    def _run_flight(self, key: str, spec: SearchSpec, flight: _Flight) -> None:
+        try:
+            with self._search_lock:
+                report = self.astra.search(spec)
+            text = report.to_json()
+            with self._lock:
+                self._cache_put(key, text)
+            flight.report_json = text
+        except BaseException as e:  # propagate to every waiter
+            flight.error = e
+            with self._lock:
+                self._errors[key] = f"{type(e).__name__}: {e}"
+                while len(self._errors) > self.max_entries:  # keep bounded
+                    self._errors.pop(next(iter(self._errors)))
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+            flight.done.set()
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            d = self.stats.to_dict()
+            d["entries"] = len(self._cache)
+            d["inflight"] = len(self._inflight)
+            d["max_entries"] = self.max_entries
+            d["ttl_seconds"] = self.ttl_seconds
+        return d
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer (stdlib http.server)
+# ---------------------------------------------------------------------------
+
+class _Handler(http.server.BaseHTTPRequestHandler):
+    service: SearchService  # bound by make_server via a subclass attribute
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):  # quiet by default; tests and CLIs
+        pass  # read the structured responses instead
+
+    def _reply(self, status: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_POST(self):
+        url = urllib.parse.urlsplit(self.path)
+        # always drain the body first: replying while it sits unread desyncs
+        # HTTP/1.1 keep-alive connections
+        length = int(self.headers.get("Content-Length", 0))
+        spec_json = self.rfile.read(length).decode()
+        if url.path != "/v1/search":
+            return self._reply(404, {"error": f"unknown path {url.path}"})
+        try:
+            SearchSpec.from_json(spec_json)
+        except Exception as e:
+            return self._reply(400, {"error": f"bad spec: {e}"})
+        query = urllib.parse.parse_qs(url.query)
+        want_async = query.get("async", ["0"])[-1] not in ("0", "", "false")
+        try:
+            if want_async:
+                key, status, text = self.service.submit_json(spec_json)
+                if status == "ready":
+                    return self._reply(200, {
+                        "key": key, "status": "ready", "cached": True,
+                        "report": json.loads(text),
+                    })
+                return self._reply(202, {"key": key, "status": "pending"})
+            key, text, cached = self.service.search_json(spec_json)
+            return self._reply(200, {
+                "key": key, "status": "ready", "cached": cached,
+                "report": json.loads(text),
+            })
+        except Exception as e:  # the spec parsed; this is a search failure
+            return self._reply(500, {
+                "error": f"search failed: {type(e).__name__}: {e}"
+            })
+
+    def do_GET(self):
+        url = urllib.parse.urlsplit(self.path)
+        if url.path == "/v1/stats":
+            return self._reply(200, self.service.stats_dict())
+        prefix = "/v1/results/"
+        if url.path.startswith(prefix):
+            key = url.path[len(prefix):]
+            status, text = self.service.result_json(key)
+            if status == "ready":
+                return self._reply(200, {
+                    "key": key, "status": status, "cached": True,
+                    "report": json.loads(text),
+                })
+            if status == "pending":
+                return self._reply(202, {"key": key, "status": status})
+            if status == "failed":
+                return self._reply(500, {
+                    "key": key, "status": status, "error": text,
+                })
+            return self._reply(404, {"key": key, "status": status})
+        return self._reply(404, {"error": f"unknown path {url.path}"})
+
+
+def make_server(
+    service: SearchService, host: str = "127.0.0.1", port: int = 8123
+) -> http.server.ThreadingHTTPServer:
+    """Bind the service to a threading HTTP server (``port=0`` for an
+    ephemeral port; the bound one is on ``server.server_address``)."""
+    handler = type("SearchServiceHandler", (_Handler,), {"service": service})
+    return http.server.ThreadingHTTPServer((host, port), handler)
+
+
+def serve_forever(service: SearchService, host: str, port: int) -> None:
+    server = make_server(service, host, port)
+    bound = server.server_address
+    print(f"search service listening on http://{bound[0]}:{bound[1]}")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# CLI client
+# ---------------------------------------------------------------------------
+
+def _http_json(url: str, data: Optional[bytes] = None) -> tuple[int, dict]:
+    req = urllib.request.Request(
+        url, data=data,
+        headers={"Content-Type": "application/json"} if data else {},
+    )
+    try:
+        with urllib.request.urlopen(req) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode() or "{}")
+
+
+def post_spec(base_url: str, spec_json: str) -> tuple[str, SearchReport, bool]:
+    """Client half of the sync endpoint: POST a spec JSON to a running
+    service and return ``(cache_key, report, cached)``. The one place that
+    understands the response envelope — CLIs and examples share it."""
+    status, payload = _http_json(
+        f"{base_url.rstrip('/')}/v1/search", spec_json.encode()
+    )
+    if status != 200:
+        raise RuntimeError(
+            f"search service answered {status}: "
+            f"{payload.get('error', payload)}"
+        )
+    return (
+        payload["key"],
+        SearchReport.from_dict(payload["report"]),
+        bool(payload.get("cached")),
+    )
+
+
+def _cmd_serve(args) -> int:
+    from repro.calibration.fit import load_or_train
+
+    eta, _ = load_or_train()
+    service = SearchService(
+        Astra(eta), max_entries=args.max_entries, ttl_seconds=args.ttl,
+    )
+    serve_forever(service, args.host, args.port)
+    return 0
+
+
+def _cmd_search(args) -> int:
+    with open(args.spec) as f:
+        spec_json = f.read()
+    SearchSpec.from_json(spec_json)  # fail fast on malformed specs
+    base = args.url.rstrip("/")
+    if args.async_poll:
+        status, payload = _http_json(
+            f"{base}/v1/search?async=1", spec_json.encode()
+        )
+        while status == 202:
+            time.sleep(args.poll_interval)
+            status, payload = _http_json(
+                f"{base}/v1/results/{payload['key']}"
+            )
+        if status != 200:
+            print(json.dumps(payload, indent=2))
+            return 1
+        key, cached = payload["key"], payload.get("cached")
+        report = SearchReport.from_dict(payload["report"])
+    else:
+        try:
+            key, report, cached = post_spec(base, spec_json)
+        except RuntimeError as e:
+            print(e)
+            return 1
+    b = report.best
+    print(f"key={key} cached={cached}")
+    if b is None:
+        print(f"{report.mode}: no feasible strategy")
+    else:
+        print(f"{report.mode}: {b.device} x{b.num_devices} "
+              f"tp={b.tensor_parallel} pp={b.pipeline_parallel} "
+              f"dp={b.data_parallel} -> "
+              f"{report.best_sim.throughput_tokens:,.0f} tok/s simulated")
+    return 0
+
+
+def _cmd_stats(args) -> int:
+    status, payload = _http_json(f"{args.url.rstrip('/')}/v1/stats")
+    print(json.dumps(payload, indent=2))
+    return 0 if status == 200 else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.serve.search_service")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("serve", help="run the HTTP search service")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8123)
+    p.add_argument("--max-entries", type=int, default=128)
+    p.add_argument("--ttl", type=float, default=None,
+                   help="result TTL in seconds (default: no expiry)")
+    p.set_defaults(fn=_cmd_serve)
+
+    p = sub.add_parser("search", help="POST a spec file to a running service")
+    p.add_argument("--url", required=True)
+    p.add_argument("--spec", required=True, metavar="SPEC_JSON")
+    p.add_argument("--async-poll", action="store_true",
+                   help="submit with ?async=1 and poll /v1/results/<key>")
+    p.add_argument("--poll-interval", type=float, default=0.5)
+    p.set_defaults(fn=_cmd_search)
+
+    p = sub.add_parser("stats", help="print /v1/stats of a running service")
+    p.add_argument("--url", required=True)
+    p.set_defaults(fn=_cmd_stats)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,20 @@ import dataclasses
 import pytest
 
 from repro.calibration.fit import AnalyticEtaModel
-from repro.core import Astra, CostSimulator, GpuConfig, HeteroPool, ParallelStrategy
+from repro.core import (
+    Astra,
+    CostSimulator,
+    DeviceSweep,
+    FixedPool,
+    GpuConfig,
+    HeteroCaps,
+    HeteroPool,
+    Limits,
+    ObjectiveSpec,
+    ParallelStrategy,
+    SearchSpec,
+    Workload,
+)
 from repro.core.batch import BatchedCostSimulator, _ParetoStaircase, _TopK
 from repro.core.hetero import iter_hetero_strategies
 from repro.core.memory import MemoryFilter
@@ -181,9 +194,10 @@ def test_astra_batched_and_scalar_agree_end_to_end(llama7b):
     }
     fast = Astra(AnalyticEtaModel(), use_batched=True)
     ref = Astra(AnalyticEtaModel(), use_batched=False)
-    kw = dict(global_batch=GB, seq=SEQ, space=space)
-    r_fast = fast.search_homogeneous(llama7b, "A800", 64, **kw)
-    r_ref = ref.search_homogeneous(llama7b, "A800", 64, **kw)
+    spec = SearchSpec(arch=llama7b, pool=FixedPool("A800", 64),
+                      workload=Workload(GB, SEQ), space=space)
+    r_fast = fast.search(spec)
+    r_ref = ref.search(spec)
     assert r_fast.best == r_ref.best
     assert r_fast.best_sim.step_time == pytest.approx(
         r_ref.best_sim.step_time, rel=REL
@@ -246,7 +260,10 @@ def test_op_table_trim_across_batches(llama7b, monkeypatch):
 def test_mode2_counts_are_honest(llama7b):
     astra = Astra(AnalyticEtaModel())
     pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
-    rep = astra.search_heterogeneous(llama7b, pool, global_batch=128, seq=SEQ)
+    rep = astra.search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(pool, prune_slack=None),
+        workload=Workload(128, SEQ),
+    ))
     c = rep.counts
     assert c.generated == c.divisible  # divisible by construction
     assert c.generated >= c.after_rules >= c.after_memory > 0
@@ -255,10 +272,11 @@ def test_mode2_counts_are_honest(llama7b):
 
 def test_mode3_streaming_pool_and_budget(llama7b):
     astra = Astra(AnalyticEtaModel())
-    rep = astra.search_cost(
-        llama7b, ["A800", "H100"], 64, global_batch=GB, seq=SEQ,
-        money_limit=None, top_k=3,
-    )
+    rep = astra.search(SearchSpec(
+        arch=llama7b, pool=DeviceSweep(("A800", "H100"), 64),
+        workload=Workload(GB, SEQ), objective=ObjectiveSpec.pareto(None),
+        limits=Limits(top_k=3),
+    ))
     assert rep.best is not None
     assert rep.pool, "mode-3 must return a non-empty Pareto pool"
     # pool is non-dominated and sorted by throughput desc

@@ -1,0 +1,152 @@
+"""Spec canonicalization: `cache_key()` must be invariant under every
+non-semantic rewrite of the spec JSON (key order, explicit nulls, omitted
+default sections, numeric spelling) and must change under every semantic
+one (pool, workload, objective, limits)."""
+import dataclasses
+import itertools
+import json
+import random
+
+from repro.core import (
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
+
+
+def _spec(llama7b, **over) -> SearchSpec:
+    kw = dict(
+        arch=llama7b,
+        pool=HeteroCaps(32, (("A800", 16), ("H100", 16)), prune_slack=1.5),
+        workload=Workload(128, 2048, train_tokens=2e9),
+        objective=ObjectiveSpec.pareto(80.0),
+        limits=Limits(top_k=5),
+    )
+    kw.update(over)
+    return SearchSpec(**kw)
+
+
+def _shuffle(value, rng):
+    """Recursively rebuild dicts with randomized key insertion order."""
+    if isinstance(value, dict):
+        items = list(value.items())
+        rng.shuffle(items)
+        return {k: _shuffle(v, rng) for k, v in items}
+    if isinstance(value, list):
+        return [_shuffle(v, rng) for v in value]
+    return value
+
+
+# ---------------------------------------------------------------------------
+# invariance (property-style: many random permutations, several seeds)
+# ---------------------------------------------------------------------------
+
+def test_key_order_permutations_share_one_key(llama7b):
+    spec = _spec(llama7b)
+    key = spec.cache_key()
+    base = json.loads(spec.to_json())
+    for seed in range(20):
+        rng = random.Random(seed)
+        text = json.dumps(_shuffle(base, rng))
+        assert SearchSpec.from_json(text).cache_key() == key
+
+
+def test_top_level_key_permutations_share_one_key(llama7b):
+    spec = _spec(llama7b)
+    key = spec.cache_key()
+    base = json.loads(spec.to_json())
+    for perm in itertools.islice(itertools.permutations(base), 24):
+        text = json.dumps({k: base[k] for k in perm})
+        assert SearchSpec.from_json(text).cache_key() == key
+
+
+def test_omitted_defaults_and_explicit_nulls_share_one_key(llama7b):
+    spec = SearchSpec(
+        arch=llama7b, pool=FixedPool("A800", 64), workload=Workload(128, 2048)
+    )
+    key = spec.cache_key()
+    d = json.loads(spec.to_json())
+
+    minimal = {k: v for k, v in d.items()
+               if k in ("version", "arch", "pool", "workload")}
+    assert SearchSpec.from_json(json.dumps(minimal)).cache_key() == key
+
+    padded = dict(d)
+    padded["space"] = None
+    padded["hetero_base"] = None
+    padded["objective"] = {"kind": "throughput", "budget": None,
+                           "slo_seconds": None}
+    padded["limits"] = {"top_k": 5, "chunk_size": None, "max_candidates": None}
+    assert SearchSpec.from_json(json.dumps(padded)).cache_key() == key
+
+
+def test_numeric_spelling_is_normalized(llama7b):
+    a = _spec(llama7b, workload=Workload(128, 2048, train_tokens=2e9))
+    b_text = a.to_json().replace("2000000000.0", "2000000000")
+    b = SearchSpec.from_json(b_text)
+    assert isinstance(b.workload.train_tokens, int)  # actually re-spelled
+    assert b.cache_key() == a.cache_key()
+
+
+def test_equal_specs_equal_keys_all_pool_shapes(llama7b):
+    for pool in (
+        FixedPool("A800", 64),
+        HeteroCaps(32, (("A800", 16), ("H100", 16))),
+        DeviceSweep(("A800", "H100"), 128),
+    ):
+        s1 = _spec(llama7b, pool=pool)
+        s2 = SearchSpec.from_json(s1.to_json())
+        assert s1 == s2
+        assert s1.cache_key() == s2.cache_key()
+        assert len(s1.cache_key()) == 64  # sha256 hexdigest
+
+
+# ---------------------------------------------------------------------------
+# sensitivity: every semantic change moves the key
+# ---------------------------------------------------------------------------
+
+def test_semantic_changes_change_the_key(llama7b):
+    base = _spec(llama7b)
+    variants = {
+        "base": base,
+        "pool-count": _spec(llama7b, pool=HeteroCaps(
+            64, (("A800", 32), ("H100", 32)), prune_slack=1.5)),
+        "pool-caps": _spec(llama7b, pool=HeteroCaps(
+            32, (("A800", 8), ("H100", 24)), prune_slack=1.5)),
+        "pool-shape": _spec(llama7b, pool=FixedPool("A800", 32)),
+        "pool-prune": _spec(llama7b, pool=HeteroCaps(
+            32, (("A800", 16), ("H100", 16)), prune_slack=None)),
+        "workload-batch": _spec(llama7b, workload=Workload(256, 2048, 2e9)),
+        "workload-seq": _spec(llama7b, workload=Workload(128, 4096, 2e9)),
+        "workload-tokens": _spec(llama7b, workload=Workload(128, 2048, 1e9)),
+        "objective-kind": _spec(llama7b, objective=ObjectiveSpec.money(80.0)),
+        "objective-budget": _spec(llama7b, objective=ObjectiveSpec.pareto(81.0)),
+        "objective-slo": _spec(llama7b, objective=ObjectiveSpec.latency(1.5)),
+        "limits-topk": _spec(llama7b, limits=Limits(top_k=9)),
+        "limits-cap": _spec(llama7b, limits=Limits(max_candidates=100)),
+        "space": _spec(llama7b, space={"tensor_parallel": [1, 2]}),
+        "hetero-base": _spec(llama7b, hetero_base={"use_flash_attn": True}),
+        "arch": _spec(llama7b, arch=dataclasses.replace(llama7b, num_layers=16)),
+    }
+    keys = {name: s.cache_key() for name, s in variants.items()}
+    assert len(set(keys.values())) == len(keys), keys
+
+
+def test_type_caps_order_is_semantic(llama7b):
+    """Pipeline order of hetero type caps is meaningful (contiguous-segment
+    placement), so swapping it must NOT collide."""
+    a = _spec(llama7b, pool=HeteroCaps(32, (("A800", 16), ("H100", 16))))
+    b = _spec(llama7b, pool=HeteroCaps(32, (("H100", 16), ("A800", 16))))
+    assert a.cache_key() != b.cache_key()
+
+
+def test_canonical_json_is_deterministic(llama7b):
+    spec = _spec(llama7b)
+    assert spec.canonical_json() == spec.canonical_json()
+    text = spec.canonical_json()
+    assert "null" not in text  # no-op defaults are dropped
+    assert json.loads(text) == spec.canonicalize()

@@ -1,0 +1,170 @@
+"""SearchReport wire format: exact JSON round-trips for every nested type
+and for full reports from all three pool shapes (the acceptance bar for the
+spec-keyed search service: the served report must equal the in-process
+one)."""
+import json
+
+import pytest
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import (
+    Astra,
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    ObjectiveSpec,
+    SearchReport,
+    SearchSpec,
+    Workload,
+)
+from repro.core.params import HeteroPlacement, ParallelStrategy
+from repro.core.pareto import CostedStrategy
+from repro.core.search import SearchCounts
+from repro.core.simulate import SimResult
+from repro.core import wire
+
+GB, SEQ = 64, 1024
+SMALL_SPACE = {
+    "tensor_parallel": [1, 2, 4],
+    "pipeline_parallel": [1, 2],
+    "micro_batch_size": [1, 2],
+    "use_distributed_optimizer": [False, True],
+    "recompute_granularity": ["none", "full"],
+}
+
+
+def _astra() -> Astra:
+    return Astra(AnalyticEtaModel())
+
+
+def _workload() -> Workload:
+    return Workload(GB, SEQ)
+
+
+# ---------------------------------------------------------------------------
+# leaf types
+# ---------------------------------------------------------------------------
+
+def test_hexfloat_is_bit_exact():
+    for x in (0.1 + 0.2, 1.27, 1e-300, float("inf"), 3.0, -0.0):
+        assert wire.load_float(wire.dump_float(x)) == x
+    # decoders tolerate plain JSON numbers (hand-written payloads)
+    assert wire.load_float(2.5) == 2.5
+    assert wire.load_float(7) == 7.0
+
+
+def test_strategy_round_trip_homogeneous():
+    s = ParallelStrategy(device="A800", num_devices=64, tensor_parallel=4,
+                         pipeline_parallel=2, micro_batch_size=2,
+                         sequence_parallel=True, use_distributed_optimizer=True,
+                         recompute_granularity="full", recompute_num_layers=3,
+                         tp_comm_overlap=True)
+    d = json.loads(json.dumps(s.to_dict()))
+    assert ParallelStrategy.from_dict(d) == s
+
+
+def test_strategy_round_trip_hetero_placement():
+    pl = HeteroPlacement(devices=("A800", "H100"), stages_per_type=(2, 2),
+                         layers_per_stage=(6, 10))
+    s = ParallelStrategy(device="A800", num_devices=32, tensor_parallel=2,
+                         pipeline_parallel=4, hetero=pl)
+    d = json.loads(json.dumps(s.to_dict()))
+    back = ParallelStrategy.from_dict(d)
+    assert back == s
+    assert back.hetero.stage_sequence() == pl.stage_sequence()
+
+
+def test_sim_result_round_trip_is_bit_exact():
+    sim = SimResult(step_time=0.1 + 0.2, throughput_samples=1234.5678,
+                    throughput_tokens=1e7 / 3.0, pipeline_time=0.25,
+                    bubble_time=0.0125, dp_exposed_time=1e-9,
+                    optimizer_time=0.001, stage_times=[0.1, 0.2 / 3.0],
+                    stage_p2p=[0.0, 1e-12], money_per_hour=52.48,
+                    money_per_step=52.48 / 3600 * 0.3)
+    back = SimResult.from_dict(json.loads(json.dumps(sim.to_dict())))
+    assert back == sim  # dataclass eq: every float bit-identical
+
+
+def test_counts_and_costed_round_trip():
+    counts = SearchCounts(generated=1000, divisible=800, after_rules=300,
+                          after_memory=120, gen_seconds=0.037)
+    assert SearchCounts.from_dict(
+        json.loads(json.dumps(counts.to_dict()))) == counts
+
+    s = ParallelStrategy(device="H100", num_devices=8)
+    sim = SimResult(step_time=1.5, throughput_samples=10.0,
+                    throughput_tokens=100.0, pipeline_time=1.2,
+                    bubble_time=0.1, dp_exposed_time=0.2, optimizer_time=0.1,
+                    stage_times=[1.0], stage_p2p=[0.0], money_per_hour=20.0,
+                    money_per_step=20.0 / 3600 * 1.5)
+    c = CostedStrategy(strategy=s, sim=sim, throughput=100.0, money=55.5)
+    assert CostedStrategy.from_dict(
+        json.loads(json.dumps(c.to_dict()))) == c
+
+
+# ---------------------------------------------------------------------------
+# full reports, all three pool shapes (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_spec", [
+    lambda arch: SearchSpec(
+        arch=arch, pool=FixedPool("A800", 16), workload=Workload(GB, SEQ),
+        space=SMALL_SPACE,
+    ),
+    lambda arch: SearchSpec(
+        arch=arch,
+        pool=HeteroCaps(8, (("A800", 4), ("H100", 4))),
+        workload=Workload(GB, SEQ),
+    ),
+    lambda arch: SearchSpec(
+        arch=arch, pool=DeviceSweep(("A800", "H100"), 16),
+        workload=Workload(GB, SEQ), objective=ObjectiveSpec.pareto(200.0),
+        space=SMALL_SPACE,
+    ),
+], ids=["fixed", "hetero", "sweep"])
+def test_report_round_trips_exactly(tiny_dense, make_spec):
+    report = _astra().search(make_spec(tiny_dense))
+    assert report.best is not None
+    back = SearchReport.from_json(report.to_json())
+    # dataclass equality covers best, best_sim, top order + sims, counts,
+    # timings, pool, evaluated — bit for bit
+    assert back == report
+    assert back.e2e_seconds == report.e2e_seconds
+
+
+def test_report_with_no_feasible_strategy_round_trips(tiny_dense):
+    report = _astra().search(SearchSpec(
+        arch=tiny_dense, pool=FixedPool("A800", 16),
+        workload=Workload(GB, SEQ),
+        objective=ObjectiveSpec.latency(1e-12),  # unmeetable SLO
+        space=SMALL_SPACE,
+    ))
+    assert report.best is None
+    assert SearchReport.from_json(report.to_json()) == report
+
+
+def test_report_envelope_is_versioned(tiny_dense):
+    report = _astra().search(SearchSpec(
+        arch=tiny_dense, pool=FixedPool("A800", 8),
+        workload=Workload(GB, SEQ), space=SMALL_SPACE,
+    ))
+    d = report.to_dict()
+    assert d["version"] == wire.WIRE_VERSION
+    assert d["kind"] == "astra.search_report"
+    bad = dict(d, version=99)
+    with pytest.raises(ValueError):
+        SearchReport.from_dict(bad)
+    bad = dict(d, kind="astra.search_spec")
+    with pytest.raises(ValueError):
+        SearchReport.from_dict(bad)
+
+
+def test_report_json_is_valid_json_throughout(tiny_dense):
+    """No non-JSON values (inf/nan floats leak as bare tokens) anywhere."""
+    report = _astra().search(SearchSpec(
+        arch=tiny_dense, pool=FixedPool("A800", 8),
+        workload=Workload(GB, SEQ), space=SMALL_SPACE,
+    ))
+    text = report.to_json()
+    json.loads(text)  # strict parse
+    assert "Infinity" not in text and "NaN" not in text

@@ -12,10 +12,14 @@ from repro.calibration.fit import AnalyticEtaModel
 from repro.core import (
     Astra,
     CostSimulator,
+    FixedPool,
     GpuConfig,
+    HeteroCaps,
     HeteroPool,
     ModelArch,
     ParallelStrategy,
+    SearchSpec,
+    Workload,
 )
 from repro.core.hetero import (
     balanced_placement,
@@ -241,12 +245,16 @@ def test_hetero_beats_worst_homogeneous(llama7b):
     total device count budget split (sanity direction check, as in Table 2)."""
     astra = Astra(AnalyticEtaModel())
     pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))
-    het = astra.search_heterogeneous(llama7b, pool, global_batch=128, seq=2048, fast=True)
-    hom = astra.search_homogeneous(llama7b, "A800", 32, global_batch=128, seq=2048)
+    w = Workload(global_batch=128, seq=2048)
+    het = astra.search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(pool), workload=w))
+    hom = astra.search(SearchSpec(
+        arch=llama7b, pool=FixedPool("A800", 32), workload=w))
     assert het.best_sim.throughput_tokens > 0
     assert hom.best_sim.throughput_tokens > 0
     # Table-2 relationship: heter >= all-A800, <= all-H100 at same count
-    h100 = astra.search_homogeneous(llama7b, "H100", 32, global_batch=128, seq=2048)
+    h100 = astra.search(SearchSpec(
+        arch=llama7b, pool=FixedPool("H100", 32), workload=w))
     assert hom.best_sim.throughput_tokens <= h100.best_sim.throughput_tokens
 
 

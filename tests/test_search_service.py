@@ -1,0 +1,273 @@
+"""SearchService: spec-keyed LRU+TTL caching, single-flight dedup, and the
+HTTP endpoint round-trip (cold miss then warm hit with identical report
+JSON — the tier-1 service acceptance check)."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import (
+    Astra,
+    FixedPool,
+    SearchReport,
+    SearchSpec,
+    Workload,
+)
+from repro.serve.search_service import SearchService, make_server
+
+GB, SEQ = 64, 1024
+SMALL_SPACE = {
+    "tensor_parallel": [1, 2, 4],
+    "pipeline_parallel": [1, 2],
+    "micro_batch_size": [1, 2],
+    "use_distributed_optimizer": [False, True],
+    "recompute_granularity": ["none", "full"],
+}
+
+
+def _spec(arch, device="A800", n=16) -> SearchSpec:
+    return SearchSpec(
+        arch=arch, pool=FixedPool(device, n), workload=Workload(GB, SEQ),
+        space=SMALL_SPACE,
+    )
+
+
+def _service(**kw) -> SearchService:
+    return SearchService(Astra(AnalyticEtaModel()), **kw)
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+
+def test_cold_miss_then_warm_hit_identical_json(tiny_dense):
+    svc = _service()
+    spec = _spec(tiny_dense)
+    k1, t1, cached1 = svc.search_json(spec.to_json())
+    k2, t2, cached2 = svc.search_json(spec.to_json())
+    assert (cached1, cached2) == (False, True)
+    assert k1 == k2 == spec.cache_key()
+    assert t1 == t2  # byte-identical report JSON
+    stats = svc.stats_dict()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    assert stats["entries"] == 1
+    # and the wire text really is the report
+    assert SearchReport.from_json(t1).best is not None
+
+
+def test_reordered_equivalent_spec_json_hits_cache(tiny_dense):
+    """Acceptance: a re-ordered-but-equivalent spec JSON is served from
+    cache with a recorded hit."""
+    svc = _service()
+    spec = _spec(tiny_dense)
+    _, t1, _ = svc.search_json(spec.to_json())
+    d = json.loads(spec.to_json())
+    reordered = json.dumps(
+        {k: d[k] for k in reversed(list(d))}
+    )
+    assert reordered != spec.to_json()
+    key, t2, cached = svc.search_json(reordered)
+    assert cached is True
+    assert key == spec.cache_key()
+    assert t2 == t1
+    assert svc.stats_dict()["hits"] == 1
+
+
+def test_search_returns_report_through_the_wire(tiny_dense):
+    svc = _service()
+    spec = _spec(tiny_dense)
+    report = svc.search(spec)
+    direct = Astra(AnalyticEtaModel()).search(spec)
+    assert report.best == direct.best
+    assert [c.strategy for c in report.top] == [c.strategy for c in direct.top]
+    # second call: still equal, from cache
+    assert svc.search(spec) == report
+    assert svc.stats_dict()["hits"] == 1
+
+
+def test_lru_eviction(tiny_dense):
+    svc = _service(max_entries=1)
+    s1, s2 = _spec(tiny_dense, "A800"), _spec(tiny_dense, "H100")
+    svc.search_json(s1.to_json())
+    svc.search_json(s2.to_json())  # evicts s1
+    assert svc.stats_dict()["evictions"] == 1
+    _, _, cached = svc.search_json(s1.to_json())  # cold again
+    assert cached is False
+
+
+def test_ttl_expiry_with_injected_clock(tiny_dense):
+    now = [0.0]
+    svc = _service(ttl_seconds=10.0, clock=lambda: now[0])
+    spec = _spec(tiny_dense)
+    svc.search_json(spec.to_json())
+    now[0] = 5.0
+    assert svc.search_json(spec.to_json())[2] is True  # still fresh
+    now[0] = 20.0
+    assert svc.search_json(spec.to_json())[2] is False  # expired -> re-run
+    assert svc.stats_dict()["expirations"] == 1
+
+
+def test_single_flight_coalesces_identical_concurrent_specs(tiny_dense):
+    real = Astra(AnalyticEtaModel())
+    report = real.search(_spec(tiny_dense))
+
+    class SlowAstra:
+        def __init__(self):
+            self.calls = 0
+            self.gate = threading.Event()
+
+        def search(self, spec):
+            self.calls += 1
+            self.gate.wait(timeout=5.0)
+            return report
+
+    slow = SlowAstra()
+    svc = SearchService(slow)
+    results = []
+
+    def worker():
+        results.append(svc.search_json(_spec(tiny_dense).to_json()))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    # let every thread reach the flight before releasing the search
+    deadline = time.monotonic() + 5.0
+    while svc.stats_dict()["requests"] < 4 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    slow.gate.set()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert slow.calls == 1  # exactly one search ran
+    assert len(results) == 4
+    assert len({t for _, t, _ in results}) == 1  # all share one report
+    stats = svc.stats_dict()
+    assert stats["misses"] == 1 and stats["coalesced"] == 3
+
+
+def test_failed_search_propagates_and_is_not_cached(tiny_dense):
+    class BoomAstra:
+        def search(self, spec):
+            raise RuntimeError("boom")
+
+    svc = SearchService(BoomAstra())
+    spec = _spec(tiny_dense)
+    with pytest.raises(RuntimeError):
+        svc.search_json(spec.to_json())
+    assert svc.stats_dict()["entries"] == 0
+    status, err = svc.result_json(spec.cache_key())
+    assert status == "failed" and "boom" in err
+
+
+# ---------------------------------------------------------------------------
+# HTTP round-trip (tier-1 acceptance: in-process server, cold then warm)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def http_service(tiny_dense):
+    svc = _service()
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    base = f"http://127.0.0.1:{server.server_address[1]}"
+    yield svc, base
+    server.shutdown()
+    thread.join(timeout=5.0)
+
+
+def _request(url, data=None):
+    req = urllib.request.Request(url, data=data)
+    try:
+        with urllib.request.urlopen(req) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode() or "{}")
+
+
+def test_http_round_trip_cold_then_warm(tiny_dense, http_service):
+    svc, base = http_service
+    spec = _spec(tiny_dense)
+    body = spec.to_json().encode()
+
+    status1, cold = _request(f"{base}/v1/search", body)
+    status2, warm = _request(f"{base}/v1/search", body)
+    assert status1 == status2 == 200
+    assert cold["cached"] is False and warm["cached"] is True
+    assert cold["key"] == warm["key"] == spec.cache_key()
+    assert cold["report"] == warm["report"]  # identical report JSON
+
+    # the served report matches an in-process run exactly, modulo the
+    # wall-clock timing fields (those are measured per run)
+    served = SearchReport.from_dict(warm["report"])
+    local = Astra(AnalyticEtaModel()).search(spec)
+    assert served.mode == local.mode
+    assert served.best == local.best
+    assert served.best_sim == local.best_sim
+    assert served.top == local.top
+    assert served.pool == local.pool
+    assert served.evaluated == local.evaluated
+    c_s, c_l = served.counts, local.counts
+    assert (c_s.generated, c_s.divisible, c_s.after_rules, c_s.after_memory) \
+        == (c_l.generated, c_l.divisible, c_l.after_rules, c_l.after_memory)
+
+    status, stats = _request(f"{base}/v1/stats")
+    assert status == 200
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+
+def test_http_async_submit_and_poll(tiny_dense, http_service):
+    svc, base = http_service
+    spec = _spec(tiny_dense, device="H100")
+    status, payload = _request(
+        f"{base}/v1/search?async=1", spec.to_json().encode()
+    )
+    assert status in (200, 202)
+    key = payload["key"]
+    deadline = time.monotonic() + 30.0
+    while status != 200 and time.monotonic() < deadline:
+        time.sleep(0.05)
+        status, payload = _request(f"{base}/v1/results/{key}")
+    assert status == 200 and payload["status"] == "ready"
+    assert SearchReport.from_dict(payload["report"]).best is not None
+    # resubmitting async when cached answers ready immediately
+    status, payload = _request(
+        f"{base}/v1/search?async=1", spec.to_json().encode()
+    )
+    assert status == 200 and payload["cached"] is True
+
+
+def test_http_unknown_key_and_bad_spec(tiny_dense, http_service):
+    svc, base = http_service
+    status, payload = _request(f"{base}/v1/results/deadbeef")
+    assert status == 404 and payload["status"] == "unknown"
+    status, payload = _request(f"{base}/v1/search", b'{"version": 1}')
+    assert status == 400 and "bad spec" in payload["error"]
+    status, _ = _request(f"{base}/v1/nope")
+    assert status == 404
+
+
+def test_http_search_failure_is_a_json_500_not_a_dropped_socket(tiny_dense):
+    """A spec that parses but crashes the engine must come back as a JSON
+    500 (the sync path used to let the exception escape the handler)."""
+
+    class BoomAstra:
+        def search(self, spec):
+            raise RuntimeError("engine exploded")
+
+    server = make_server(SearchService(BoomAstra()), port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        base = f"http://127.0.0.1:{server.server_address[1]}"
+        status, payload = _request(
+            f"{base}/v1/search", _spec(tiny_dense).to_json().encode()
+        )
+        assert status == 500
+        assert "engine exploded" in payload["error"]
+    finally:
+        server.shutdown()
+        thread.join(timeout=5.0)

@@ -1,0 +1,77 @@
+"""ServeEngine must run generation through the jitted partials it builds in
+``__init__`` (regression: it used to call the unjitted ``lm.prefill`` /
+``lm.decode_step`` module functions, leaving the jit dead)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup(request):
+    tiny_dense = request.getfixturevalue("tiny_dense")
+    cfg = lm.ModelCfg(dtype=jnp.float32, attn_impl="xla", ssm_impl="xla")
+    params = lm.init_params(tiny_dense, jax.random.PRNGKey(0))
+    return tiny_dense, cfg, params
+
+
+def _prompts(vocab: int, batch: int = 2, length: int = 5) -> np.ndarray:
+    return np.random.default_rng(0).integers(
+        0, vocab, size=(batch, length)
+    ).astype(np.int32)
+
+
+def test_generate_uses_jitted_partials_not_module_functions(
+    engine_setup, monkeypatch
+):
+    arch, cfg, params = engine_setup
+    engine = ServeEngine(arch, cfg, params, max_len=16)
+
+    def boom(*a, **kw):
+        raise AssertionError(
+            "generate must go through the jitted self._prefill/self._decode"
+        )
+
+    # the jitted partials captured lm.prefill/lm.decode_step at __init__;
+    # poisoning the module attributes proves generate no longer reads them
+    monkeypatch.setattr(lm, "prefill", boom)
+    monkeypatch.setattr(lm, "decode_step", boom)
+
+    result = engine.generate(_prompts(arch.vocab), max_new_tokens=3)
+    assert result.tokens.shape == (2, 5 + 3)
+    assert result.prompt_len == 5
+
+
+def test_jitted_callables_are_exercised_and_compiled_once(engine_setup):
+    arch, cfg, params = engine_setup
+    engine = ServeEngine(arch, cfg, params, max_len=16)
+    calls = {"prefill": 0, "decode": 0}
+    real_prefill, real_decode = engine._prefill, engine._decode
+
+    def spy_prefill(*a, **kw):
+        calls["prefill"] += 1
+        return real_prefill(*a, **kw)
+
+    def spy_decode(*a, **kw):
+        calls["decode"] += 1
+        return real_decode(*a, **kw)
+
+    engine._prefill, engine._decode = spy_prefill, spy_decode
+    steps = 4
+    engine.generate(_prompts(arch.vocab), max_new_tokens=steps)
+    assert calls == {"prefill": 1, "decode": steps}
+    # every decode step reuses one compiled executable (position is traced)
+    assert real_decode._cache_size() == 1
+
+
+def test_greedy_generation_is_deterministic(engine_setup):
+    arch, cfg, params = engine_setup
+    engine = ServeEngine(arch, cfg, params, max_len=16)
+    prompts = _prompts(arch.vocab)
+    a = engine.generate(prompts, max_new_tokens=4, temperature=0.0)
+    b = engine.generate(prompts, max_new_tokens=4, temperature=0.0)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    np.testing.assert_array_equal(a.tokens[:, :5], prompts)

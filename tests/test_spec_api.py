@@ -1,6 +1,6 @@
-"""SearchSpec -> plan -> stream pipeline: golden parity with the legacy
-facades, JSON round-trips, deprecation semantics, streaming bounds, and the
-mode-2 composition pruning."""
+"""SearchSpec -> plan -> stream pipeline: golden parity against hand-rolled
+materialized references, JSON round-trips, streaming bounds, and the mode-2
+composition pruning."""
 import dataclasses
 import json
 import warnings
@@ -20,10 +20,10 @@ from repro.core import (
     SearchSpec,
     Workload,
 )
-from repro.core.api import _DEPRECATION_WARNED
 from repro.core.batch import BatchedCostSimulator
 from repro.core.hetero import balanced_placements_for, iter_hetero_strategies
 from repro.core.objectives import (
+    LatencyObjective,
     MoneyObjective,
     ParetoObjective,
     ThroughputObjective,
@@ -36,7 +36,7 @@ from repro.core.pareto import (
     pick_within_budget,
     sort_strategies,
 )
-from repro.core.planner import build_plan
+from repro.core.rules import DEFAULT_RULES
 from repro.core.search import FilterBank, generate_strategies
 
 GB, SEQ = 128, 2048
@@ -69,50 +69,8 @@ def _assert_reports_equal(a, b, *, check_pool=True):
 
 
 # ---------------------------------------------------------------------------
-# golden parity: legacy facade == SearchSpec equivalent, all three modes
-# ---------------------------------------------------------------------------
-
-def test_mode1_spec_matches_legacy_facade(llama7b):
-    astra = _astra()
-    legacy = astra.search_homogeneous(llama7b, "A800", 64, global_batch=GB, seq=SEQ)
-    via_spec = _astra().search(_spec_mode1(llama7b))
-    _assert_reports_equal(legacy, via_spec)
-
-
-def test_mode2_spec_matches_legacy_facade(llama7b):
-    # the shim keeps the legacy exhaustive sweep (prune_slack=None), so the
-    # equivalent spec must too; pruning is opt-in via HeteroCaps directly
-    astra = _astra()
-    legacy = astra.search_heterogeneous(llama7b, POOL, global_batch=GB, seq=SEQ)
-    via_spec = _astra().search(
-        SearchSpec(arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=None),
-                   workload=Workload(GB, SEQ))
-    )
-    _assert_reports_equal(legacy, via_spec)
-    assert via_spec.best is not None and via_spec.best.hetero is not None
-
-
-def test_mode3_spec_matches_legacy_facade(llama7b):
-    astra = _astra()
-    legacy = astra.search_cost(
-        llama7b, ["A800", "H100"], 64, global_batch=GB, seq=SEQ,
-        money_limit=None, top_k=3,
-    )
-    via_spec = _astra().search(
-        SearchSpec(
-            arch=llama7b, pool=DeviceSweep(("A800", "H100"), 64),
-            workload=Workload(GB, SEQ), objective=ObjectiveSpec.pareto(None),
-            limits=Limits(top_k=3),
-        )
-    )
-    _assert_reports_equal(legacy, via_spec)
-    assert via_spec.pool
-
-
-# ---------------------------------------------------------------------------
 # golden parity: the streamed pipeline == a hand-rolled materialize+sort
-# reference built from the primitives (guards the whole redesign, not just
-# the shim delegation)
+# reference built from the primitives, for every pool shape
 # ---------------------------------------------------------------------------
 
 def test_mode1_pipeline_matches_materialized_reference(llama7b):
@@ -133,6 +91,34 @@ def test_mode1_pipeline_matches_materialized_reference(llama7b):
     assert [c.strategy for c in report.top] == [c.strategy for c in ranked[:5]]
     assert report.counts.generated == counts.generated
     assert report.counts.after_memory == counts.after_memory == report.evaluated
+
+
+def test_mode2_pipeline_matches_materialized_reference(llama7b):
+    """The spec pipeline over HeteroCaps equals filtering + simulating +
+    Eq. 33-sorting the raw hetero stream by hand (the golden reference the
+    removed legacy facade used to provide)."""
+    report = _astra().search(SearchSpec(
+        arch=llama7b, pool=HeteroCaps.of(POOL, prune_slack=None),
+        workload=Workload(GB, SEQ),
+    ))
+
+    bank = FilterBank(llama7b, SEQ, DEFAULT_RULES)
+    strategies = [
+        s for s in iter_hetero_strategies(llama7b, POOL, GB, fast=True)
+        if bank.rules_ok(s) and bank.memory_ok(s)
+    ]
+    engine = BatchedCostSimulator(AnalyticEtaModel())
+    sims = engine.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    costed = [
+        CostedStrategy(strategy=s, sim=r, throughput=r.throughput_tokens,
+                       money=money_cost(r, 1e9))
+        for s, r in zip(strategies, sims)
+    ]
+    ranked = sort_strategies(costed)
+    assert report.best == ranked[0].strategy
+    assert report.best is not None and report.best.hetero is not None
+    assert [c.strategy for c in report.top] == [c.strategy for c in ranked[:5]]
+    assert report.counts.after_memory == len(strategies) == report.evaluated
 
 
 def test_mode3_pipeline_matches_materialized_reference(llama7b):
@@ -210,7 +196,11 @@ def test_spec_json_round_trip_search_identical(llama7b):
 
 def test_spec_rejects_unknown_kinds(llama7b):
     with pytest.raises(ValueError):
-        ObjectiveSpec("latency")
+        ObjectiveSpec("carbon")
+    with pytest.raises(ValueError):
+        ObjectiveSpec("throughput", slo_seconds=1.0)  # latency-only knob
+    with pytest.raises(ValueError):
+        ObjectiveSpec.latency(0.0)
     d = _spec_mode1(llama7b).to_dict()
     d["pool"]["kind"] = "quantum"
     with pytest.raises(ValueError):
@@ -218,20 +208,13 @@ def test_spec_rejects_unknown_kinds(llama7b):
 
 
 # ---------------------------------------------------------------------------
-# deprecation semantics
+# the legacy facades are gone (spec is the only entry point)
 # ---------------------------------------------------------------------------
 
-def test_legacy_shims_warn_futurewarning_exactly_once(llama7b):
-    _DEPRECATION_WARNED.discard("search_homogeneous")
+def test_legacy_facades_removed():
     astra = _astra()
-    kw = dict(global_batch=GB, seq=SEQ)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        astra.search_homogeneous(llama7b, "A800", 32, **kw)
-        astra.search_homogeneous(llama7b, "A800", 32, **kw)
-    future = [w for w in caught if issubclass(w.category, FutureWarning)]
-    assert len(future) == 1
-    assert "SearchSpec" in str(future[0].message)
+    for name in ("search_homogeneous", "search_heterogeneous", "search_cost"):
+        assert not hasattr(astra, name)
 
 
 def test_spec_entry_point_does_not_warn(llama7b):
@@ -282,6 +265,35 @@ def test_make_objective_dispatch():
     assert isinstance(make_objective(ObjectiveSpec.throughput()), ThroughputObjective)
     assert isinstance(make_objective(ObjectiveSpec.money(5.0)), MoneyObjective)
     assert isinstance(make_objective(ObjectiveSpec.pareto(5.0)), ParetoObjective)
+    lat = make_objective(ObjectiveSpec.latency(2.5))
+    assert isinstance(lat, LatencyObjective) and lat.slo_seconds == 2.5
+
+
+def test_latency_objective_picks_cheapest_within_slo(llama7b):
+    thr = _astra().search(_spec_mode1(llama7b))
+    # an SLO looser than the fastest plan's step time is satisfiable
+    slo = thr.top[0].sim.step_time * 2.0
+    # the objective travels the wire like any other spec field
+    spec = SearchSpec.from_json(dataclasses.replace(
+        _spec_mode1(llama7b), objective=ObjectiveSpec.latency(slo)
+    ).to_json())
+    assert spec.objective.slo_seconds == slo
+    rep = _astra().search(spec)
+    assert rep.best is not None
+    assert rep.best_sim.step_time <= slo
+    # cheapest SLO-satisfier: no throughput-top candidate meeting the SLO
+    # is cheaper than the latency pick
+    pick_money = money_cost(rep.best_sim, 1e9)
+    for c in thr.top:
+        if c.sim.step_time <= slo:
+            assert pick_money <= c.money + 1e-12
+
+
+def test_latency_objective_infeasible_slo_returns_none(llama7b):
+    rep = _astra().search(dataclasses.replace(
+        _spec_mode1(llama7b), objective=ObjectiveSpec.latency(1e-9)
+    ))
+    assert rep.best is None and rep.best_sim is None
 
 
 def test_money_objective_picks_cheapest(llama7b):
