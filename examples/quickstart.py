@@ -134,3 +134,9 @@ print(f"[service] warm hit == cold report; "
 # and a serving host deploys the strategy it answers with:
 #     python examples/serve_batched.py --search-spec spec.json \
 #         --search-url http://localhost:8123
+#
+# In production the cache is durable and shared: `--store sqlite:reports.db`
+# makes reports survive restarts and be served warm by every replica on the
+# file, and `--auth-tokens tokens.txt` turns on bearer-token auth with
+# per-token request/cold-search quotas (401/429). See examples/README.md
+# §Persistence and §Auth for the store URL and token-file formats.

@@ -28,11 +28,12 @@ from repro.models import lm
 from repro.serve import ServeEngine
 
 
-def pick_strategy_from_spec(path: str, url: str = None):
+def pick_strategy_from_spec(path: str, url: str = None, token: str = None):
     """Replay a serialized SearchSpec through the search service.
 
     In-process by default; with ``url`` the spec is POSTed to a remote
-    service. Either way the report arrives through the wire format."""
+    service (``token`` authenticates against an ``--auth-tokens`` service).
+    Either way the report arrives through the wire format."""
     from repro.core import SearchSpec
 
     with open(path) as f:
@@ -42,7 +43,7 @@ def pick_strategy_from_spec(path: str, url: str = None):
     if url:
         from repro.serve.search_service import post_spec
 
-        key, report, cached = post_spec(url, spec_json)
+        key, report, cached = post_spec(url, spec_json, token=token)
         print(f"served by {url} (key={key} cached={cached})")
         return spec, report
 
@@ -67,11 +68,15 @@ def main():
     ap.add_argument("--search-url", default=None, metavar="URL",
                     help="fetch the report from a running search service "
                          "instead of searching in-process")
+    ap.add_argument("--search-token", default=None, metavar="TOKEN",
+                    help="bearer token when --search-url points at an "
+                         "auth-enabled service")
     args = ap.parse_args()
 
     if args.search_spec:
         spec, report = pick_strategy_from_spec(args.search_spec,
-                                               url=args.search_url)
+                                               url=args.search_url,
+                                               token=args.search_token)
         b = report.best
         if b is None:
             print(f"search spec {args.search_spec}: no feasible strategy")

@@ -163,7 +163,9 @@ class Astra:
         """Run one declarative search spec end to end."""
         t0 = time.perf_counter()
         plan = build_plan(spec, rules=self.rules)
-        objective = make_objective(spec.objective)
+        objective = make_objective(
+            spec.objective, train_tokens=spec.workload.train_tokens
+        )
         collector = objective.collector(spec.limits.top_k)
         engine = self.batched if self.use_batched else self.simulator
         chunk_size = spec.limits.chunk_size or self.chunk_size

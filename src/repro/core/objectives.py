@@ -16,9 +16,14 @@ from repro.core.pareto import (
     CostedStrategy,
     ParetoStaircase,
     TopK,
+    carbon_cost,
     pick_within_budget,
 )
 from repro.core.spec import ObjectiveSpec
+
+# global-average grid intensity (g CO2e per kWh) when the spec doesn't pin
+# a region; the objective only needs a consistent scale to rank plans
+DEFAULT_GRAMS_CO2_PER_KWH = 450.0
 
 
 class Collector:
@@ -119,8 +124,44 @@ class LatencyObjective(Objective):
         return None
 
 
-def make_objective(spec: ObjectiveSpec) -> Objective:
-    """Lower a declarative :class:`ObjectiveSpec` onto its implementation."""
+@dataclasses.dataclass
+class CarbonObjective(Objective):
+    """Carbon/energy objective: lowest-emissions plan for the token budget.
+
+    Emissions are TDP-hours x grid intensity (:func:`carbon_cost`), ranked
+    ascending with a throughput tiebreak — the same collector-key + select
+    shape as the latency-SLO objective. ``budget_kg`` (optional) caps
+    admissible kg CO2e; ``select`` returns None when nothing fits.
+    """
+
+    budget_kg: Optional[float] = None
+    grams_co2_per_kwh: float = DEFAULT_GRAMS_CO2_PER_KWH
+    train_tokens: float = 1e9
+    wants_pool = True
+
+    def carbon(self, c: CostedStrategy) -> float:
+        return carbon_cost(
+            c.strategy, c.sim, self.train_tokens, self.grams_co2_per_kwh
+        )
+
+    def collector(self, top_k: int) -> Collector:
+        return Collector(
+            top_k, keep_pool=True,
+            key=lambda c: (-self.carbon(c), c.throughput),
+        )
+
+    def select(self, top, pool):
+        for c in top:
+            if self.budget_kg is None or self.carbon(c) <= self.budget_kg:
+                return c
+        return None
+
+
+def make_objective(spec: ObjectiveSpec, *, train_tokens: float = 1e9) -> Objective:
+    """Lower a declarative :class:`ObjectiveSpec` onto its implementation.
+
+    ``train_tokens`` (the workload's token budget) parameterizes the
+    objectives whose metric integrates over the whole training run."""
     if spec.kind == "throughput":
         return ThroughputObjective()
     if spec.kind == "money":
@@ -129,4 +170,14 @@ def make_objective(spec: ObjectiveSpec) -> Objective:
         return ParetoObjective(budget=spec.budget)
     if spec.kind == "latency":
         return LatencyObjective(slo_seconds=spec.slo_seconds)
+    if spec.kind == "carbon":
+        return CarbonObjective(
+            budget_kg=spec.budget,
+            grams_co2_per_kwh=(
+                spec.grams_co2_per_kwh
+                if spec.grams_co2_per_kwh is not None
+                else DEFAULT_GRAMS_CO2_PER_KWH
+            ),
+            train_tokens=train_tokens,
+        )
     raise ValueError(f"unknown objective kind {spec.kind!r}")

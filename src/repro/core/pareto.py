@@ -23,6 +23,7 @@ from typing import Callable, Optional, Sequence
 from repro.core import wire
 from repro.core.params import ParallelStrategy
 from repro.core.simulate import SimResult
+from repro.hw.catalog import get_device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,39 @@ def money_cost(sim: SimResult, train_tokens: float) -> float:
         return float("inf")
     hours = train_tokens / sim.throughput_tokens / 3600.0
     return hours * sim.money_per_hour
+
+
+def strategy_watts(strategy: ParallelStrategy) -> float:
+    """Aggregate board power (TDP) of every device a strategy occupies.
+
+    Heterogeneous placements sum per-type: each of the ``m_i`` stages of
+    type i holds ``num_devices / P`` devices (the D*T devices per stage)."""
+    if strategy.hetero is None:
+        return strategy.num_devices * get_device(strategy.device).tdp_watts
+    pl = strategy.hetero
+    per_stage = strategy.num_devices // max(pl.pp, 1)
+    return sum(
+        m * per_stage * get_device(dev).tdp_watts
+        for dev, m in zip(pl.devices, pl.stages_per_type)
+    )
+
+
+def carbon_cost(
+    strategy: ParallelStrategy,
+    sim: SimResult,
+    train_tokens: float,
+    grams_co2_per_kwh: float,
+) -> float:
+    """kg CO2e to train the token budget: TDP-hours x grid intensity.
+
+    The same shape as :func:`money_cost` with watts standing in for the
+    hourly fee — a compute-duration proxy (no PUE, no idle draw), which is
+    exactly the granularity the strategy search can influence."""
+    if sim.throughput_tokens <= 0:
+        return float("inf")
+    hours = train_tokens / sim.throughput_tokens / 3600.0
+    kwh = strategy_watts(strategy) / 1000.0 * hours
+    return kwh * grams_co2_per_kwh / 1000.0
 
 
 def optimal_pool(candidates: Sequence[CostedStrategy]) -> list[CostedStrategy]:

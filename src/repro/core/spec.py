@@ -100,7 +100,7 @@ _POOL_KINDS = {"fixed": FixedPool, "hetero": HeteroCaps, "sweep": DeviceSweep}
 # objective + limits
 # ---------------------------------------------------------------------------
 
-OBJECTIVE_KINDS = ("throughput", "money", "pareto", "latency")
+OBJECTIVE_KINDS = ("throughput", "money", "pareto", "latency", "carbon")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,11 +116,15 @@ class ObjectiveSpec:
     ``latency``    — cheapest plan whose simulated step time meets
                      ``slo_seconds`` (``slo_seconds=None`` degenerates to
                      the lowest-step-time plan).
+    ``carbon``     — lowest-emissions plan for the token budget (TDP-hours
+                     x ``grams_co2_per_kwh`` grid intensity; ``budget``,
+                     when set, caps admissible kg CO2e).
     """
 
     kind: str = "throughput"
     budget: Optional[float] = None
     slo_seconds: Optional[float] = None
+    grams_co2_per_kwh: Optional[float] = None
 
     def __post_init__(self):
         if self.kind not in OBJECTIVE_KINDS:
@@ -135,6 +139,14 @@ class ObjectiveSpec:
                 )
             if self.slo_seconds <= 0:
                 raise ValueError("slo_seconds must be positive")
+        if self.grams_co2_per_kwh is not None:
+            if self.kind != "carbon":
+                raise ValueError(
+                    f"grams_co2_per_kwh only applies to the carbon "
+                    f"objective, not {self.kind!r}"
+                )
+            if self.grams_co2_per_kwh <= 0:
+                raise ValueError("grams_co2_per_kwh must be positive")
 
     @staticmethod
     def throughput() -> "ObjectiveSpec":
@@ -151,6 +163,17 @@ class ObjectiveSpec:
     @staticmethod
     def latency(slo_seconds: Optional[float] = None) -> "ObjectiveSpec":
         return ObjectiveSpec("latency", slo_seconds=slo_seconds)
+
+    @staticmethod
+    def carbon(
+        budget_kg: Optional[float] = None,
+        grams_co2_per_kwh: Optional[float] = None,
+    ) -> "ObjectiveSpec":
+        """Lowest-emissions plan; ``grams_co2_per_kwh=None`` uses the
+        objective's default grid intensity."""
+        return ObjectiveSpec(
+            "carbon", budget=budget_kg, grams_co2_per_kwh=grams_co2_per_kwh
+        )
 
 
 @dataclasses.dataclass(frozen=True)

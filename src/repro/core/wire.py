@@ -13,6 +13,7 @@ one. Decoders accept plain JSON numbers too, so hand-written payloads work.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Iterable, Union
 
 WIRE_VERSION = 1
@@ -38,6 +39,15 @@ def dump_floats(xs: Iterable[float]) -> list[str]:
 
 def load_floats(vs: Iterable[JsonFloat]) -> list[float]:
     return [load_float(v) for v in vs]
+
+
+def text_checksum(text: str) -> str:
+    """Content checksum for wire text at rest (sha-256 hex).
+
+    Durable report stores (:mod:`repro.serve.store`) record this next to
+    the serialized report so a corrupted row is detected on read and
+    treated as a miss instead of being served."""
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
 
 
 def check_envelope(d: dict, kind: str) -> None:

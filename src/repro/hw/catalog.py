@@ -31,6 +31,7 @@ class DeviceSpec:
     inter_node_bw: float  # bytes/s one device can drive across nodes/pods
     devices_per_node: int  # devices sharing the fast domain
     price_per_hour: float  # $/device/hr, on-demand
+    tdp_watts: float = 400.0  # board power (TDP) for the energy/carbon model
 
     @property
     def price_per_second(self) -> float:
@@ -53,6 +54,7 @@ A800 = DeviceSpec(
     inter_node_bw=25 * GB,  # 200 Gb/s IB/PCIe per GPU
     devices_per_node=8,
     price_per_hour=1.90,
+    tdp_watts=400.0,
 )
 
 H100 = DeviceSpec(
@@ -65,6 +67,7 @@ H100 = DeviceSpec(
     inter_node_bw=50 * GB,  # 400 Gb/s IB per GPU
     devices_per_node=8,
     price_per_hour=3.90,
+    tdp_watts=700.0,
 )
 
 H800 = DeviceSpec(
@@ -77,6 +80,7 @@ H800 = DeviceSpec(
     inter_node_bw=50 * GB,
     devices_per_node=8,
     price_per_hour=3.20,
+    tdp_watts=700.0,
 )
 
 A100 = DeviceSpec(
@@ -89,6 +93,7 @@ A100 = DeviceSpec(
     inter_node_bw=25 * GB,
     devices_per_node=8,
     price_per_hour=2.20,
+    tdp_watts=400.0,
 )
 
 # --- TPUs (execution target; v5e constants match the assignment) ------------
@@ -102,6 +107,7 @@ TPU_V5E = DeviceSpec(
     inter_node_bw=12.5 * GB,  # DCN per chip
     devices_per_node=256,  # one v5e pod-slice = 16x16 torus
     price_per_hour=1.20,
+    tdp_watts=200.0,
 )
 
 TPU_V5P = DeviceSpec(
@@ -114,6 +120,7 @@ TPU_V5P = DeviceSpec(
     inter_node_bw=25 * GB,
     devices_per_node=256,
     price_per_hour=4.20,
+    tdp_watts=400.0,
 )
 
 DEVICES: Dict[str, DeviceSpec] = {

@@ -2,9 +2,14 @@
 from repro.serve.engine import GenerateResult, ServeEngine
 
 __all__ = ["ServeEngine", "GenerateResult", "SearchService", "ServiceStats",
-           "make_server"]
+           "AuthQuota", "TokenInfo", "make_server",
+           "ReportStore", "MemoryStore", "SqliteStore", "TieredStore",
+           "parse_store_url"]
 
-_SERVICE_EXPORTS = ("SearchService", "ServiceStats", "make_server")
+_SERVICE_EXPORTS = ("SearchService", "ServiceStats", "AuthQuota", "TokenInfo",
+                    "make_server")
+_STORE_EXPORTS = ("ReportStore", "MemoryStore", "SqliteStore", "TieredStore",
+                  "parse_store_url")
 
 
 def __getattr__(name):
@@ -14,4 +19,8 @@ def __getattr__(name):
         from repro.serve import search_service
 
         return getattr(search_service, name)
+    if name in _STORE_EXPORTS:
+        from repro.serve import store
+
+        return getattr(store, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -5,18 +5,24 @@ only pay off at fleet scale when results are cached and reusable. This
 module wraps :class:`~repro.core.api.Astra` behind a :class:`SearchService`
 that
 
-* caches serialized :class:`~repro.core.api.SearchReport` JSON in an
-  LRU+TTL store keyed on :meth:`~repro.core.spec.SearchSpec.cache_key`
-  (the canonical content hash — re-ordered or default-padded spec JSON hits
-  the same entry),
+* caches serialized :class:`~repro.core.api.SearchReport` JSON in a
+  pluggable :class:`~repro.serve.store.ReportStore` keyed on
+  :meth:`~repro.core.spec.SearchSpec.cache_key` (the canonical content
+  hash — re-ordered or default-padded spec JSON hits the same entry).
+  The default is the in-process LRU+TTL :class:`~repro.serve.store.MemoryStore`;
+  ``sqlite:PATH`` / ``tiered:PATH`` stores make reports survive restarts
+  and be shared across replicas,
 * single-flights identical concurrent specs (one search runs; the other
-  callers wait on it and share the result), and
+  callers wait on it and share the result),
+* optionally authenticates callers with static bearer tokens and enforces
+  per-token request / cold-search quotas (401 / 429; see
+  :class:`AuthQuota`), and
 * serves the whole thing over stdlib ``http.server``:
 
       POST /v1/search            body = SearchSpec JSON -> report envelope
       POST /v1/search?async=1    -> 202 {key, status}; poll the result
       GET  /v1/results/<key>     -> 200 report | 202 pending | 404 unknown
-      GET  /v1/stats             -> cache hit/miss/eviction counters
+      GET  /v1/stats             -> cache/store counters + per-token usage
 
 Every result a caller sees — cached or fresh, in-process or over HTTP —
 passes through ``SearchReport.to_json``/``from_json``, so the serialized
@@ -25,9 +31,10 @@ path is the only path and is exact by construction (see
 
 A small CLI rides along::
 
-    python -m repro.serve.search_service serve --port 8123
+    python -m repro.serve.search_service serve --port 8123 \\
+        [--store sqlite:reports.db] [--auth-tokens tokens.txt]
     python -m repro.serve.search_service search --url http://host:8123 \\
-        --spec spec.json [--async-poll]
+        --spec spec.json [--token TOKEN] [--async-poll]
     python -m repro.serve.search_service stats --url http://host:8123
 """
 from __future__ import annotations
@@ -46,17 +53,22 @@ from typing import Callable, Optional
 
 from repro.core.api import Astra, SearchReport
 from repro.core.spec import SearchSpec
+from repro.serve.store import MemoryStore, ReportStore, parse_store_url
+
+DEFAULT_MAX_BODY_BYTES = 1 << 20  # 1 MiB: specs are small; reports never POST
 
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Counters behind ``GET /v1/stats``."""
+    """Service-level counters behind ``GET /v1/stats`` (store counters —
+    evictions/expirations/corruptions — live on the store and are merged
+    in by :meth:`SearchService.stats_dict`)."""
 
     hits: int = 0
     misses: int = 0
     coalesced: int = 0  # callers that joined an in-flight identical search
-    evictions: int = 0  # LRU capacity drops
-    expirations: int = 0  # TTL drops
+    store_put_errors: int = 0  # store failed mid-write; result still served
+    store_get_errors: int = 0  # store failed a read; treated as a miss
 
     @property
     def requests(self) -> int:
@@ -71,8 +83,8 @@ class ServiceStats:
             "hits": self.hits,
             "misses": self.misses,
             "coalesced": self.coalesced,
-            "evictions": self.evictions,
-            "expirations": self.expirations,
+            "store_put_errors": self.store_put_errors,
+            "store_get_errors": self.store_get_errors,
             "requests": self.requests,
             "hit_rate": round(self.hit_rate, 4),
         }
@@ -87,12 +99,24 @@ class _Flight:
         self.error: Optional[BaseException] = None
 
 
-class SearchService:
-    """LRU+TTL result cache + single-flight dedup over ``Astra.search``.
+class QuotaExceeded(Exception):
+    """A per-token quota rejected this request (HTTP 429)."""
 
-    The cache stores report *JSON text*; :meth:`search` deserializes it, so
+
+class SearchService:
+    """Single-flight search dedup over a pluggable report store.
+
+    The store holds report *JSON text*; :meth:`search` deserializes it, so
     a caller can never observe an object that didn't round-trip the wire.
-    ``ttl_seconds=None`` disables expiry; ``clock`` is injectable for tests.
+    With ``store=None`` the service builds a
+    :class:`~repro.serve.store.MemoryStore` from ``max_entries`` /
+    ``ttl_seconds`` / ``clock`` (the original in-process behavior); pass a
+    :class:`~repro.serve.store.SqliteStore` or
+    :class:`~repro.serve.store.TieredStore` for durability and
+    cross-replica sharing. A store that raises is contained: failed writes
+    still serve the fresh result (counted in ``store_put_errors``), failed
+    reads count as misses.
+
     Actual searches are serialized by a lock — the underlying engines share
     memo tables that are not audited for concurrent mutation — but distinct
     specs still overlap with cache reads and with each other's waiters.
@@ -105,55 +129,60 @@ class SearchService:
         max_entries: int = 128,
         ttl_seconds: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        store: Optional[ReportStore] = None,
     ):
-        if max_entries < 1:
-            raise ValueError("max_entries must be >= 1")
         self.astra = astra
-        self.max_entries = max_entries
-        self.ttl_seconds = ttl_seconds
-        self.clock = clock
+        if store is not None:
+            # time-based behavior lives entirely in the store; a clock (or
+            # TTL/bound) passed alongside one would be silently dead state
+            if (clock is not time.monotonic or ttl_seconds is not None
+                    or max_entries != 128):
+                raise ValueError(
+                    "store= carries its own max_entries/ttl_seconds/clock;"
+                    " configure them on the store, not the service"
+                )
+            self.store = store
+        else:
+            self.store = MemoryStore(
+                max_entries=max_entries, ttl_seconds=ttl_seconds, clock=clock,
+            )
         self.stats = ServiceStats()
-        self._cache: "OrderedDict[str, tuple[Optional[float], str]]" = OrderedDict()
         self._inflight: dict[str, _Flight] = {}
         self._errors: "OrderedDict[str, str]" = OrderedDict()
-        self._lock = threading.Lock()  # cache + flight bookkeeping
+        # completed reports whose store write failed: kept reachable here
+        # (bounded) so async pollers aren't stranded by a flaky store
+        self._orphans: "OrderedDict[str, str]" = OrderedDict()
+        self._fills = 0  # bumped whenever a flight completes (see below)
+        self._lock = threading.Lock()  # stats + flight bookkeeping
         self._search_lock = threading.Lock()  # serializes Astra.search
 
-    # -- cache internals (call with self._lock held) -----------------------
-    def _cache_get(self, key: str) -> Optional[str]:
-        item = self._cache.get(key)
-        if item is None:
+    # -- store access (error-contained; never call with _lock held) --------
+    def _store_get(self, key: str) -> Optional[str]:
+        try:
+            return self.store.get(key)
+        except Exception:
+            with self._lock:  # counters are read-modify-write: lock them
+                self.stats.store_get_errors += 1
             return None
-        expires, text = item
-        if expires is not None and self.clock() >= expires:
-            del self._cache[key]
-            self.stats.expirations += 1
-            return None
-        self._cache.move_to_end(key)
-        return text
-
-    def _cache_put(self, key: str, text: str) -> None:
-        expires = (
-            self.clock() + self.ttl_seconds
-            if self.ttl_seconds is not None else None
-        )
-        self._cache[key] = (expires, text)
-        self._cache.move_to_end(key)
-        while len(self._cache) > self.max_entries:
-            self._cache.popitem(last=False)
-            self.stats.evictions += 1
 
     # -- core entry points -------------------------------------------------
-    def search_json(self, spec_json: str) -> tuple[str, str, bool]:
+    def search_json(
+        self,
+        spec_json: str,
+        *,
+        on_cold: Optional[Callable[[], None]] = None,
+    ) -> tuple[str, str, bool]:
         """Run (or replay) the search described by ``spec_json``.
 
         Returns ``(cache_key, report_json, cached)`` where ``cached`` is
-        True when the report came from the cache or an in-flight search
-        rather than a fresh run owned by this caller.
+        True when the report came from the store or an in-flight search
+        rather than a fresh run owned by this caller. ``on_cold`` (the
+        quota hook) is invoked only when this caller would start a fresh
+        search; raising from it aborts before any work runs.
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
-        hit, flight, leader = self._join_or_lead(key)
+        hit, flight, leader = self._join_or_lead(key, on_cold=on_cold)
         if hit is not None:
             return key, hit, True
         if leader:
@@ -169,7 +198,12 @@ class SearchService:
         _, text, _ = self.search_json(spec.to_json())
         return SearchReport.from_json(text)
 
-    def submit_json(self, spec_json: str) -> tuple[str, str, Optional[str]]:
+    def submit_json(
+        self,
+        spec_json: str,
+        *,
+        on_cold: Optional[Callable[[], None]] = None,
+    ) -> tuple[str, str, Optional[str]]:
         """Async variant: start (or join) the search, return immediately.
 
         Returns ``(cache_key, status, report_json)``: status ``ready`` with
@@ -179,7 +213,7 @@ class SearchService:
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
-        hit, flight, leader = self._join_or_lead(key)
+        hit, flight, leader = self._join_or_lead(key, on_cold=on_cold)
         if hit is not None:
             return key, "ready", hit
         if leader:
@@ -192,62 +226,279 @@ class SearchService:
         """Poll a key: ``(status, report_json|error|None)`` with status one
         of ``ready`` / ``pending`` / ``failed`` / ``unknown``."""
         with self._lock:
-            text = self._cache_get(key)
-            if text is not None:
-                return "ready", text
             if key in self._inflight:
                 return "pending", None
+        text = self._store_get(key)
+        if text is not None:
+            return "ready", text
+        with self._lock:
+            if key in self._inflight:  # filled between the two checks
+                return "pending", None
+            if key in self._orphans:  # completed, but the store write failed
+                return "ready", self._orphans[key]
             if key in self._errors:
                 return "failed", self._errors[key]
         return "unknown", None
 
     # -- single-flight machinery -------------------------------------------
-    def _join_or_lead(self, key: str) -> tuple[Optional[str], Optional[_Flight], bool]:
-        """One atomic lookup: ``(cached_json, flight, leader)`` — a hit
-        returns the text; otherwise join the in-flight search or lead a
-        fresh one."""
-        with self._lock:
-            text = self._cache_get(key)
-            if text is not None:
-                self.stats.hits += 1
-                return text, None, False
-            flight = self._inflight.get(key)
-            if flight is not None:
-                self.stats.coalesced += 1
-                return None, flight, False
-            flight = _Flight()
-            self._inflight[key] = flight
-            self.stats.misses += 1
-            self._errors.pop(key, None)
-            return None, flight, True
+    def _join_or_lead(
+        self, key: str, *, on_cold: Optional[Callable[[], None]] = None
+    ) -> tuple[Optional[str], Optional[_Flight], bool]:
+        """One lookup: ``(cached_json, flight, leader)`` — a hit returns
+        the text; otherwise join the in-flight search or lead a fresh one
+        (after the ``on_cold`` quota hook admits it).
+
+        Store reads always happen *outside* the service lock (a slow
+        durable read must not stall unrelated keys). The race against a
+        flight that completes between our read and the lock is closed by
+        the ``_fills`` generation counter: completion bumps it atomically
+        with deregistration, so a stale read forces one retry instead of a
+        duplicate search."""
+        while True:
+            with self._lock:
+                gen = self._fills
+            text = self._store_get(key)  # no lock held: may be slow I/O
+            with self._lock:
+                if text is not None:
+                    self.stats.hits += 1
+                    return text, None, False
+                flight = self._inflight.get(key)
+                if flight is not None:
+                    self.stats.coalesced += 1
+                    return None, flight, False
+                if self._fills != gen:
+                    continue  # a flight completed since our read: re-read
+                if key in self._orphans:
+                    # completed earlier but the store write failed; serve
+                    # it and retry the write now the store may have healed
+                    text = self._orphans[key]
+                    self.stats.hits += 1
+                else:
+                    if on_cold is not None:
+                        on_cold()  # may raise QuotaExceeded: no flight/miss
+                    flight = _Flight()
+                    self._inflight[key] = flight
+                    self.stats.misses += 1
+                    self._errors.pop(key, None)
+                    return None, flight, True
+            # orphan hit: heal outside the lock
+            try:
+                self.store.put(key, text)
+                with self._lock:
+                    self._orphans.pop(key, None)
+            except Exception:
+                with self._lock:
+                    self.stats.store_put_errors += 1
+            return text, None, False
 
     def _run_flight(self, key: str, spec: SearchSpec, flight: _Flight) -> None:
         try:
             with self._search_lock:
                 report = self.astra.search(spec)
             text = report.to_json()
-            with self._lock:
-                self._cache_put(key, text)
+            try:
+                self.store.put(key, text)
+                with self._lock:
+                    self._orphans.pop(key, None)
+            except Exception:
+                # store failed mid-write: the completed report must stay
+                # reachable (sync callers get it from the flight; async
+                # pollers from the orphan map)
+                with self._lock:
+                    self.stats.store_put_errors += 1
+                    self._orphans[key] = text
+                    while len(self._orphans) > 32:
+                        self._orphans.popitem(last=False)
             flight.report_json = text
         except BaseException as e:  # propagate to every waiter
             flight.error = e
             with self._lock:
                 self._errors[key] = f"{type(e).__name__}: {e}"
-                while len(self._errors) > self.max_entries:  # keep bounded
+                while len(self._errors) > 128:  # keep bounded
                     self._errors.pop(next(iter(self._errors)))
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
+                self._fills += 1  # atomic with deregistration: lets
+                # _join_or_lead detect a fill between its read and lock
             flight.done.set()
 
     def stats_dict(self) -> dict:
         with self._lock:
             d = self.stats.to_dict()
-            d["entries"] = len(self._cache)
             d["inflight"] = len(self._inflight)
-            d["max_entries"] = self.max_entries
-            d["ttl_seconds"] = self.ttl_seconds
+        try:  # a live store read: contained like every other store fault
+            d.update(self.store.counters())
+            d["entries"] = len(self.store)
+        except Exception as e:
+            with self._lock:
+                self.stats.store_get_errors += 1
+            d["entries"] = None
+            d["store_error"] = f"{type(e).__name__}: {e}"
+        d["store"] = self.store.kind
+        d["max_entries"] = getattr(self.store, "max_entries", None)
+        d["ttl_seconds"] = getattr(self.store, "ttl_seconds", None)
         return d
+
+    def close(self) -> None:
+        self.store.close()
+
+
+# ---------------------------------------------------------------------------
+# auth / quota
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenInfo:
+    """One static bearer token and its per-window quotas (None = unlimited)."""
+
+    token: str
+    identity: str
+    requests_per_window: Optional[int] = None
+    cold_per_window: Optional[int] = None
+
+
+class AuthQuota:
+    """Static bearer-token auth + fixed-window per-token quotas.
+
+    Token file format (see ``examples/README.md``): one token per line,
+    whitespace-separated fields ``TOKEN IDENTITY [REQS [COLD]]`` where the
+    optional quotas are integers or ``-`` for unlimited; blank lines and
+    ``#`` comments are skipped. Quotas are fixed windows of
+    ``window_seconds`` (measured on the injected ``clock``): ``REQS`` caps
+    all authenticated requests, ``COLD`` caps requests that would start a
+    fresh (cold) search — cache hits and coalesced joins never spend it.
+
+    ``/v1/stats`` reports per-identity usage; the service never logs or
+    serves the tokens themselves.
+    """
+
+    def __init__(
+        self,
+        tokens: list[TokenInfo],
+        *,
+        window_seconds: float = 60.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if len({t.token for t in tokens}) != len(tokens):
+            raise ValueError("duplicate token in token list")
+        self._by_token = {t.token: t for t in tokens}
+        self.window_seconds = window_seconds
+        self.clock = clock
+        self._lock = threading.Lock()
+        self.unauthorized = 0
+        # windows are per *token* (the unit the quotas are declared on —
+        # several tokens may share an identity without sharing budgets);
+        # lifetime totals aggregate per identity for /v1/stats
+        self._usage: dict[str, dict] = {
+            t.token: {
+                "window_start": None, "window_requests": 0, "window_cold": 0,
+            }
+            for t in tokens
+        }
+        self._totals: dict[str, dict] = {}
+        for t in tokens:
+            self._totals.setdefault(t.identity, {
+                "requests": 0, "cold_searches": 0, "throttled": 0,
+            })
+
+    @classmethod
+    def from_file(cls, path: str, **kw) -> "AuthQuota":
+        tokens = []
+        with open(path) as f:
+            for ln, line in enumerate(f, 1):
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                parts = line.split()
+                if len(parts) < 2:
+                    raise ValueError(
+                        f"{path}:{ln}: expected 'TOKEN IDENTITY [REQS [COLD]]'"
+                    )
+                quotas = []
+                for raw in parts[2:4]:
+                    if raw == "-":
+                        quotas.append(None)
+                        continue
+                    q = int(raw)
+                    if q < 0:
+                        raise ValueError(
+                            f"{path}:{ln}: quota must be >= 0"
+                            f" (or '-' for unlimited), got {raw!r}"
+                        )
+                    quotas.append(q)
+                quotas += [None] * (2 - len(quotas))
+                tokens.append(TokenInfo(parts[0], parts[1], *quotas))
+        if not tokens:
+            raise ValueError(f"{path}: no tokens defined")
+        return cls(tokens, **kw)
+
+    def identify(self, auth_header: Optional[str]) -> Optional[TokenInfo]:
+        """Resolve an ``Authorization: Bearer <token>`` header (also accepts
+        the bare token). None means 401."""
+        if not auth_header:
+            with self._lock:
+                self.unauthorized += 1
+            return None
+        token = auth_header.strip()
+        if token.lower().startswith("bearer "):
+            token = token[len("bearer "):].strip()
+        info = self._by_token.get(token)
+        if info is None:
+            with self._lock:
+                self.unauthorized += 1
+        return info
+
+    def _window(self, u: dict, now: float) -> dict:
+        if u["window_start"] is None or now - u["window_start"] >= self.window_seconds:
+            u["window_start"] = now
+            u["window_requests"] = 0
+            u["window_cold"] = 0
+        return u
+
+    def charge_request(self, info: TokenInfo) -> bool:
+        """Spend one request; False means the quota rejected it (429)."""
+        with self._lock:
+            u = self._window(self._usage[info.token], self.clock())
+            if (
+                info.requests_per_window is not None
+                and u["window_requests"] >= info.requests_per_window
+            ):
+                self._totals[info.identity]["throttled"] += 1
+                return False
+            u["window_requests"] += 1
+            self._totals[info.identity]["requests"] += 1
+            return True
+
+    def cold_hook(self, info: TokenInfo) -> Callable[[], None]:
+        """The ``on_cold`` callback for this token: spends one cold-search
+        unit or raises :class:`QuotaExceeded`."""
+
+        def charge() -> None:
+            with self._lock:
+                u = self._window(self._usage[info.token], self.clock())
+                if (
+                    info.cold_per_window is not None
+                    and u["window_cold"] >= info.cold_per_window
+                ):
+                    self._totals[info.identity]["throttled"] += 1
+                    raise QuotaExceeded(
+                        f"cold-search quota exceeded for {info.identity!r}"
+                        f" ({info.cold_per_window}/{self.window_seconds:g}s)"
+                    )
+                u["window_cold"] += 1
+                self._totals[info.identity]["cold_searches"] += 1
+
+        return charge
+
+    def stats_dict(self) -> dict:
+        with self._lock:
+            return {
+                "unauthorized": self.unauthorized,
+                "tokens": {
+                    ident: dict(t) for ident, t in self._totals.items()
+                },
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -256,25 +507,63 @@ class SearchService:
 
 class _Handler(http.server.BaseHTTPRequestHandler):
     service: SearchService  # bound by make_server via a subclass attribute
+    auth: Optional[AuthQuota] = None
+    max_body_bytes: int = DEFAULT_MAX_BODY_BYTES
     protocol_version = "HTTP/1.1"
 
     def log_message(self, fmt, *args):  # quiet by default; tests and CLIs
         pass  # read the structured responses instead
 
-    def _reply(self, status: int, payload: dict) -> None:
+    def _reply(self, status: int, payload: dict, *, close: bool = False) -> None:
         body = json.dumps(payload).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        if close:
+            self.send_header("Connection", "close")
+            self.close_connection = True
         self.end_headers()
         self.wfile.write(body)
 
+    def _authorize(self) -> tuple[bool, Optional[TokenInfo]]:
+        """401/429 gate shared by every endpoint. Returns (admitted, token);
+        on False a response has already been sent."""
+        if self.auth is None:
+            return True, None
+        info = self.auth.identify(self.headers.get("Authorization"))
+        if info is None:
+            self._reply(401, {"error": "missing or unknown bearer token"})
+            return False, None
+        if not self.auth.charge_request(info):
+            self._reply(429, {
+                "error": f"request quota exceeded for {info.identity!r}"
+            })
+            return False, info
+        return True, info
+
     def do_POST(self):
         url = urllib.parse.urlsplit(self.path)
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+        except ValueError:
+            length = -1
+        if length < 0:  # absent/garbage/negative: never rfile.read(-1)
+            return self._reply(400, {
+                "error": "bad Content-Length header"
+            }, close=True)
+        if length > self.max_body_bytes:
+            # refuse without reading: draining an oversized body defeats the
+            # point, so give up on this connection after replying
+            return self._reply(413, {
+                "error": f"body of {length} bytes exceeds the"
+                         f" {self.max_body_bytes}-byte limit"
+            }, close=True)
         # always drain the body first: replying while it sits unread desyncs
         # HTTP/1.1 keep-alive connections
-        length = int(self.headers.get("Content-Length", 0))
-        spec_json = self.rfile.read(length).decode()
+        spec_json = self.rfile.read(length).decode(errors="replace")
+        admitted, token = self._authorize()
+        if not admitted:
+            return
         if url.path != "/v1/search":
             return self._reply(404, {"error": f"unknown path {url.path}"})
         try:
@@ -283,29 +572,53 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return self._reply(400, {"error": f"bad spec: {e}"})
         query = urllib.parse.parse_qs(url.query)
         want_async = query.get("async", ["0"])[-1] not in ("0", "", "false")
+        on_cold = (
+            self.auth.cold_hook(token)
+            if self.auth is not None and token is not None else None
+        )
         try:
             if want_async:
-                key, status, text = self.service.submit_json(spec_json)
+                key, status, text = self.service.submit_json(
+                    spec_json, on_cold=on_cold
+                )
                 if status == "ready":
                     return self._reply(200, {
                         "key": key, "status": "ready", "cached": True,
                         "report": json.loads(text),
                     })
                 return self._reply(202, {"key": key, "status": "pending"})
-            key, text, cached = self.service.search_json(spec_json)
+            key, text, cached = self.service.search_json(
+                spec_json, on_cold=on_cold
+            )
             return self._reply(200, {
                 "key": key, "status": "ready", "cached": cached,
                 "report": json.loads(text),
             })
+        except QuotaExceeded as e:
+            return self._reply(429, {"error": str(e)})
         except Exception as e:  # the spec parsed; this is a search failure
             return self._reply(500, {
                 "error": f"search failed: {type(e).__name__}: {e}"
             })
 
     def do_GET(self):
+        try:
+            return self._do_get()
+        except Exception as e:  # never a traceback + dropped socket
+            return self._reply(500, {
+                "error": f"{type(e).__name__}: {e}"
+            }, close=True)
+
+    def _do_get(self):
+        admitted, _ = self._authorize()
+        if not admitted:
+            return
         url = urllib.parse.urlsplit(self.path)
         if url.path == "/v1/stats":
-            return self._reply(200, self.service.stats_dict())
+            stats = self.service.stats_dict()
+            if self.auth is not None:
+                stats["auth"] = self.auth.stats_dict()
+            return self._reply(200, stats)
         prefix = "/v1/results/"
         if url.path.startswith(prefix):
             key = url.path[len(prefix):]
@@ -326,18 +639,30 @@ class _Handler(http.server.BaseHTTPRequestHandler):
 
 
 def make_server(
-    service: SearchService, host: str = "127.0.0.1", port: int = 8123
+    service: SearchService,
+    host: str = "127.0.0.1",
+    port: int = 8123,
+    *,
+    auth: Optional[AuthQuota] = None,
+    max_body_bytes: int = DEFAULT_MAX_BODY_BYTES,
 ) -> http.server.ThreadingHTTPServer:
     """Bind the service to a threading HTTP server (``port=0`` for an
     ephemeral port; the bound one is on ``server.server_address``)."""
-    handler = type("SearchServiceHandler", (_Handler,), {"service": service})
+    handler = type("SearchServiceHandler", (_Handler,), {
+        "service": service, "auth": auth, "max_body_bytes": max_body_bytes,
+    })
     return http.server.ThreadingHTTPServer((host, port), handler)
 
 
-def serve_forever(service: SearchService, host: str, port: int) -> None:
-    server = make_server(service, host, port)
+def serve_forever(
+    service: SearchService, host: str, port: int,
+    *, auth: Optional[AuthQuota] = None,
+) -> None:
+    server = make_server(service, host, port, auth=auth)
     bound = server.server_address
-    print(f"search service listening on http://{bound[0]}:{bound[1]}")
+    print(f"search service listening on http://{bound[0]}:{bound[1]}"
+          f" (store={service.store.kind}"
+          f"{', auth on' if auth is not None else ''})")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -348,11 +673,13 @@ def serve_forever(service: SearchService, host: str, port: int) -> None:
 # CLI client
 # ---------------------------------------------------------------------------
 
-def _http_json(url: str, data: Optional[bytes] = None) -> tuple[int, dict]:
-    req = urllib.request.Request(
-        url, data=data,
-        headers={"Content-Type": "application/json"} if data else {},
-    )
+def _http_json(
+    url: str, data: Optional[bytes] = None, token: Optional[str] = None
+) -> tuple[int, dict]:
+    headers = {"Content-Type": "application/json"} if data else {}
+    if token:
+        headers["Authorization"] = f"Bearer {token}"
+    req = urllib.request.Request(url, data=data, headers=headers)
     try:
         with urllib.request.urlopen(req) as resp:
             return resp.status, json.loads(resp.read().decode())
@@ -360,12 +687,14 @@ def _http_json(url: str, data: Optional[bytes] = None) -> tuple[int, dict]:
         return e.code, json.loads(e.read().decode() or "{}")
 
 
-def post_spec(base_url: str, spec_json: str) -> tuple[str, SearchReport, bool]:
+def post_spec(
+    base_url: str, spec_json: str, *, token: Optional[str] = None
+) -> tuple[str, SearchReport, bool]:
     """Client half of the sync endpoint: POST a spec JSON to a running
     service and return ``(cache_key, report, cached)``. The one place that
     understands the response envelope — CLIs and examples share it."""
     status, payload = _http_json(
-        f"{base_url.rstrip('/')}/v1/search", spec_json.encode()
+        f"{base_url.rstrip('/')}/v1/search", spec_json.encode(), token
     )
     if status != 200:
         raise RuntimeError(
@@ -383,10 +712,12 @@ def _cmd_serve(args) -> int:
     from repro.calibration.fit import load_or_train
 
     eta, _ = load_or_train()
-    service = SearchService(
-        Astra(eta), max_entries=args.max_entries, ttl_seconds=args.ttl,
+    store = parse_store_url(
+        args.store, max_entries=args.max_entries, ttl_seconds=args.ttl,
     )
-    serve_forever(service, args.host, args.port)
+    service = SearchService(Astra(eta), store=store)
+    auth = AuthQuota.from_file(args.auth_tokens) if args.auth_tokens else None
+    serve_forever(service, args.host, args.port, auth=auth)
     return 0
 
 
@@ -397,12 +728,12 @@ def _cmd_search(args) -> int:
     base = args.url.rstrip("/")
     if args.async_poll:
         status, payload = _http_json(
-            f"{base}/v1/search?async=1", spec_json.encode()
+            f"{base}/v1/search?async=1", spec_json.encode(), args.token
         )
         while status == 202:
             time.sleep(args.poll_interval)
             status, payload = _http_json(
-                f"{base}/v1/results/{payload['key']}"
+                f"{base}/v1/results/{payload['key']}", token=args.token
             )
         if status != 200:
             print(json.dumps(payload, indent=2))
@@ -411,7 +742,7 @@ def _cmd_search(args) -> int:
         report = SearchReport.from_dict(payload["report"])
     else:
         try:
-            key, report, cached = post_spec(base, spec_json)
+            key, report, cached = post_spec(base, spec_json, token=args.token)
         except RuntimeError as e:
             print(e)
             return 1
@@ -428,7 +759,9 @@ def _cmd_search(args) -> int:
 
 
 def _cmd_stats(args) -> int:
-    status, payload = _http_json(f"{args.url.rstrip('/')}/v1/stats")
+    status, payload = _http_json(
+        f"{args.url.rstrip('/')}/v1/stats", token=args.token
+    )
     print(json.dumps(payload, indent=2))
     return 0 if status == 200 else 1
 
@@ -443,11 +776,20 @@ def main(argv=None) -> int:
     p.add_argument("--max-entries", type=int, default=128)
     p.add_argument("--ttl", type=float, default=None,
                    help="result TTL in seconds (default: no expiry)")
+    p.add_argument("--store", default="memory", metavar="URL",
+                   help="report store: memory | sqlite:PATH | tiered:PATH "
+                        "(durable stores survive restarts and are shared "
+                        "across replicas)")
+    p.add_argument("--auth-tokens", default=None, metavar="FILE",
+                   help="enable bearer-token auth/quota from FILE "
+                        "(lines: TOKEN IDENTITY [REQS_PER_MIN [COLD_PER_MIN]])")
     p.set_defaults(fn=_cmd_serve)
 
     p = sub.add_parser("search", help="POST a spec file to a running service")
     p.add_argument("--url", required=True)
     p.add_argument("--spec", required=True, metavar="SPEC_JSON")
+    p.add_argument("--token", default=None,
+                   help="bearer token for an auth-enabled service")
     p.add_argument("--async-poll", action="store_true",
                    help="submit with ?async=1 and poll /v1/results/<key>")
     p.add_argument("--poll-interval", type=float, default=0.5)
@@ -455,6 +797,8 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("stats", help="print /v1/stats of a running service")
     p.add_argument("--url", required=True)
+    p.add_argument("--token", default=None,
+                   help="bearer token for an auth-enabled service")
     p.set_defaults(fn=_cmd_stats)
 
     args = ap.parse_args(argv)

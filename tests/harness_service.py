@@ -1,0 +1,178 @@
+"""Deterministic test harness for the search service and its stores.
+
+Everything time-like runs on an injected :class:`FakeClock` (TTL, quota
+windows) so restart-survival, cross-replica sharing, expiry and eviction
+are fast tier-1 assertions instead of flaky sleeps. The helpers here are
+shared by tests/test_store.py, tests/test_search_service.py and the CI
+sqlite round-trip step.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import sqlite3
+import threading
+import urllib.error
+import urllib.request
+from typing import Optional
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import Astra
+from repro.serve.search_service import AuthQuota, SearchService, make_server
+from repro.serve.store import ReportStore, SqliteStore
+
+
+class FakeClock:
+    """Injectable clock: advances only when told to."""
+
+    def __init__(self, start: float = 1_000_000.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+class CountingAstra:
+    """Delegating engine that counts real searches — the probe for
+    "the second replica never ran the search"."""
+
+    def __init__(self, astra: Optional[Astra] = None):
+        self.astra = astra if astra is not None else Astra(AnalyticEtaModel())
+        self.calls = 0
+
+    def search(self, spec):
+        self.calls += 1
+        return self.astra.search(spec)
+
+
+class FlakyStore(ReportStore):
+    """Fault-injection wrapper: raise on the next N puts and/or gets.
+
+    Models a durable backend failing mid-write (disk full, lock timeout) —
+    the service must still serve the fresh result and count the failure.
+    """
+
+    kind = "flaky"
+
+    def __init__(self, inner: ReportStore, *, fail_puts: int = 0,
+                 fail_gets: int = 0):
+        super().__init__()
+        self.inner = inner
+        self.fail_puts = fail_puts
+        self.fail_gets = fail_gets
+
+    def get(self, key):
+        if self.fail_gets > 0:
+            self.fail_gets -= 1
+            raise RuntimeError("injected store read failure")
+        return self.inner.get(key)
+
+    def put(self, key, text):
+        if self.fail_puts > 0:
+            self.fail_puts -= 1
+            raise RuntimeError("injected store write failure")
+        self.inner.put(key, text)
+
+    def delete(self, key):
+        self.inner.delete(key)
+
+    def __len__(self):
+        return len(self.inner)
+
+    def close(self):
+        self.inner.close()
+
+    def counters(self):
+        return self.inner.counters()
+
+
+def corrupt_row(path: str, key: Optional[str] = None) -> int:
+    """Flip the stored report text of one (or every) row to garbage without
+    touching its checksum — a bit-rot / hostile-edit fault the store must
+    detect on read. Returns the number of rows corrupted."""
+    conn = sqlite3.connect(path)
+    try:
+        with conn:
+            if key is None:
+                cur = conn.execute("UPDATE reports SET report = 'corrupt!'")
+            else:
+                cur = conn.execute(
+                    "UPDATE reports SET report = 'corrupt!' WHERE key = ?",
+                    (key,),
+                )
+        return cur.rowcount
+    finally:
+        conn.close()
+
+
+def set_schema_version(path: str, version: int) -> None:
+    """Stamp a sqlite file with a foreign schema version (stale-schema
+    fault: the next open must reset the cache, not misread it)."""
+    conn = sqlite3.connect(path)
+    try:
+        with conn:
+            conn.execute(f"PRAGMA user_version = {int(version):d}")
+    finally:
+        conn.close()
+
+
+def two_replicas(
+    db_path: str,
+    *,
+    clock: Optional[FakeClock] = None,
+    ttl_seconds: Optional[float] = None,
+    max_entries: int = 64,
+) -> tuple[SearchService, SearchService, CountingAstra, CountingAstra]:
+    """Two independent SearchService replicas over one sqlite file.
+
+    Each replica has its own engine (with a call counter) and its own
+    :class:`SqliteStore` handle — the sharing happens through the file,
+    exactly like two service processes on one host."""
+    clock = clock or FakeClock()
+    replicas, engines = [], []
+    for _ in range(2):
+        engine = CountingAstra()
+        store = SqliteStore(
+            db_path, max_entries=max_entries, ttl_seconds=ttl_seconds,
+            clock=clock,
+        )
+        replicas.append(SearchService(engine, store=store))
+        engines.append(engine)
+    return replicas[0], replicas[1], engines[0], engines[1]
+
+
+@contextlib.contextmanager
+def http_service(
+    service: SearchService,
+    *,
+    auth: Optional[AuthQuota] = None,
+    max_body_bytes: Optional[int] = None,
+):
+    """Run a service on an ephemeral port; yields the base URL."""
+    kw = {"auth": auth}
+    if max_body_bytes is not None:
+        kw["max_body_bytes"] = max_body_bytes
+    server = make_server(service, port=0, **kw)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield f"http://127.0.0.1:{server.server_address[1]}"
+    finally:
+        server.shutdown()
+        thread.join(timeout=5.0)
+
+
+def request(
+    url: str, data: Optional[bytes] = None, token: Optional[str] = None
+) -> tuple[int, dict]:
+    """One JSON request; HTTP errors come back as (status, payload)."""
+    headers = {"Authorization": f"Bearer {token}"} if token else {}
+    req = urllib.request.Request(url, data=data, headers=headers)
+    try:
+        with urllib.request.urlopen(req) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode() or "{}")

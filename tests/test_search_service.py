@@ -1,14 +1,19 @@
-"""SearchService: spec-keyed LRU+TTL caching, single-flight dedup, and the
-HTTP endpoint round-trip (cold miss then warm hit with identical report
-JSON — the tier-1 service acceptance check)."""
+"""SearchService: spec-keyed caching over pluggable stores, single-flight
+dedup, bearer-token auth/quota, HTTP error paths, and the endpoint round
+trip (cold miss then warm hit with identical report JSON — the tier-1
+service acceptance check). TTL/eviction/quota tests run on the injected
+clock — no sleeps."""
 import json
 import threading
 import time
-import urllib.error
-import urllib.request
 
 import pytest
 
+from harness_service import (
+    FakeClock,
+    http_service as serve_http,
+    request as _request,  # shared HTTP helper (token-aware)
+)
 from repro.calibration.fit import AnalyticEtaModel
 from repro.core import (
     Astra,
@@ -17,7 +22,12 @@ from repro.core import (
     SearchSpec,
     Workload,
 )
-from repro.serve.search_service import SearchService, make_server
+from repro.serve.search_service import (
+    AuthQuota,
+    SearchService,
+    TokenInfo,
+    make_server,
+)
 
 GB, SEQ = 64, 1024
 SMALL_SPACE = {
@@ -135,10 +145,12 @@ def test_single_flight_coalesces_identical_concurrent_specs(tiny_dense):
     threads = [threading.Thread(target=worker) for _ in range(4)]
     for t in threads:
         t.start()
-    # let every thread reach the flight before releasing the search
+    # let every thread reach the flight before releasing the search (an
+    # event-paced poll: waiting on real threads, not on wall-clock logic)
+    pace = threading.Event()
     deadline = time.monotonic() + 5.0
     while svc.stats_dict()["requests"] < 4 and time.monotonic() < deadline:
-        time.sleep(0.01)
+        pace.wait(0.01)
     slow.gate.set()
     for t in threads:
         t.join(timeout=10.0)
@@ -177,15 +189,6 @@ def http_service(tiny_dense):
     yield svc, base
     server.shutdown()
     thread.join(timeout=5.0)
-
-
-def _request(url, data=None):
-    req = urllib.request.Request(url, data=data)
-    try:
-        with urllib.request.urlopen(req) as resp:
-            return resp.status, json.loads(resp.read().decode())
-    except urllib.error.HTTPError as e:
-        return e.code, json.loads(e.read().decode() or "{}")
 
 
 def test_http_round_trip_cold_then_warm(tiny_dense, http_service):
@@ -227,9 +230,10 @@ def test_http_async_submit_and_poll(tiny_dense, http_service):
     )
     assert status in (200, 202)
     key = payload["key"]
+    pace = threading.Event()
     deadline = time.monotonic() + 30.0
     while status != 200 and time.monotonic() < deadline:
-        time.sleep(0.05)
+        pace.wait(0.05)
         status, payload = _request(f"{base}/v1/results/{key}")
     assert status == 200 and payload["status"] == "ready"
     assert SearchReport.from_dict(payload["report"]).best is not None
@@ -248,6 +252,52 @@ def test_http_unknown_key_and_bad_spec(tiny_dense, http_service):
     assert status == 400 and "bad spec" in payload["error"]
     status, _ = _request(f"{base}/v1/nope")
     assert status == 404
+
+
+def test_http_error_paths(tiny_dense, http_service):
+    """Hostile/broken inputs must come back as clean JSON errors, never a
+    traceback or a dropped socket."""
+    svc, base = http_service
+    # malformed JSON body
+    status, payload = _request(f"{base}/v1/search", b"{not json")
+    assert status == 400 and "bad spec" in payload["error"]
+    # valid JSON, wrong wire-envelope version
+    bad_version = dict(_spec(tiny_dense).to_dict(), version=99)
+    status, payload = _request(
+        f"{base}/v1/search", json.dumps(bad_version).encode()
+    )
+    assert status == 400
+    assert "99" in payload["error"] and "Traceback" not in payload["error"]
+    # unknown result key
+    status, payload = _request(f"{base}/v1/results/no-such-key")
+    assert status == 404 and payload["status"] == "unknown"
+    # empty body
+    status, payload = _request(f"{base}/v1/search", b"")
+    assert status == 400
+    # and the service is still healthy afterwards
+    status, _ = _request(f"{base}/v1/search", _spec(tiny_dense).to_json().encode())
+    assert status == 200
+
+
+def test_http_oversized_body_rejected(tiny_dense):
+    svc = _service()
+    server = make_server(svc, port=0, max_body_bytes=1024)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        base = f"http://127.0.0.1:{server.server_address[1]}"
+        body = b" " * 4096  # over the 1 KiB limit; small enough to buffer
+        status, payload = _request(f"{base}/v1/search", body)
+        assert status == 413
+        assert "exceeds" in payload["error"]
+        # a fresh request on a fresh connection still works
+        status, _ = _request(
+            f"{base}/v1/search", _spec(tiny_dense).to_json().encode()
+        )
+        assert status == 200
+    finally:
+        server.shutdown()
+        thread.join(timeout=5.0)
 
 
 def test_http_search_failure_is_a_json_500_not_a_dropped_socket(tiny_dense):
@@ -271,3 +321,189 @@ def test_http_search_failure_is_a_json_500_not_a_dropped_socket(tiny_dense):
     finally:
         server.shutdown()
         thread.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# auth / quota (bearer tokens; fixed windows on the injected clock)
+# ---------------------------------------------------------------------------
+
+def _auth(clock=None, **quotas) -> AuthQuota:
+    tokens = [
+        TokenInfo("tok-alice", "alice", *quotas.get("alice", (None, None))),
+        TokenInfo("tok-bob", "bob", *quotas.get("bob", (None, None))),
+    ]
+    kw = {"clock": clock} if clock is not None else {}
+    return AuthQuota(tokens, **kw)
+
+
+def test_auth_token_file_parsing(tmp_path):
+    f = tmp_path / "tokens.txt"
+    f.write_text(
+        "# fleet tokens\n"
+        "\n"
+        "tok-a team-a 100 5\n"
+        "tok-b team-b - 2\n"
+        "tok-c team-c\n"
+    )
+    auth = AuthQuota.from_file(str(f))
+    a = auth.identify("Bearer tok-a")
+    assert a.identity == "team-a"
+    assert (a.requests_per_window, a.cold_per_window) == (100, 5)
+    b = auth.identify("tok-b")  # bare token accepted too
+    assert (b.requests_per_window, b.cold_per_window) == (None, 2)
+    c = auth.identify("Bearer tok-c")
+    assert (c.requests_per_window, c.cold_per_window) == (None, None)
+    assert auth.identify("Bearer nope") is None
+    with pytest.raises(FileNotFoundError):
+        AuthQuota.from_file(str(tmp_path / "missing.txt"))
+    bad = tmp_path / "bad.txt"
+    bad.write_text("only-a-token\n")
+    with pytest.raises(ValueError):
+        AuthQuota.from_file(str(bad))
+
+
+def test_http_401_without_or_with_unknown_token(tiny_dense):
+    svc = _service()
+    with serve_http(svc, auth=_auth()) as base:
+        body = _spec(tiny_dense).to_json().encode()
+        status, payload = _request(f"{base}/v1/search", body)
+        assert status == 401 and "token" in payload["error"]
+        status, _ = _request(f"{base}/v1/search", body, token="wrong")
+        assert status == 401
+        status, _ = _request(f"{base}/v1/stats")
+        assert status == 401
+        # a real token is admitted everywhere
+        status, _ = _request(f"{base}/v1/search", body, token="tok-alice")
+        assert status == 200
+        status, _ = _request(f"{base}/v1/stats", token="tok-alice")
+        assert status == 200
+
+
+def test_http_request_quota_429_and_window_reset(tiny_dense):
+    clock = FakeClock()
+    auth = _auth(clock=clock, alice=(2, None))
+    svc = _service()
+    with serve_http(svc, auth=auth) as base:
+        body = _spec(tiny_dense).to_json().encode()
+        assert _request(f"{base}/v1/search", body, token="tok-alice")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-alice")[0] == 200
+        status, payload = _request(f"{base}/v1/search", body, token="tok-alice")
+        assert status == 429 and "quota" in payload["error"]
+        # bob has his own budget
+        assert _request(f"{base}/v1/stats", token="tok-bob")[0] == 200
+        # a new window refills alice
+        clock.advance(61.0)
+        assert _request(f"{base}/v1/search", body, token="tok-alice")[0] == 200
+
+
+def test_http_cold_search_quota_charges_only_fresh_searches(tiny_dense):
+    clock = FakeClock()
+    auth = _auth(clock=clock, alice=(None, 1))
+    svc = _service()
+    with serve_http(svc, auth=auth) as base:
+        s1 = _spec(tiny_dense).to_json().encode()
+        s2 = _spec(tiny_dense, device="H100").to_json().encode()
+        # first cold search spends the single cold unit
+        assert _request(f"{base}/v1/search", s1, token="tok-alice")[0] == 200
+        # warm hits are free: same spec again is fine
+        status, payload = _request(f"{base}/v1/search", s1, token="tok-alice")
+        assert status == 200 and payload["cached"] is True
+        # a second distinct spec would need a fresh search -> 429
+        status, payload = _request(f"{base}/v1/search", s2, token="tok-alice")
+        assert status == 429 and "cold-search quota" in payload["error"]
+        assert svc.stats_dict()["misses"] == 1  # the rejected one never ran
+        # next window: the cold search is admitted
+        clock.advance(61.0)
+        status, payload = _request(f"{base}/v1/search", s2, token="tok-alice")
+        assert status == 200 and payload["cached"] is False
+
+
+def test_stats_reports_token_identities(tiny_dense):
+    auth = _auth()
+    svc = _service()
+    with serve_http(svc, auth=auth) as base:
+        body = _spec(tiny_dense).to_json().encode()
+        _request(f"{base}/v1/search", body, token="tok-alice")
+        _request(f"{base}/v1/search", body, token="tok-bob")  # warm hit
+        _request(f"{base}/v1/search", body)  # 401
+        status, stats = _request(f"{base}/v1/stats", token="tok-alice")
+    assert status == 200
+    tokens = stats["auth"]["tokens"]
+    assert tokens["alice"]["requests"] == 2  # search + this stats call
+    assert tokens["alice"]["cold_searches"] == 1
+    assert tokens["bob"]["requests"] == 1
+    assert tokens["bob"]["cold_searches"] == 0  # bob's was a warm hit
+    assert stats["auth"]["unauthorized"] == 1
+    # raw tokens never appear in the stats payload
+    assert "tok-alice" not in json.dumps(stats)
+
+
+def test_quota_window_isolated_per_identity(tiny_dense):
+    clock = FakeClock()
+    auth = _auth(clock=clock, alice=(1, None), bob=(1, None))
+    svc = _service()
+    with serve_http(svc, auth=auth) as base:
+        body = _spec(tiny_dense).to_json().encode()
+        assert _request(f"{base}/v1/search", body, token="tok-alice")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-alice")[0] == 429
+        assert _request(f"{base}/v1/search", body, token="tok-bob")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-bob")[0] == 429
+
+
+def test_http_negative_or_garbage_content_length_is_a_400(tiny_dense):
+    """Content-Length: -1 must not become rfile.read(-1) (a hung thread);
+    garbage must not become an uncaught ValueError."""
+    import http.client
+
+    svc = _service()
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        host, port = server.server_address
+        for bad in ("-1", "abc"):
+            conn = http.client.HTTPConnection(host, port, timeout=5.0)
+            conn.putrequest("POST", "/v1/search")
+            conn.putheader("Content-Length", bad)
+            conn.endheaders()
+            resp = conn.getresponse()
+            payload = json.loads(resp.read().decode())
+            assert resp.status == 400, bad
+            assert "Content-Length" in payload["error"]
+            conn.close()
+    finally:
+        server.shutdown()
+        thread.join(timeout=5.0)
+
+
+def test_auth_token_file_rejects_negative_quota(tmp_path):
+    bad = tmp_path / "neg.txt"
+    bad.write_text("tok-x ci -5 2\n")
+    with pytest.raises(ValueError, match="quota must be >= 0"):
+        AuthQuota.from_file(str(bad))
+
+
+def test_quota_windows_are_per_token_even_when_identity_is_shared(tiny_dense):
+    """Two tokens of one team must not spend each other's budgets."""
+    clock = FakeClock()
+    auth = AuthQuota([
+        TokenInfo("tok-a", "team", requests_per_window=100),
+        TokenInfo("tok-b", "team", requests_per_window=2),
+    ], clock=clock)
+    svc = _service()
+    with serve_http(svc, auth=auth) as base:
+        body = _spec(tiny_dense).to_json().encode()
+        for _ in range(5):  # tok-a's traffic must not consume tok-b's budget
+            assert _request(f"{base}/v1/search", body, token="tok-a")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-b")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-b")[0] == 200
+        assert _request(f"{base}/v1/search", body, token="tok-b")[0] == 429
+        # lifetime totals still aggregate under the shared identity
+        _, stats = _request(f"{base}/v1/stats", token="tok-a")
+    assert stats["auth"]["tokens"]["team"]["requests"] == 8  # 5+2+stats
+    assert stats["auth"]["tokens"]["team"]["throttled"] == 1
+
+
+def test_auth_rejects_duplicate_tokens():
+    with pytest.raises(ValueError, match="duplicate token"):
+        AuthQuota([TokenInfo("tok-x", "a"), TokenInfo("tok-x", "b")])

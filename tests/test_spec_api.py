@@ -23,6 +23,8 @@ from repro.core import (
 from repro.core.batch import BatchedCostSimulator
 from repro.core.hetero import balanced_placements_for, iter_hetero_strategies
 from repro.core.objectives import (
+    DEFAULT_GRAMS_CO2_PER_KWH,
+    CarbonObjective,
     LatencyObjective,
     MoneyObjective,
     ParetoObjective,
@@ -31,10 +33,12 @@ from repro.core.objectives import (
 )
 from repro.core.pareto import (
     CostedStrategy,
+    carbon_cost,
     money_cost,
     optimal_pool,
     pick_within_budget,
     sort_strategies,
+    strategy_watts,
 )
 from repro.core.rules import DEFAULT_RULES
 from repro.core.search import FilterBank, generate_strategies
@@ -196,11 +200,15 @@ def test_spec_json_round_trip_search_identical(llama7b):
 
 def test_spec_rejects_unknown_kinds(llama7b):
     with pytest.raises(ValueError):
-        ObjectiveSpec("carbon")
+        ObjectiveSpec("vibes")
     with pytest.raises(ValueError):
         ObjectiveSpec("throughput", slo_seconds=1.0)  # latency-only knob
     with pytest.raises(ValueError):
         ObjectiveSpec.latency(0.0)
+    with pytest.raises(ValueError):
+        ObjectiveSpec("money", grams_co2_per_kwh=400.0)  # carbon-only knob
+    with pytest.raises(ValueError):
+        ObjectiveSpec.carbon(grams_co2_per_kwh=-1.0)
     d = _spec_mode1(llama7b).to_dict()
     d["pool"]["kind"] = "quantum"
     with pytest.raises(ValueError):
@@ -267,6 +275,13 @@ def test_make_objective_dispatch():
     assert isinstance(make_objective(ObjectiveSpec.pareto(5.0)), ParetoObjective)
     lat = make_objective(ObjectiveSpec.latency(2.5))
     assert isinstance(lat, LatencyObjective) and lat.slo_seconds == 2.5
+    car = make_objective(ObjectiveSpec.carbon(12.0, 300.0), train_tokens=2e9)
+    assert isinstance(car, CarbonObjective)
+    assert car.budget_kg == 12.0 and car.grams_co2_per_kwh == 300.0
+    assert car.train_tokens == 2e9
+    # default grid intensity applies when the spec leaves it unset
+    assert make_objective(ObjectiveSpec.carbon()).grams_co2_per_kwh \
+        == DEFAULT_GRAMS_CO2_PER_KWH
 
 
 def test_latency_objective_picks_cheapest_within_slo(llama7b):
@@ -310,6 +325,84 @@ def test_money_objective_picks_cheapest(llama7b):
     # cheapest pick must sit on the Pareto pool
     assert cheap.pool
     assert min(c.money for c in cheap.pool) == pytest.approx(best_cheap.money)
+
+
+def test_carbon_objective_picks_lowest_emissions(llama7b):
+    tokens = 1e9
+    thr = _astra().search(_spec_mode1(llama7b))
+    green = _astra().search(dataclasses.replace(
+        _spec_mode1(llama7b), objective=ObjectiveSpec.carbon()
+    ))
+    kg = lambda c: carbon_cost(  # noqa: E731
+        c.strategy, c.sim, tokens, DEFAULT_GRAMS_CO2_PER_KWH
+    )
+    assert green.best is not None
+    # carbon ranking is ascending in emissions
+    kgs = [kg(c) for c in green.top]
+    assert kgs == sorted(kgs)
+    # the pick emits no more than the fastest plan
+    assert kgs[0] <= kg(thr.top[0]) + 1e-12
+    # fixed pool, one device type: emissions scale with device-hours, and
+    # they are strictly positive and finite
+    assert 0 < kgs[0] < float("inf")
+
+
+def test_carbon_objective_budget_and_infeasible(llama7b):
+    green = _astra().search(dataclasses.replace(
+        _spec_mode1(llama7b), objective=ObjectiveSpec.carbon()
+    ))
+    best_kg = carbon_cost(
+        green.top[0].strategy, green.top[0].sim, 1e9,
+        DEFAULT_GRAMS_CO2_PER_KWH,
+    )
+    # a budget just above the best pick keeps it
+    ok = _astra().search(dataclasses.replace(
+        _spec_mode1(llama7b),
+        objective=ObjectiveSpec.carbon(budget_kg=best_kg * 1.01),
+    ))
+    assert ok.best == green.best
+    # an impossible budget returns no plan instead of a wrong one
+    none = _astra().search(dataclasses.replace(
+        _spec_mode1(llama7b),
+        objective=ObjectiveSpec.carbon(budget_kg=best_kg * 1e-6),
+    ))
+    assert none.best is None and none.best_sim is None
+
+
+def test_carbon_objective_travels_the_wire(llama7b):
+    spec = dataclasses.replace(
+        _spec_mode1(llama7b),
+        objective=ObjectiveSpec.carbon(budget_kg=50.0, grams_co2_per_kwh=320.0),
+    )
+    round_tripped = SearchSpec.from_json(spec.to_json())
+    assert round_tripped == spec
+    assert round_tripped.objective.kind == "carbon"
+    assert round_tripped.objective.budget == 50.0
+    assert round_tripped.objective.grams_co2_per_kwh == 320.0
+    # the carbon knobs separate cache identities; leaving them at their
+    # defaults does not perturb existing keys
+    base = _spec_mode1(llama7b)
+    assert spec.cache_key() != base.cache_key()
+    assert dataclasses.replace(base).cache_key() == base.cache_key()
+
+
+def test_strategy_watts_homogeneous_and_hetero(llama7b):
+    from repro.core.params import HeteroPlacement, ParallelStrategy
+    from repro.hw.catalog import get_device
+
+    homo = ParallelStrategy(device="A800", num_devices=16)
+    assert strategy_watts(homo) == 16 * get_device("A800").tdp_watts
+    # hetero: 2 A800 stages + 2 H100 stages, 4 devices per stage
+    het = ParallelStrategy(
+        device="A800", num_devices=16, pipeline_parallel=4, tensor_parallel=2,
+        hetero=HeteroPlacement(
+            devices=("A800", "H100"), stages_per_type=(2, 2),
+            layers_per_stage=(16, 16),
+        ),
+    )
+    expect = (2 * 4) * get_device("A800").tdp_watts \
+        + (2 * 4) * get_device("H100").tdp_watts
+    assert strategy_watts(het) == expect
 
 
 # ---------------------------------------------------------------------------

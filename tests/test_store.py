@@ -1,0 +1,453 @@
+"""ReportStore implementations: LRU/TTL semantics, sqlite durability
+(restart survival, cross-replica sharing, corruption and stale-schema
+faults), tiering, and the service-level acceptance flows. Every time-like
+assertion runs on the injected FakeClock — no sleeps."""
+import json
+
+import pytest
+
+from harness_service import (
+    CountingAstra,
+    FakeClock,
+    FlakyStore,
+    corrupt_row,
+    http_service,
+    request,
+    set_schema_version,
+    two_replicas,
+)
+from repro.core import FixedPool, SearchSpec, Workload
+from repro.serve.search_service import SearchService
+from repro.serve.store import (
+    MemoryStore,
+    SqliteStore,
+    TieredStore,
+    parse_store_url,
+)
+
+GB, SEQ = 64, 1024
+SMALL_SPACE = {
+    "tensor_parallel": [1, 2, 4],
+    "pipeline_parallel": [1, 2],
+    "micro_batch_size": [1, 2],
+    "use_distributed_optimizer": [False, True],
+    "recompute_granularity": ["none", "full"],
+}
+
+
+def _spec(arch, device="A800", n=16) -> SearchSpec:
+    return SearchSpec(
+        arch=arch, pool=FixedPool(device, n), workload=Workload(GB, SEQ),
+        space=SMALL_SPACE,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MemoryStore: the extracted LRU+TTL must behave like the old in-service map
+# ---------------------------------------------------------------------------
+
+def test_memory_store_lru_and_ttl():
+    clock = FakeClock()
+    store = MemoryStore(max_entries=2, ttl_seconds=10.0, clock=clock)
+    store.put("a", "A")
+    store.put("b", "B")
+    assert store.get("a") == "A"  # touches a: b is now least-recent
+    store.put("c", "C")  # evicts b
+    assert store.evictions == 1
+    assert store.get("b") is None
+    clock.advance(11.0)
+    assert store.get("a") is None  # expired
+    assert store.expirations == 1
+    assert len(store) == 1  # only c left (lazy expiry dropped a)
+
+
+def test_memory_store_overwrite_refreshes_ttl():
+    clock = FakeClock()
+    store = MemoryStore(max_entries=4, ttl_seconds=10.0, clock=clock)
+    store.put("k", "v1")
+    clock.advance(8.0)
+    store.put("k", "v2")
+    clock.advance(8.0)  # 16s after v1, 8s after v2
+    assert store.get("k") == "v2"
+
+
+# ---------------------------------------------------------------------------
+# SqliteStore: durability + integrity
+# ---------------------------------------------------------------------------
+
+def test_sqlite_store_round_trip_and_restart(tmp_path):
+    path = str(tmp_path / "reports.db")
+    store = SqliteStore(path)
+    store.put("k1", '{"report": 1}')
+    assert store.get("k1") == '{"report": 1}'
+    assert len(store) == 1
+    store.close()
+    # a fresh handle on the same file sees the entry: restart survival
+    store2 = SqliteStore(path)
+    assert store2.get("k1") == '{"report": 1}'
+    store2.close()
+
+
+def test_sqlite_store_ttl_expiry_with_injected_clock(tmp_path):
+    clock = FakeClock()
+    store = SqliteStore(
+        str(tmp_path / "r.db"), ttl_seconds=10.0, clock=clock
+    )
+    store.put("k", "v")
+    clock.advance(5.0)
+    assert store.get("k") == "v"
+    clock.advance(6.0)
+    assert store.get("k") is None
+    assert store.expirations == 1
+    store.close()
+
+
+def test_sqlite_store_put_sweeps_expired_rows(tmp_path):
+    clock = FakeClock()
+    store = SqliteStore(str(tmp_path / "r.db"), ttl_seconds=5.0, clock=clock)
+    store.put("old1", "x")
+    store.put("old2", "y")
+    clock.advance(6.0)
+    store.put("new", "z")  # the write-path sweep collects both stale rows
+    assert store.expirations == 2
+    assert len(store) == 1
+    store.close()
+
+
+def test_sqlite_store_evicts_least_recently_accessed(tmp_path):
+    clock = FakeClock()
+    store = SqliteStore(str(tmp_path / "r.db"), max_entries=2, clock=clock)
+    store.put("a", "A")
+    clock.advance(1.0)
+    store.put("b", "B")
+    clock.advance(1.0)
+    assert store.get("a") == "A"  # a is now fresher than b
+    clock.advance(1.0)
+    store.put("c", "C")  # evicts b (least recently accessed)
+    assert store.evictions == 1
+    assert store.get("b") is None
+    assert store.get("a") == "A" and store.get("c") == "C"
+    store.close()
+
+
+def test_sqlite_store_detects_corrupt_row(tmp_path):
+    path = str(tmp_path / "r.db")
+    store = SqliteStore(path)
+    store.put("k", '{"good": true}')
+    assert corrupt_row(path, "k") == 1
+    assert store.get("k") is None  # checksum mismatch reads as a miss
+    assert store.corruptions == 1
+    assert len(store) == 0  # and the poisoned row is gone
+    store.close()
+
+
+def test_sqlite_store_resets_on_stale_schema_version(tmp_path):
+    path = str(tmp_path / "r.db")
+    store = SqliteStore(path)
+    store.put("k", "v")
+    store.close()
+    set_schema_version(path, 99)  # a future/foreign schema stamp
+    store2 = SqliteStore(path)  # must reset, not misread
+    assert store2.get("k") is None
+    store2.put("k2", "v2")
+    assert store2.get("k2") == "v2"
+    store2.close()
+
+
+def test_sqlite_store_cross_instance_sharing(tmp_path):
+    """Two handles on one file — the multi-replica substrate."""
+    path = str(tmp_path / "r.db")
+    a, b = SqliteStore(path), SqliteStore(path)
+    a.put("k", "from-a")
+    assert b.get("k") == "from-a"
+    b.put("k", "from-b")
+    assert a.get("k") == "from-b"
+    a.close(), b.close()
+
+
+# ---------------------------------------------------------------------------
+# TieredStore
+# ---------------------------------------------------------------------------
+
+def test_tiered_store_write_through_and_promotion(tmp_path):
+    clock = FakeClock()
+    front = MemoryStore(max_entries=8, clock=clock)
+    back = SqliteStore(str(tmp_path / "r.db"), clock=clock)
+    store = TieredStore(front, back)
+    store.put("k", "v")
+    assert front.get("k") == "v" and back.get("k") == "v"  # write-through
+    front.delete("k")  # simulate a restart losing the memory tier
+    assert store.get("k") == "v"  # served from the back...
+    assert front.get("k") == "v"  # ...and promoted into the front
+    store.delete("k")
+    assert store.get("k") is None and len(store) == 0
+    store.close()
+
+
+def test_tiered_promotion_preserves_the_original_ttl_horizon(tmp_path):
+    """A back-tier entry promoted into the front must keep the expiry of
+    the original write — promotion is a move, not a rewrite."""
+    clock = FakeClock()
+    front = MemoryStore(max_entries=8, ttl_seconds=100.0, clock=clock)
+    back = SqliteStore(str(tmp_path / "r.db"), ttl_seconds=100.0, clock=clock)
+    store = TieredStore(front, back)
+    store.put("k", "v")  # expires fleet-wide at t0+100
+    front.delete("k")  # front lost it (restart / eviction)
+    clock.advance(90.0)
+    assert store.get("k") == "v"  # promoted with 10s of life left
+    clock.advance(20.0)  # t0+110: past the original horizon
+    assert store.get("k") is None  # the promoted copy expired too
+    store.close()
+
+
+def test_sqlite_concurrent_fresh_open_both_boot(tmp_path):
+    """Two replicas opening a brand-new sqlite path at once must both come
+    up (the schema DDL serializes instead of racing)."""
+    import threading
+
+    path = str(tmp_path / "fresh.db")
+    stores, errors = [], []
+
+    def boot():
+        try:
+            stores.append(SqliteStore(path))
+        except Exception as e:  # pragma: no cover - the regression
+            errors.append(e)
+
+    threads = [threading.Thread(target=boot) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not errors
+    assert len(stores) == 4
+    stores[0].put("k", "v")
+    assert all(s.get("k") == "v" for s in stores)
+    for s in stores:
+        s.close()
+
+
+def test_tiered_store_aggregates_counters(tmp_path):
+    clock = FakeClock()
+    store = TieredStore(
+        MemoryStore(max_entries=1, ttl_seconds=5.0, clock=clock),
+        SqliteStore(str(tmp_path / "r.db"), max_entries=8,
+                    ttl_seconds=5.0, clock=clock),
+    )
+    store.put("a", "A")
+    store.put("b", "B")  # front (capacity 1) evicts a
+    c = store.counters()
+    assert c["evictions"] == 1
+    clock.advance(6.0)
+    assert store.get("a") is None  # expired in the back too
+    assert store.counters()["expirations"] >= 1
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# store URL syntax
+# ---------------------------------------------------------------------------
+
+def test_parse_store_url(tmp_path):
+    assert isinstance(parse_store_url("memory"), MemoryStore)
+    s = parse_store_url(f"sqlite:{tmp_path}/a.db", ttl_seconds=5.0)
+    assert isinstance(s, SqliteStore) and s.ttl_seconds == 5.0
+    s.close()
+    t = parse_store_url(f"tiered:{tmp_path}/b.db", max_entries=7,
+                        ttl_seconds=9.0)
+    assert isinstance(t, TieredStore)
+    assert isinstance(t.front, MemoryStore) and t.front.max_entries == 7
+    assert isinstance(t.back, SqliteStore)
+    # stats-facing bounds delegate to the durable tier
+    assert t.max_entries == 7 and t.ttl_seconds == 9.0
+    t.close()
+    for bad in ("redis:host", "sqlite:", "nope", ""):
+        with pytest.raises(ValueError):
+            parse_store_url(bad)
+
+
+# ---------------------------------------------------------------------------
+# service-level acceptance: restart survival + cross-replica warm hits
+# ---------------------------------------------------------------------------
+
+def test_service_restart_survival_byte_identical(tiny_dense, tmp_path):
+    """A report cached via SqliteStore survives a service restart: the
+    rebuilt service answers the same POST with a warm hit whose report
+    JSON is byte-identical to the pre-restart response."""
+    path = str(tmp_path / "reports.db")
+    body = _spec(tiny_dense).to_json().encode()
+
+    svc1 = SearchService(CountingAstra(), store=SqliteStore(path))
+    with http_service(svc1) as base:
+        status, cold = request(f"{base}/v1/search", body)
+    assert status == 200 and cold["cached"] is False
+    svc1.close()  # full restart: process state gone, file remains
+
+    svc2 = SearchService(CountingAstra(), store=SqliteStore(path))
+    with http_service(svc2) as base:
+        status, warm = request(f"{base}/v1/search", body)
+        _, stats = request(f"{base}/v1/stats")
+    assert status == 200 and warm["cached"] is True
+    assert json.dumps(warm["report"]) == json.dumps(cold["report"])
+    assert warm["key"] == cold["key"]
+    assert stats["hits"] == 1 and stats["misses"] == 0
+    assert svc2.astra.calls == 0  # the restarted service never searched
+    svc2.close()
+
+
+def test_two_replicas_share_warm_hits(tiny_dense, tmp_path):
+    """Acceptance: two live replicas over one sqlite file — the second
+    replica serves the first's report as a warm hit and never runs the
+    search, proven by /v1/stats counters and the engine call counter."""
+    svc1, svc2, eng1, eng2 = two_replicas(str(tmp_path / "shared.db"))
+    spec_json = _spec(tiny_dense).to_json()
+
+    k1, t1, cached1 = svc1.search_json(spec_json)
+    k2, t2, cached2 = svc2.search_json(spec_json)
+    assert (cached1, cached2) == (False, True)
+    assert k1 == k2 and t1 == t2  # byte-identical across replicas
+    assert eng1.calls == 1 and eng2.calls == 0
+
+    s1, s2 = svc1.stats_dict(), svc2.stats_dict()
+    assert s1["misses"] == 1 and s1["hits"] == 0
+    assert s2["misses"] == 0 and s2["hits"] == 1
+    svc1.close(), svc2.close()
+
+
+def test_two_replicas_share_over_http_stats(tiny_dense, tmp_path):
+    svc1, svc2, eng1, eng2 = two_replicas(str(tmp_path / "shared.db"))
+    body = _spec(tiny_dense).to_json().encode()
+    with http_service(svc1) as base1, http_service(svc2) as base2:
+        status1, cold = request(f"{base1}/v1/search", body)
+        status2, warm = request(f"{base2}/v1/search", body)
+        _, stats2 = request(f"{base2}/v1/stats")
+    assert status1 == status2 == 200
+    assert cold["cached"] is False and warm["cached"] is True
+    assert warm["report"] == cold["report"]
+    assert stats2["hits"] == 1 and stats2["misses"] == 0
+    assert eng2.calls == 0
+    svc1.close(), svc2.close()
+
+
+def test_replicas_share_ttl_horizon(tiny_dense, tmp_path):
+    clock = FakeClock()
+    svc1, svc2, eng1, eng2 = two_replicas(
+        str(tmp_path / "shared.db"), clock=clock, ttl_seconds=100.0
+    )
+    spec_json = _spec(tiny_dense).to_json()
+    svc1.search_json(spec_json)
+    clock.advance(50.0)
+    assert svc2.search_json(spec_json)[2] is True  # fresh on both replicas
+    clock.advance(60.0)  # 110s after the write: expired fleet-wide
+    assert svc2.search_json(spec_json)[2] is False
+    assert eng2.calls == 1
+    svc1.close(), svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: the service contains store failures
+# ---------------------------------------------------------------------------
+
+def test_store_raising_mid_write_still_serves_the_result(tiny_dense):
+    store = FlakyStore(MemoryStore(), fail_puts=1)
+    svc = SearchService(CountingAstra(), store=store)
+    spec_json = _spec(tiny_dense).to_json()
+    key, text, cached = svc.search_json(spec_json)  # put fails underneath
+    assert cached is False and text  # caller still gets the fresh report
+    assert svc.stats_dict()["store_put_errors"] == 1
+    assert len(store) == 0  # nothing reached the store...
+    # ...but the completed report stays reachable: async pollers see it
+    status, polled = svc.result_json(key)
+    assert status == "ready" and polled == text
+    # and a repeat request is served from the orphan fallback, no re-search
+    _, t2, cached2 = svc.search_json(spec_json)
+    assert cached2 is True and t2 == text
+    assert svc.astra.calls == 1
+    # serving the orphan retried the (now healthy) store: healed durably
+    assert len(store) == 1
+    assert store.get(key) == text
+
+
+def test_store_raising_on_read_degrades_to_miss(tiny_dense):
+    store = FlakyStore(MemoryStore(), fail_gets=1)
+    svc = SearchService(CountingAstra(), store=store)
+    spec_json = _spec(tiny_dense).to_json()
+    _, t1, cached = svc.search_json(spec_json)  # read fault -> cold search
+    assert cached is False
+    assert svc.stats_dict()["store_get_errors"] == 1
+    _, t2, cached2 = svc.search_json(spec_json)  # store healthy again
+    assert cached2 is True and t2 == t1
+
+
+def test_corrupt_sqlite_row_triggers_clean_re_search(tiny_dense, tmp_path):
+    path = str(tmp_path / "r.db")
+    svc = SearchService(CountingAstra(), store=SqliteStore(path))
+    spec_json = _spec(tiny_dense).to_json()
+    _, t1, _ = svc.search_json(spec_json)
+    assert corrupt_row(path) == 1
+    key, t2, cached = svc.search_json(spec_json)
+    assert cached is False  # corruption detected, never served
+
+    def strip_timings(obj):  # wall-clock fields are measured per run
+        if isinstance(obj, dict):
+            return {k: strip_timings(v) for k, v in obj.items()
+                    if not k.endswith("seconds")}
+        if isinstance(obj, list):
+            return [strip_timings(v) for v in obj]
+        return obj
+
+    # the re-run reproduces the identical result (modulo measured times)
+    assert strip_timings(json.loads(t2)) == strip_timings(json.loads(t1))
+    assert svc.stats_dict()["corruptions"] == 1
+    assert svc.astra.calls == 2
+    svc.close()
+
+
+def test_tiered_store_rejects_mismatched_ttl_clocks(tmp_path):
+    """The classes' natural clock defaults differ (monotonic vs wall);
+    silently mixing them would make promoted entries immortal."""
+    with pytest.raises(ValueError):
+        TieredStore(
+            MemoryStore(ttl_seconds=60.0),
+            SqliteStore(str(tmp_path / "r.db"), ttl_seconds=60.0),
+        )
+    # no TTL anywhere: clocks never stamp expiries, any pairing is fine
+    t = TieredStore(MemoryStore(), SqliteStore(str(tmp_path / "r2.db")))
+    t.close()
+
+
+def test_stats_contained_when_store_is_broken(tiny_dense):
+    """/v1/stats is the endpoint an operator polls when the store is sick —
+    a store whose live reads raise must degrade, not drop the request."""
+
+    class DetachedStore(FlakyStore):
+        def __len__(self):
+            raise RuntimeError("store detached")
+
+        def counters(self):
+            raise RuntimeError("store detached")
+
+    svc = SearchService(CountingAstra(), store=DetachedStore(MemoryStore()))
+    svc.search_json(_spec(tiny_dense).to_json())
+    d = svc.stats_dict()  # must not raise
+    assert d["entries"] is None and "store detached" in d["store_error"]
+    assert d["misses"] == 1
+    with http_service(svc) as base:
+        status, payload = request(f"{base}/v1/stats")
+    assert status == 200 and payload["entries"] is None
+
+
+def test_tiered_promotion_with_ttl_front_over_no_ttl_back(tmp_path):
+    """A no-expiry back entry promoted into a TTL-bearing front must adopt
+    the front's TTL policy, not become immortal there."""
+    clock = FakeClock()
+    front = MemoryStore(max_entries=8, ttl_seconds=60.0, clock=clock)
+    back = SqliteStore(str(tmp_path / "r.db"), clock=clock)  # no TTL
+    store = TieredStore(front, back)
+    store.put("k", "v")
+    front.delete("k")
+    assert store.get("k") == "v"  # promoted, stamped with the front's TTL
+    clock.advance(61.0)
+    assert front.get("k") is None  # the promoted copy expired in the front
+    assert store.get("k") == "v"  # still durable in the back
+    store.close()
