@@ -42,6 +42,13 @@ def _derived(name: str, rows: list[dict]) -> str:
             if eng:
                 out += (f";engine_speedup={eng[0]['speedup']}x"
                         f";rankings_identical={eng[0]['rankings_identical']}")
+            par = [r for r in rows if r["bench"] == "table1-parallel"
+                   and r["workers"] > 1]
+            if par:
+                best = max(r["speedup_vs_serial"] for r in par)
+                out += (f";parallel_speedup={best}x"
+                        f";parallel_identical="
+                        f"{all(r['report_identical'] for r in par)}")
             return out
         if name in ("fig5", "fig6"):
             ratios = [r["ratio"] for r in rows if r.get("ratio")]

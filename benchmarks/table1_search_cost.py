@@ -21,15 +21,37 @@ service, so every reported report crossed the wire format.
 the same spec served cold, then warm after a full service restart against
 the same sqlite file, then warm from a *second replica* sharing that file —
 the paper's pay-once cost now survives restarts and is fleet-shared.
+
+``table1-parallel`` rows measure the sharded execution engine
+(``Limits.workers`` -> :mod:`repro.core.parallel_eval`): one mode-2 and one
+mode-3 setting searched cold at workers=1 vs workers=2/4 on this host, with
+the winning reports asserted byte-identical (wall-time fields normalized).
+``speedup_vs_serial`` is realized wall time and therefore bounded by the
+host's free cores (``host_cores`` is recorded next to it); for the mode-3
+setting the rows also record the host-independent work partition —
+``shard_max_s``/``shard_sum_s`` from timing each shard's work serially —
+whose ``partition_speedup`` (serial work / slowest shard) is what a host
+with >= workers free cores realizes.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import tempfile
 import time
 
 from repro.configs import PAPER_MODELS
-from repro.core import Astra, CostSimulator, FixedPool, SearchSpec, Workload
+from repro.core import (
+    Astra,
+    CostSimulator,
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
 from repro.core.batch import BatchedCostSimulator
 from repro.core.params import GpuConfig
 from repro.core.search import generate_strategies
@@ -45,6 +67,77 @@ ENGINE_SETTINGS = [("llama2-7b", 256), ("llama2-13b", 256), ("llama2-70b", 1024)
 SERVICE_SETTINGS = [("llama2-7b", 64), ("llama2-70b", 256)]
 # durable-store subset: restart + cross-replica amortization
 PERSIST_SETTINGS = [("llama2-7b", 64)]
+# parallel-engine subset: one mode-2 (exhaustive sweep, so the stream is
+# big enough to shard) and one mode-3 setting
+PARALLEL_WORKERS = [1, 2, 4]
+
+
+def _parallel_settings():
+    return [
+        ("llama2-7b", "hetero", SearchSpec(
+            arch=PAPER_MODELS["llama2-7b"],
+            pool=HeteroCaps(64, (("A800", 32), ("H100", 32)),
+                            prune_slack=None),
+            workload=Workload(global_batch=256, seq=2048),
+        )),
+        ("llama2-7b", "sweep", SearchSpec(
+            arch=PAPER_MODELS["llama2-7b"],
+            pool=DeviceSweep(("A800", "H100"), 256),
+            workload=Workload(global_batch=1024, seq=4096),
+            objective=ObjectiveSpec.pareto(None),
+        )),
+    ]
+
+
+def parallel_rows(eta) -> list[dict]:
+    """Cold wall-time at each worker count, fresh engine per run, with the
+    byte-identity of the winning report asserted against workers=1."""
+    rows = []
+    for model, pool_kind, spec in _parallel_settings():
+        # one unrecorded warmup fills the process-wide layer-census caches
+        # that forked workers inherit, so neither side gets a cold-cache
+        # handicap relative to the other
+        Astra(eta).search(dataclasses.replace(spec, limits=Limits(workers=1)))
+        base_time, base_norm = None, None
+        for w in PARALLEL_WORKERS:
+            # fresh engine per run so every run is a true cold search
+            astra = Astra(eta)
+            run_spec = dataclasses.replace(spec, limits=Limits(workers=w))
+            t0 = time.perf_counter()
+            rep = astra.search(run_spec)
+            cold = time.perf_counter() - t0
+            norm = rep.normalized_json()
+            if w == 1:
+                base_time, base_norm = cold, norm
+            identical = norm == base_norm
+            assert identical, f"workers={w} report diverged on {pool_kind}"
+            row = {
+                "bench": "table1-parallel",
+                "model": model,
+                "pool": pool_kind,
+                "workers": w,
+                "host_cores": os.cpu_count(),
+                "evaluated": rep.evaluated,
+                "cold_s": round(cold, 3),
+                "speedup_vs_serial": round(base_time / max(cold, 1e-9), 2),
+                "report_identical": identical,
+            }
+            if pool_kind == "sweep" and w > 1:
+                # host-independent evidence: time each shard's work alone
+                from repro.core.parallel_eval import evaluate_shard
+
+                shard_times = []
+                for i in range(w):
+                    t0 = time.perf_counter()
+                    evaluate_shard(run_spec, eta_model=eta, shard=(i, w))
+                    shard_times.append(time.perf_counter() - t0)
+                row["shard_sum_s"] = round(sum(shard_times), 3)
+                row["shard_max_s"] = round(max(shard_times), 3)
+                row["partition_speedup"] = round(
+                    base_time / max(max(shard_times), 1e-9), 2
+                )
+            rows.append(row)
+    return rows
 
 
 def compare_engines(
@@ -216,4 +309,7 @@ def run(eta) -> list[dict]:
 
     # durable-store amortization: restart + cross-replica warm hits
     persist_rows = [service_persist_row(eta, m, n) for m, n in PERSIST_SETTINGS]
-    return rows + engine_rows + service_rows + persist_rows
+
+    # sharded parallel execution: workers=1 vs 2/4 cold wall-time
+    par_rows = parallel_rows(eta)
+    return rows + engine_rows + service_rows + persist_rows + par_rows

@@ -138,5 +138,18 @@ print(f"[service] warm hit == cold report; "
 # In production the cache is durable and shared: `--store sqlite:reports.db`
 # makes reports survive restarts and be served warm by every replica on the
 # file, and `--auth-tokens tokens.txt` turns on bearer-token auth with
-# per-token request/cold-search quotas (401/429). See examples/README.md
-# §Persistence and §Auth for the store URL and token-file formats.
+# per-token request/cold-search quotas (401/429, token-bucket rate limits).
+# See examples/README.md §Persistence and §Auth for the store URL and
+# token-file formats.
+#
+# Big searches parallelize: Limits(workers=N) shards every candidate
+# stream over N workers (0 = one per core) and merges the collectors —
+# the report is byte-identical to the serial one, and `workers` is
+# dropped from the spec's cache_key(), so parallel and serial searches of
+# one spec share a cache entry. The serve CLI can pin it fleet-side
+# (`serve --search-workers 0`) and runs cold searches of distinct specs
+# concurrently (`--search-concurrency`). E.g.:
+#     rep = astra.search(SearchSpec(arch=llama7b,
+#                                   pool=DeviceSweep(("A800", "H100"), 512),
+#                                   workload=workload,
+#                                   limits=Limits(workers=0)))

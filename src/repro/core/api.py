@@ -64,15 +64,16 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
+import threading
 import time
-from typing import Iterable, Iterator, Optional, Sequence
+from typing import Iterable, Optional, Sequence
 
-from repro.core import wire
+from repro.core import parallel_eval, wire
 from repro.core.batch import BatchedCostSimulator, stream_evaluate
 from repro.core.objectives import make_objective
 from repro.core.params import ParallelStrategy
 from repro.core.pareto import CostedStrategy
-from repro.core.planner import build_plan
+from repro.core.planner import build_plan, pool_mode, timed as _timed
 from repro.core.rules import DEFAULT_RULES
 from repro.core.search import SearchCounts
 from repro.core.simulate import CostSimulator, SimResult
@@ -140,6 +141,20 @@ class SearchReport:
     def from_json(cls, text: str) -> "SearchReport":
         return cls.from_dict(json.loads(text))
 
+    def normalized_json(self) -> str:
+        """Report JSON with the wall-time fields zeroed — the canonical
+        comparator for "same search result": two reports of one spec (e.g.
+        a serial and a parallel run, or two hosts) must agree on this
+        string byte-for-byte even though their timings differ. Every field
+        that legitimately varies between runs is normalized here and
+        nowhere else."""
+        return dataclasses.replace(
+            self,
+            search_seconds=0.0,
+            simulate_seconds=0.0,
+            counts=dataclasses.replace(self.counts, gen_seconds=0.0),
+        ).to_json()
+
 
 class Astra:
     """Facade over the spec -> plan -> stream pipeline."""
@@ -152,38 +167,77 @@ class Astra:
         use_batched: bool = True,
         chunk_size: int = 512,
     ):
+        self.eta = eta_model
         self.simulator = CostSimulator(eta_model)
         self.batched = BatchedCostSimulator(eta_model)
         self.rules = rules
         self.use_batched = use_batched
         self.chunk_size = chunk_size
+        # the serial path evaluates on the shared engines above, whose memo
+        # tables are not safe under concurrent mutation. The lock is only
+        # ever try-acquired: the first concurrent serial search gets the
+        # warm shared engines, the rest evaluate on private ones — a
+        # multi-threaded caller (the search service) always overlaps.
+        # Parallel searches (workers != 1) never touch the shared engines.
+        self._engine_lock = threading.Lock()
 
     # -- the unified entry point -------------------------------------------
     def search(self, spec: SearchSpec) -> SearchReport:
-        """Run one declarative search spec end to end."""
-        t0 = time.perf_counter()
-        plan = build_plan(spec, rules=self.rules)
-        objective = make_objective(
-            spec.objective, train_tokens=spec.workload.train_tokens
-        )
-        collector = objective.collector(spec.limits.top_k)
-        engine = self.batched if self.use_batched else self.simulator
-        chunk_size = spec.limits.chunk_size or self.chunk_size
-        w = spec.workload
+        """Run one declarative search spec end to end.
 
-        evaluated = 0
-        budget = spec.limits.max_candidates
-        for stream in plan.streams:
-            it: Iterable[ParallelStrategy] = stream.strategies
-            if budget is not None:
-                if budget <= evaluated:
-                    break
-                it = itertools.islice(it, budget - evaluated)
-            evaluated += stream_evaluate(
-                engine, spec.arch, _timed(it, plan.counts), collector.push,
-                global_batch=w.global_batch, seq=w.seq,
-                train_tokens=w.train_tokens, chunk_size=chunk_size,
+        ``spec.limits.workers`` picks the execution engine: 1 evaluates
+        serially on this facade's shared engines; N > 1 (or 0 = one per
+        core) shards every candidate stream over N workers
+        (:mod:`repro.core.parallel_eval`) and merges the collectors — same
+        report, same funnel counts, wall-time fields aside. A spec with
+        ``max_candidates`` always runs serially (the cap is defined on the
+        serial stream order).
+        """
+        workers = parallel_eval.resolve_workers(spec.limits.workers)
+        if workers > 1 and spec.limits.max_candidates is None:
+            return self._search_parallel(spec, workers)
+        return self._search_serial(spec)
+
+    def _search_serial(self, spec: SearchSpec) -> SearchReport:
+        t0 = time.perf_counter()
+        # prefer the shared warm engines; when another thread already owns
+        # them (a concurrent serial search through a multi-threaded
+        # service), evaluate on private engines instead of queueing — the
+        # engines' caches never change values, so the report is identical
+        # either way and distinct specs truly overlap
+        locked = self._engine_lock.acquire(blocking=False)
+        try:
+            if locked:
+                engine = self.batched if self.use_batched else self.simulator
+            else:
+                engine = (
+                    BatchedCostSimulator(self.eta) if self.use_batched
+                    else CostSimulator(self.eta)
+                )
+            plan = build_plan(spec, rules=self.rules)
+            objective = make_objective(
+                spec.objective, train_tokens=spec.workload.train_tokens
             )
+            collector = objective.collector(spec.limits.top_k)
+            chunk_size = spec.limits.chunk_size or self.chunk_size
+            w = spec.workload
+
+            evaluated = 0
+            budget = spec.limits.max_candidates
+            for stream in plan.streams:
+                it: Iterable[ParallelStrategy] = stream.strategies
+                if budget is not None:
+                    if budget <= evaluated:
+                        break
+                    it = itertools.islice(it, budget - evaluated)
+                evaluated += stream_evaluate(
+                    engine, spec.arch, _timed(it, plan.counts), collector.push,
+                    global_batch=w.global_batch, seq=w.seq,
+                    train_tokens=w.train_tokens, chunk_size=chunk_size,
+                )
+        finally:
+            if locked:
+                self._engine_lock.release()
 
         top, pool = collector.results()
         best = objective.select(top, pool)
@@ -201,21 +255,35 @@ class Astra:
             evaluated=evaluated,
         )
 
+    def _search_parallel(self, spec: SearchSpec, workers: int) -> SearchReport:
+        """Sharded execution: fan out, merge collectors, same report.
 
-def _timed(
-    it: Iterable[ParallelStrategy], counts: SearchCounts
-) -> Iterator[ParallelStrategy]:
-    """Accumulate generator wall-time into ``counts.gen_seconds`` so the
-    Table-1 search/simulate split stays honest under streaming. Every mode
-    goes through this — generation + filtering time is ``search_seconds``,
-    the remainder of the e2e wall-time is ``simulate_seconds``."""
-    it = iter(it)
-    while True:
+        ``search_seconds`` is the summed generation CPU time across workers
+        (funnel counts merge exactly; wall-time is what shrinks), and
+        ``simulate_seconds`` is clamped at zero when the summed generation
+        time exceeds the parallel wall-time.
+        """
         t0 = time.perf_counter()
-        try:
-            s = next(it)
-        except StopIteration:
-            counts.gen_seconds += time.perf_counter() - t0
-            return
-        counts.gen_seconds += time.perf_counter() - t0
-        yield s
+        objective = make_objective(
+            spec.objective, train_tokens=spec.workload.train_tokens
+        )
+        collector, counts, evaluated = parallel_eval.run_sharded(
+            spec, eta_model=self.eta, workers=workers, rules=self.rules,
+            use_batched=self.use_batched,
+            chunk_size=spec.limits.chunk_size or self.chunk_size,
+        )
+        top, pool = collector.results()
+        best = objective.select(top, pool)
+        total = time.perf_counter() - t0
+        search_seconds = counts.gen_seconds
+        return SearchReport(
+            mode=pool_mode(spec.pool),
+            best=best.strategy if best else None,
+            best_sim=best.sim if best else None,
+            top=top,
+            counts=counts,
+            search_seconds=search_seconds,
+            simulate_seconds=max(total - search_seconds, 0.0),
+            pool=pool,
+            evaluated=evaluated,
+        )

@@ -13,8 +13,11 @@ observation, §3.5). This module exploits that structure end to end:
   resolved against the eta model in ONE vectorized ``compute_times`` /
   ``comm_times`` call and cached in a persistent op-time table;
 * per-strategy evaluation is then NumPy dot-products of count-vectors
-  against the time table, composed with the shared Eq. 22 algebra
-  (:func:`~repro.core.simulate.compose_sim_result`);
+  against the time table; the overlap/offload discounts
+  (:meth:`BatchedCostSimulator._finalize_pending`) and the Eq. 22 schedule
+  composition (:meth:`BatchedCostSimulator._compose_batch`) each run as one
+  array pass over the whole chunk — the scalar
+  :func:`~repro.core.simulate.compose_sim_result` stays the reference;
 * :meth:`BatchedCostSimulator.evaluate_stream` adds chunked streaming with
   an incremental top-k heap and an incremental Pareto staircase, so mode-3's
   device-count sweep never materializes the full ``CostedStrategy`` list.
@@ -45,7 +48,7 @@ from repro.core.simulate import (
     _P2P_OVERLAP_EFFICIENCY,
     _PCIE_BW,
     SimResult,
-    compose_sim_result,
+    strategy_money_per_hour,
 )
 
 # backwards-compat aliases (the collectors moved to repro.core.pareto)
@@ -282,6 +285,65 @@ class BatchedCostSimulator:
             )
 
     # -- per-stage timing (mirrors CostSimulator.stage_times) ---------------
+    def _finalize_pending(self, pending_time: dict) -> None:
+        """Vectorized :meth:`_finalize_stage` over every pending timing key.
+
+        One array pass applies the overlap/offload discounts to all pending
+        stages at once. Elementwise float64 arithmetic with ``np.where``
+        selection reproduces the scalar branches bit-for-bit (the same
+        multiplications and min/max in the same order), which
+        tests/test_batch_sim.py's parity suite and the dedicated
+        finalize-parity test both pin down.
+        """
+        items = list(pending_time.items())
+        m = len(items)
+        raw = np.array(
+            [self._raw_cache[ckey] for _, (ckey, _) in items], dtype=np.float64
+        )
+        (t_fwd_comp, t_rc, t_opt, t_fwd_comm, t_dp, h, rs_sum, opt_bytes,
+         bwd_mult) = raw.T
+
+        def flags(attr):
+            return np.fromiter(
+                (getattr(s, attr) for _, (_, s) in items), np.bool_, m
+            )
+
+        tp_ov = flags("tp_comm_overlap")
+        p2p_ov = flags("overlap_p2p")
+        grad_ov = flags("overlap_grad_reduce")
+        use_dist = flags("use_distributed_optimizer")
+        param_ov = flags("overlap_param_gather")
+        offload = flags("offload_optimizer")
+
+        t_fwd_comm = np.where(
+            tp_ov, t_fwd_comm * (1.0 - _OVERLAP_EFFICIENCY * 0.5), t_fwd_comm
+        )
+        t_fwd = t_fwd_comp + t_fwd_comm
+        t_bwd_comp = bwd_mult * t_fwd_comp + t_rc
+        t_bwd = t_bwd_comp + t_fwd_comm
+
+        h = np.where(p2p_ov, h * (1.0 - _P2P_OVERLAP_EFFICIENCY), h)
+
+        # ZeRO: only the grad reduce-scatter overlaps with backward unless
+        # overlap_param_gather is on (same rule as the scalar branch)
+        overlappable = np.where(use_dist & ~param_ov, rs_sum, t_dp)
+        hidden = np.minimum(_OVERLAP_EFFICIENCY * overlappable, t_bwd_comp)
+        t_dp = np.where(
+            grad_ov & (t_dp > 0), np.maximum(t_dp - hidden, 0.0), t_dp
+        )
+
+        t_off = opt_bytes / _PCIE_BW
+        t_opt = np.where(
+            offload, t_opt + t_off * np.where(grad_ov, 0.3, 1.0), t_opt
+        )
+
+        cache = self._stage_time_cache
+        for r, (tkey, _) in enumerate(items):
+            cache[tkey] = (
+                float(t_fwd[r]), float(t_bwd[r]), float(h[r]),
+                float(t_dp[r]), float(t_opt[r]),
+            )
+
     def _finalize_stage(
         self, raw: tuple, s: ParallelStrategy
     ) -> tuple[float, float, float, float, float]:
@@ -364,19 +426,77 @@ class BatchedCostSimulator:
             self._sum_pending(pending)
 
         if pending_time:
-            for tkey, (ckey, s) in pending_time.items():
-                self._stage_time_cache[tkey] = self._finalize_stage(
-                    self._raw_cache[ckey], s
-                )
+            self._finalize_pending(pending_time)
 
+        return self._compose_batch(strategies, plans, global_batch, seq)
+
+    # -- chunk-wide Eq. 22 composition --------------------------------------
+    def _compose_batch(
+        self,
+        strategies: Sequence[ParallelStrategy],
+        plans: list,
+        global_batch: int,
+        seq: int,
+    ) -> list[SimResult]:
+        """Vectorized :func:`~repro.core.simulate.compose_sim_result` over a
+        whole chunk: the per-stage (tf, tb, h, dp, opt) tuples of every
+        strategy are flattened into one array and the Eq. 22 schedule
+        algebra runs as segment reductions (``reduceat``) instead of
+        per-strategy Python. Per-strategy values depend only on that
+        strategy's own segment, so results are independent of how a stream
+        was chunked — a property the parallel engine relies on.
+        """
+        if not strategies:
+            return []
         cache = self._stage_time_cache
-        return [
-            compose_sim_result(
-                s, [cache[tkey] for tkey, _, _, _, _ in plan],
-                global_batch=global_batch, seq=seq,
-            )
-            for s, plan in zip(strategies, plans)
-        ]
+        nstrat = len(strategies)
+        seg = np.fromiter((len(p) for p in plans), np.int64, nstrat)
+        starts = np.zeros(nstrat, np.int64)
+        np.cumsum(seg[:-1], out=starts[1:])
+        flat = np.array(
+            [cache[tkey] for plan in plans for tkey, _, _, _, _ in plan],
+            dtype=np.float64,
+        )  # (total stages, 5)
+        tf, tb, h, dp, opt = flat.T
+        t = tf + tb
+
+        vp = np.fromiter(
+            (float(max(s.virtual_pipeline_stages, 1)) for s in strategies),
+            np.float64, nstrat,
+        )
+        K = np.fromiter(
+            (float(s.num_microbatches(global_batch)) for s in strategies),
+            np.float64, nstrat,
+        )
+        cost = t + np.repeat(vp, seg) * h
+        steady = np.maximum.reduceat(cost, starts)
+        total = np.add.reduceat(cost, starts)
+        pipeline = K * steady + (total - steady) / vp
+        bubble = np.maximum(pipeline - K * steady, 0.0)
+        dp_exposed = np.maximum.reduceat(dp, starts)
+        opt_time = np.maximum.reduceat(opt, starts)
+        step = pipeline + dp_exposed + opt_time
+
+        tokens = float(global_batch) * seq
+        out = []
+        for r, s in enumerate(strategies):
+            a, b = int(starts[r]), int(starts[r] + seg[r])
+            mph = strategy_money_per_hour(s)
+            st = float(step[r])
+            out.append(SimResult(
+                step_time=st,
+                throughput_samples=global_batch / st,
+                throughput_tokens=tokens / st,
+                pipeline_time=float(pipeline[r]),
+                bubble_time=float(bubble[r]),
+                dp_exposed_time=float(dp_exposed[r]),
+                optimizer_time=float(opt_time[r]),
+                stage_times=t[a:b].tolist(),
+                stage_p2p=h[a:b].tolist(),
+                money_per_hour=mph,
+                money_per_step=mph / 3600.0 * st,
+            ))
+        return out
 
     def simulate(
         self, arch: ModelArch, s: ParallelStrategy, *, global_batch: int, seq: int
@@ -448,6 +568,46 @@ def stream_evaluate(
                     throughput=sim.throughput_tokens,
                     money=money_cost(sim, train_tokens),
                 )
+            )
+        n += len(chunk)
+    return n
+
+
+def stream_evaluate_indexed(
+    engine,
+    arch: ModelArch,
+    pairs: Iterable[tuple[tuple, ParallelStrategy]],
+    push: Callable[[CostedStrategy, tuple], None],
+    *,
+    global_batch: int,
+    seq: int,
+    train_tokens: float,
+    chunk_size: int = 512,
+) -> int:
+    """Seq-carrying variant of :func:`stream_evaluate` for sharded streams.
+
+    Consumes ``(seq, strategy)`` pairs (a stream's
+    :meth:`~repro.core.planner.CandidateStream.shard` view) and calls
+    ``push(costed, seq)`` so a mergeable collector can tie-break on the
+    candidate's exact serial-stream position. Chunking is identical to the
+    plain evaluator — and because the engine's per-strategy results do not
+    depend on chunk composition, the costed values are too.
+    """
+    n = 0
+    for chunk in _chunks(pairs, chunk_size):
+        strategies = [s for _, s in chunk]
+        sims = engine.simulate_batch(
+            arch, strategies, global_batch=global_batch, seq=seq
+        )
+        for (q, s), sim in zip(chunk, sims):
+            push(
+                CostedStrategy(
+                    strategy=s,
+                    sim=sim,
+                    throughput=sim.throughput_tokens,
+                    money=money_cost(sim, train_tokens),
+                ),
+                q,
             )
         n += len(chunk)
     return n

@@ -233,6 +233,8 @@ def iter_hetero_strategies(
     fast: bool = False,
     base_kwargs: Optional[dict] = None,
     prune_slack: Optional[float] = None,
+    shard: tuple[int, int] = (0, 1),
+    indexed: bool = False,
 ) -> Iterable[ParallelStrategy]:
     """Full mode-2 space: (D, T, P) x stage placements.
 
@@ -242,13 +244,25 @@ def iter_hetero_strategies(
     is the paper's full enumeration. ``prune_slack`` (fast mode only) skips
     compositions whose water-filling lower bound is dominated — see
     :func:`balanced_placements_for`.
+
+    ``shard=(i, n)`` deals the (tp, pp, dp, mbs) *cells* round-robin to the
+    n workers: a worker computes placements (the water-filling solve or the
+    paper's full enumeration — the expensive generation work) only for the
+    cells it owns, so mode-2 generation shards along with evaluation.
+    ``indexed=True`` yields ``((cell_idx, placement_idx), strategy)`` pairs
+    — the lexicographic serial stream position the mergeable collectors
+    tie-break on (cells in sweep order, placements in order within a cell).
     """
+    shard_i, shard_n = shard
+    if not (0 <= shard_i < shard_n):
+        raise ValueError(f"shard index {shard_i} not in [0, {shard_n})")
     base_kwargs = dict(base_kwargs or {})
     pps = pipeline_options or [
         p for p in (2, 4, 8, 16, 32, 64) if p <= min(arch.num_layers, pool.total_devices)
     ]
     primary = pool.type_caps[0][0]
     placement_cache: dict[tuple[int, int], list[HeteroPlacement]] = {}
+    cell = -1
     for tp in tensor_parallel_options:
         if not arch.is_attention_free and arch.heads % tp != 0:
             continue
@@ -260,6 +274,14 @@ def iter_hetero_strategies(
             for dp in dps:
                 for mbs in micro_batches:
                     if global_batch % (dp * mbs) != 0:
+                        continue
+                    # cell-level round-robin: skip BEFORE the placement
+                    # solve, so non-owned cells cost nothing. The cell
+                    # index advances identically for every worker (it
+                    # depends only on the sweep structure), which is what
+                    # keeps the shards an exact partition.
+                    cell += 1
+                    if (cell - shard_i) % shard_n:
                         continue
                     if fast:
                         key = (pp, dp * tp)
@@ -276,10 +298,12 @@ def iter_hetero_strategies(
                             arch, pool, pipeline_parallel=pp,
                             data_parallel=dp, tensor_parallel=tp,
                         )
+                    pl_idx = -1
                     for pl in placements:
                         if pl is None or pl.total_layers != arch.num_layers:
                             continue
-                        yield ParallelStrategy(
+                        pl_idx += 1
+                        s = ParallelStrategy(
                             device=primary,
                             num_devices=pp * dp * tp,
                             pipeline_parallel=pp,
@@ -288,3 +312,4 @@ def iter_hetero_strategies(
                             hetero=pl,
                             **base_kwargs,
                         )
+                        yield ((cell, pl_idx), s) if indexed else s

@@ -31,16 +31,26 @@ class Collector:
 
     Holds at most ``top_k`` + pool-member candidates no matter how many are
     pushed — this is what lets every mode stream instead of materializing.
+
+    Mergeable: ``push`` forwards an optional explicit stream-position
+    ``seq`` to both underlying collectors, and ``merge`` folds another
+    collector (same objective, same ``top_k``) in — the primitive the
+    parallel evaluation engine reduces shard results with.
     """
 
     def __init__(self, top_k: int, *, keep_pool: bool, key=None):
         self.topk = TopK(top_k, key) if key is not None else TopK(top_k)
         self.pool = ParetoStaircase() if keep_pool else None
 
-    def push(self, c: CostedStrategy) -> None:
-        self.topk.push(c)
+    def push(self, c: CostedStrategy, seq=None) -> None:
+        self.topk.push(c, seq=seq)
         if self.pool is not None:
-            self.pool.push(c)
+            self.pool.push(c, seq=seq)
+
+    def merge(self, other: "Collector") -> None:
+        self.topk.merge(other.topk)
+        if self.pool is not None and other.pool is not None:
+            self.pool.merge(other.pool)
 
     def results(self) -> tuple[list[CostedStrategy], list[CostedStrategy]]:
         """(ranked top-k, Pareto pool — empty when the objective keeps none)."""

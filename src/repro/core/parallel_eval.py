@@ -1,0 +1,265 @@
+"""Parallel (sharded) search execution engine.
+
+Astra's headline claim is search *speed*, and strategy-space evaluation is
+embarrassingly parallel: candidates are independent, the cost model is
+pure, and the collectors (:class:`~repro.core.pareto.TopK`,
+:class:`~repro.core.pareto.ParetoStaircase`,
+:class:`~repro.core.search.SearchCounts`) are mergeable with deterministic
+tie-breaking. This module fans one :class:`~repro.core.spec.SearchSpec`
+out over N workers:
+
+* each worker builds its *own* plan from the spec — its own
+  :class:`~repro.core.search.FilterBank` and its own evaluation engine —
+  and pulls the ``shard(i, n)`` round-robin view of every candidate stream
+  (:meth:`~repro.core.planner.CandidateStream.shard`), so generation,
+  filtering and simulation all split N ways with no shared mutable state;
+* each worker pushes into its own collector with the candidate's exact
+  serial-stream position as the tie-break ``seq``, and reports its own
+  funnel counts;
+* the parent merges the collectors and counts. Because shards partition
+  the stream exactly and ties break on stream position (not arrival
+  order), the merged result is *identical* to a serial search of the same
+  spec — same report, same funnel counts (wall-time fields aside).
+
+Workers run in a ``fork`` process pool when the platform has one (the
+Linux default — the eta model is inherited by the fork, never pickled) and
+fall back to a thread pool otherwise (or on a broken pool). Worker results
+cross the process boundary as wire dicts (``CostedStrategy.to_dict``), so
+the transport is exact by the same argument as the report wire format.
+
+This is an execution detail by construction: ``Limits.workers`` is dropped
+from :meth:`~repro.core.spec.SearchSpec.canonicalize`, so a parallel and a
+serial search of one spec share a cache key and a byte-identical report.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import threading
+import warnings
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from typing import Optional
+
+from repro.core.batch import BatchedCostSimulator, stream_evaluate_indexed
+from repro.core.objectives import Collector, make_objective
+from repro.core.pareto import CostedStrategy
+from repro.core.planner import build_plan, timed
+from repro.core.rules import DEFAULT_RULES
+from repro.core.search import SearchCounts
+from repro.core.simulate import CostSimulator
+from repro.core.spec import SearchSpec
+
+# the eta model/rules a fork-pool worker inherits: set (under the lock)
+# immediately before the pool's processes are forked, so it is never
+# pickled — GBT models and analytic models alike ride the fork
+_FORK_CONTEXT: Optional[tuple] = None
+_FORK_LOCK = threading.Lock()
+
+
+def resolve_workers(workers: int) -> int:
+    """``Limits.workers`` semantics: 0 -> one per CPU core, else >= 1."""
+    if workers == 0:
+        return max(os.cpu_count() or 1, 1)
+    return max(workers, 1)
+
+
+def _make_engine(eta_model, use_batched: bool):
+    return (
+        BatchedCostSimulator(eta_model) if use_batched
+        else CostSimulator(eta_model)
+    )
+
+
+def evaluate_shard(
+    spec: SearchSpec,
+    *,
+    eta_model,
+    rules=DEFAULT_RULES,
+    use_batched: bool = True,
+    chunk_size: int = 512,
+    shard: tuple[int, int] = (0, 1),
+) -> tuple[Collector, SearchCounts, int]:
+    """Run one worker's share of a search: build a private plan + engine,
+    drain the ``shard`` view of every stream, return (collector, this
+    shard's funnel counts, candidates evaluated). ``shard=(0, 1)`` is a
+    full serial evaluation through the same code path."""
+    i, n = shard
+    plan = build_plan(spec, rules=rules)
+    objective = make_objective(
+        spec.objective, train_tokens=spec.workload.train_tokens
+    )
+    collector = objective.collector(spec.limits.top_k)
+    engine = _make_engine(eta_model, use_batched)
+    w = spec.workload
+    evaluated = 0
+    for si, stream in enumerate(plan.streams):
+        pairs = timed(stream.shard(i, n), plan.counts)
+        evaluated += stream_evaluate_indexed(
+            engine, spec.arch, pairs,
+            lambda c, seq, si=si: collector.push(c, seq=(si,) + seq),
+            global_batch=w.global_batch, seq=w.seq,
+            train_tokens=w.train_tokens, chunk_size=chunk_size,
+        )
+    return collector, plan.counts, evaluated
+
+
+# -- cross-process transport (wire dicts; exact by construction) ------------
+
+def _dump_shard(
+    collector: Collector, counts: SearchCounts, evaluated: int
+) -> dict:
+    return {
+        "top": [
+            (list(seq), c.to_dict()) for seq, c in collector.topk.entries()
+        ],
+        "pool": [
+            (list(seq), c.to_dict()) for seq, c in collector.pool.entries()
+        ] if collector.pool is not None else [],
+        "counts": counts.to_dict(),
+        "evaluated": evaluated,
+    }
+
+
+def _merge_payload(collector: Collector, counts: SearchCounts, p: dict) -> int:
+    counts.merge(SearchCounts.from_dict(p["counts"]))
+    for seq, d in p["top"]:
+        collector.topk.push(CostedStrategy.from_dict(d), seq=tuple(seq))
+    if collector.pool is not None:
+        for seq, d in p["pool"]:
+            collector.pool.push(CostedStrategy.from_dict(d), seq=tuple(seq))
+    return int(p["evaluated"])
+
+
+def _process_shard(spec_json: str, i: int, n: int, chunk_size: int) -> dict:
+    """Fork-pool worker entry: context comes in via fork inheritance, the
+    spec as JSON, the results back as wire dicts."""
+    eta_model, rules, use_batched = _FORK_CONTEXT
+    spec = SearchSpec.from_json(spec_json)
+    collector, counts, evaluated = evaluate_shard(
+        spec, eta_model=eta_model, rules=rules, use_batched=use_batched,
+        chunk_size=chunk_size, shard=(i, n),
+    )
+    return _dump_shard(collector, counts, evaluated)
+
+
+def _run_processes(
+    spec: SearchSpec, eta_model, rules, use_batched: bool,
+    n: int, chunk_size: int,
+) -> list[dict]:
+    global _FORK_CONTEXT
+    spec_json = spec.to_json()
+    ctx = multiprocessing.get_context("fork")
+    pool = ProcessPoolExecutor(max_workers=n, mp_context=ctx)
+    try:
+        with _FORK_LOCK:
+            # worker processes fork during submit and snapshot the module
+            # global; the lock keeps concurrent searches (a multi-threaded
+            # SearchService) from clobbering each other's context mid-fork
+            _FORK_CONTEXT = (eta_model, rules, use_batched)
+            try:
+                futures = [
+                    pool.submit(_process_shard, spec_json, i, n, chunk_size)
+                    for i in range(n)
+                ]
+            finally:
+                _FORK_CONTEXT = None
+        return [f.result() for f in futures]
+    finally:
+        pool.shutdown(wait=False, cancel_futures=True)
+
+
+def _run_threads(
+    spec: SearchSpec, eta_model, rules, use_batched: bool,
+    n: int, chunk_size: int,
+) -> list[tuple[Collector, SearchCounts, int]]:
+    with ThreadPoolExecutor(max_workers=n) as ex:
+        futures = [
+            ex.submit(
+                evaluate_shard, spec, eta_model=eta_model, rules=rules,
+                use_batched=use_batched, chunk_size=chunk_size, shard=(i, n),
+            )
+            for i in range(n)
+        ]
+        return [f.result() for f in futures]
+
+
+def run_sharded(
+    spec: SearchSpec,
+    *,
+    eta_model,
+    workers: int,
+    rules=DEFAULT_RULES,
+    use_batched: bool = True,
+    chunk_size: int = 512,
+    executor: Optional[str] = None,
+) -> tuple[Collector, SearchCounts, int]:
+    """Fan a spec out over ``workers`` shards and merge the results.
+
+    Returns ``(merged collector, merged funnel counts, total evaluated)``
+    — the exact serial triple, whatever the worker count or executor.
+    ``executor`` forces ``"process"`` or ``"thread"``; the default picks a
+    ``fork`` process pool when the platform supports it (threads otherwise,
+    and as the automatic fallback when the process pool breaks — e.g. a
+    worker OOM-killed mid-search). The eta model must be shareable across
+    workers: it is treated as read-only (both pools) and must survive a
+    fork (process pool); every in-tree eta model qualifies.
+    """
+    if executor not in (None, "process", "thread"):
+        raise ValueError(f"unknown executor {executor!r}")
+    if spec.limits.max_candidates is not None:
+        # a candidate cap is defined on the serial stream order and cannot
+        # be distributed; Astra.search routes capped specs to the serial
+        # path — a direct caller must not silently get different results
+        raise ValueError(
+            "run_sharded does not support Limits.max_candidates; "
+            "use the serial path (Astra.search routes capped specs there)"
+        )
+    n = resolve_workers(workers)
+    objective = make_objective(
+        spec.objective, train_tokens=spec.workload.train_tokens
+    )
+    merged = objective.collector(spec.limits.top_k)
+    counts = SearchCounts()
+    evaluated = 0
+
+    mode = executor
+    if mode is None:
+        mode = (
+            "process"
+            if n > 1 and "fork" in multiprocessing.get_all_start_methods()
+            else "thread"
+        )
+
+    if n == 1:
+        collector, c, evaluated = evaluate_shard(
+            spec, eta_model=eta_model, rules=rules, use_batched=use_batched,
+            chunk_size=chunk_size, shard=(0, 1),
+        )
+        merged.merge(collector)
+        counts.merge(c)
+        return merged, counts, evaluated
+
+    if mode == "process":
+        try:
+            payloads = _run_processes(
+                spec, eta_model, rules, use_batched, n, chunk_size
+            )
+        except (BrokenProcessPool, OSError) as e:
+            warnings.warn(
+                f"parallel search: process pool failed ({type(e).__name__}:"
+                f" {e}); retrying on a thread pool", RuntimeWarning,
+            )
+            mode = "thread"
+        else:
+            for p in payloads:
+                evaluated += _merge_payload(merged, counts, p)
+            return merged, counts, evaluated
+
+    for collector, c, e in _run_threads(
+        spec, eta_model, rules, use_batched, n, chunk_size
+    ):
+        merged.merge(collector)
+        counts.merge(c)
+        evaluated += e
+    return merged, counts, evaluated

@@ -209,22 +209,34 @@ def default_parameter_space(
         arch.heads if not arch.is_attention_free else (arch.ssm_heads or 64),
     )
     pp_cap = min(arch.num_layers, num_devices)
+    # Key order is iteration order (itertools.product varies the LAST key
+    # fastest), chosen for cache locality: the fields a per-layer op census
+    # reads (tp/ep/mbs/sp/flash) are outermost, the remaining stage-census
+    # fields (pp, recompute, ZeRO) next, and census-invariant knobs (the
+    # overlap/offload toggles, the virtual-pipeline factor) innermost.
+    # Strategies sharing a layer or stage census are then *consecutive* in
+    # the stream — which keeps the engine's census caches hot within any
+    # contiguous run, and lets the block-cyclic candidate sharding hand
+    # each parallel worker a nearly disjoint set of distinct cache keys
+    # instead of replicating the census work once per worker.
     space: dict[str, list] = {
         "tensor_parallel": pows2(tp_cap),
-        "pipeline_parallel": [p for p in pows2(pp_cap) if arch.num_layers % p == 0],
-        "virtual_pipeline_stages": [1, 2, 4],
-        "micro_batch_size": list(micro_batches),
-        "sequence_parallel": [False, True],
-        "use_distributed_optimizer": [False, True],
-        "recompute_granularity": list(RECOMPUTE_GRANULARITY),
-        "use_flash_attn": [True] if not arch.is_attention_free else [False],
-        "overlap_grad_reduce": [True],
-        "overlap_param_gather": [True],
-        "overlap_p2p": [True],
-        "offload_optimizer": [False, True] if include_offload else [False],
     }
     if arch.family == "moe":
         space["expert_parallel"] = [
             e for e in pows2(min(arch.num_experts, num_devices))
         ]
+    space.update({
+        "micro_batch_size": list(micro_batches),
+        "sequence_parallel": [False, True],
+        "use_flash_attn": [True] if not arch.is_attention_free else [False],
+        "use_distributed_optimizer": [False, True],
+        "pipeline_parallel": [p for p in pows2(pp_cap) if arch.num_layers % p == 0],
+        "recompute_granularity": list(RECOMPUTE_GRANULARITY),
+        "overlap_grad_reduce": [True],
+        "overlap_param_gather": [True],
+        "overlap_p2p": [True],
+        "offload_optimizer": [False, True] if include_offload else [False],
+        "virtual_pipeline_stages": [1, 2, 4],
+    })
     return space

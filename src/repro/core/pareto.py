@@ -11,6 +11,14 @@ Besides the batch functions (``optimal_pool`` / ``sort_strategies`` /
 pushes candidates through one at a time so a search never materializes its
 full ``CostedStrategy`` list. Both are proven equivalent to the batch
 functions on the same candidate multiset (tests/test_batch_sim.py).
+
+Both collectors are *mergeable*: ``push`` optionally takes an explicit
+``seq`` — a tuple that totally orders candidates by their position in the
+(sharded) candidate stream — and ``merge`` folds another collector in.
+Because full-key ties break on ``seq`` (not on arrival order), N shard
+collectors merged in any order reproduce the serial collector exactly,
+which is what makes the parallel evaluation engine
+(:mod:`repro.core.parallel_eval`) byte-identical to a serial search.
 """
 from __future__ import annotations
 
@@ -132,27 +140,60 @@ def _eq33_key(c: CostedStrategy) -> tuple:
 class TopK:
     """Incremental top-k under a bigger-is-better key (default: Eq. 33 —
     throughput descending, money-cost tiebreak ascending). Matches
-    ``sort_strategies(all)[:k]`` for the default key."""
+    ``sort_strategies(all)[:k]`` for the default key.
+
+    ``push(c, seq=...)`` pins the candidate's stream position explicitly (a
+    tuple; lexicographically smaller = earlier); without it an internal
+    arrival counter is used. Full-key ties resolve to the earliest ``seq``,
+    so shard collectors pushed with global stream positions merge into the
+    exact serial result regardless of merge order.
+    """
 
     def __init__(self, k: int, key: Callable[[CostedStrategy], tuple] = _eq33_key):
         self.k = max(k, 0)
         self.key = key
-        self._heap: list = []  # (key, tiebreak, CostedStrategy)
+        # heap entries: (full_key, local_insertion_id, CostedStrategy). The
+        # full key ends with the negated seq tuple, so bigger key == better
+        # or earlier; the local id keeps heap comparisons away from the
+        # (unorderable) CostedStrategy even if two merged entries collide.
+        self._heap: list = []
         self._counter = itertools.count()
 
-    def push(self, c: CostedStrategy) -> None:
+    def push(self, c: CostedStrategy, seq: Optional[tuple] = None) -> None:
         if self.k == 0:
             return
-        key = self.key(c) + (-next(self._counter),)
+        if seq is None:
+            seq = (next(self._counter),)
+        self._push_key(self.key(c) + (tuple(-x for x in seq),), c)
+
+    def _push_key(self, key: tuple, c: CostedStrategy) -> None:
+        entry = (key, next(self._counter), c)
         if len(self._heap) < self.k:
-            heapq.heappush(self._heap, (key, c))
+            heapq.heappush(self._heap, entry)
         elif key > self._heap[0][0]:
-            heapq.heapreplace(self._heap, (key, c))
+            heapq.heapreplace(self._heap, entry)
+
+    def merge(self, other: "TopK") -> None:
+        """Fold another TopK (same ``k`` and key function) into this one.
+
+        Entries keep their original seq-tiebroken keys, so merging the
+        per-shard collectors of a partitioned stream — in any order —
+        yields exactly the serial collector's top-k."""
+        for key, _, c in other._heap:
+            self._push_key(key, c)
+
+    def entries(self) -> list[tuple[tuple, CostedStrategy]]:
+        """Best-first ``(seq, candidate)`` pairs — the mergeable state, used
+        to ship a shard collector across a process boundary."""
+        out = []
+        for key, _, c in sorted(self._heap, reverse=True):
+            out.append((tuple(-x for x in key[-1]), c))
+        return out
 
     def sorted(self) -> list[CostedStrategy]:
         # stable descending sort on the tiebroken key reproduces the batch
         # sort order exactly (earliest-seen wins full-key ties)
-        return [c for _, c in sorted(self._heap, reverse=True)]
+        return [c for _, _, c in sorted(self._heap, reverse=True)]
 
 
 class ParetoStaircase:
@@ -161,20 +202,33 @@ class ParetoStaircase:
     Invariant: ``_thr`` ascending, ``_money`` strictly ascending (each pool
     member trades money for throughput). Matches :func:`optimal_pool` on the
     same candidate multiset.
+
+    Like :class:`TopK`, ``push`` takes an optional explicit ``seq`` stream
+    position: exact (throughput, money) ties keep the earliest-``seq``
+    candidate, which makes the staircase a pure function of the pushed
+    multiset — shard staircases ``merge`` into the serial one in any order.
     """
 
     def __init__(self):
         self._thr: list[float] = []
         self._money: list[float] = []
         self._items: list[CostedStrategy] = []
+        self._seqs: list[tuple] = []
+        self._counter = itertools.count()
 
-    def push(self, c: CostedStrategy) -> None:
+    def push(self, c: CostedStrategy, seq: Optional[tuple] = None) -> None:
+        if seq is None:
+            seq = (next(self._counter),)
         thr, money = c.throughput, c.money
         i = bisect.bisect_right(self._thr, thr)
         # dominated (or duplicate): an as-fast-or-faster member at most as
         # expensive. Equal-throughput members sit at i-1; strictly faster
         # members start at i with the cheapest of them first.
         if i > 0 and self._thr[i - 1] == thr and self._money[i - 1] <= money:
+            # exact-tie point: represented by the earliest-seq candidate
+            if self._money[i - 1] == money and seq < self._seqs[i - 1]:
+                self._items[i - 1] = c
+                self._seqs[i - 1] = seq
             return
         if i < len(self._thr) and self._money[i] <= money:
             return
@@ -182,10 +236,22 @@ class ParetoStaircase:
         k = i
         while k > 0 and self._money[k - 1] >= money:
             k -= 1
-        del self._thr[k:i], self._money[k:i], self._items[k:i]
+        del self._thr[k:i], self._money[k:i], self._items[k:i], self._seqs[k:i]
         self._thr.insert(k, thr)
         self._money.insert(k, money)
         self._items.insert(k, c)
+        self._seqs.insert(k, seq)
+
+    def merge(self, other: "ParetoStaircase") -> None:
+        """Fold another staircase in (order-independent — see class doc)."""
+        for c, seq in zip(other._items, other._seqs):
+            self.push(c, seq=seq)
+
+    def entries(self) -> list[tuple[tuple, CostedStrategy]]:
+        """``(seq, candidate)`` pairs, throughput descending — the
+        mergeable state for cross-process transport."""
+        return [(seq, c) for seq, c in
+                zip(reversed(self._seqs), reversed(self._items))]
 
     def sorted(self) -> list[CostedStrategy]:
         return list(reversed(self._items))  # throughput descending

@@ -53,6 +53,18 @@ class SearchCounts:
             gen_seconds=wire.load_float(d["gen_seconds"]),
         )
 
+    def merge(self, other: "SearchCounts") -> None:
+        """Fold a disjoint shard's funnel counts in. Because round-robin
+        shards partition the raw candidate space exactly and each worker
+        counts only its own shard, the merged funnel equals the serial one;
+        ``gen_seconds`` sums to total generation CPU time across workers
+        (not wall time)."""
+        self.generated += other.generated
+        self.divisible += other.divisible
+        self.after_rules += other.after_rules
+        self.after_memory += other.after_memory
+        self.gen_seconds += other.gen_seconds
+
 
 def strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
     """$param environment the rule DSL evaluates against."""
@@ -184,6 +196,69 @@ class FilterBank:
             return ok
 
 
+#: block-cyclic shard granularity: raw indices are dealt to workers in
+#: contiguous blocks of this many candidates, round-robin. Blocks keep the
+#: product space's key locality (neighboring candidates share stage-census
+#: and eta-query cache keys), so per-worker caches stay nearly as effective
+#: as the serial cache; cycling the blocks keeps the shards balanced. Any
+#: value partitions the stream exactly and preserves global indices — it
+#: tunes speed, never results.
+SHARD_BLOCK = 256
+
+
+def shard_owns(idx: int, shard_i: int, shard_n: int) -> bool:
+    """Deterministic block-cyclic ownership of raw index ``idx``."""
+    return (idx // SHARD_BLOCK) % shard_n == shard_i
+
+
+def _iter_raw_indexed(
+    arch: ModelArch,
+    gpu: GpuConfig,
+    global_batch: int,
+    space: Optional[dict[str, list]] = None,
+    shard: tuple[int, int] = (0, 1),
+) -> Iterable[tuple[int, ParallelStrategy]]:
+    """``(raw_index, strategy)`` over the unfiltered product space f(P).
+
+    ``shard=(i, n)`` is a deterministic block-cyclic round-robin view: only
+    indices with ``(idx // SHARD_BLOCK) % n == i`` are *constructed* and
+    yielded (skipped indices cost one cheap tuple step, never a dataclass
+    build), so N workers each own a disjoint interleaved slice whose union
+    is exactly the serial stream.
+    """
+    shard_i, shard_n = shard
+    if not (0 <= shard_i < shard_n):
+        raise ValueError(f"shard index {shard_i} not in [0, {shard_n})")
+    spec = get_device(gpu.device)
+    space = space or default_parameter_space(
+        arch, gpu.num_devices, spec.devices_per_node, global_batch
+    )
+    keys = list(space)
+    rg_pos = keys.index("recompute_granularity") \
+        if "recompute_granularity" in keys else None
+    pp_pos = keys.index("pipeline_parallel") \
+        if "pipeline_parallel" in keys else None
+    idx = -1
+    for combo in itertools.product(*(space[k] for k in keys)):
+        # recompute_num_layers rides on the granularity choice
+        if rg_pos is not None and combo[rg_pos] == "full":
+            layers_per_stage = arch.num_layers // combo[pp_pos]
+            rnl_choices = sorted({1, max(layers_per_stage // 2, 1), layers_per_stage})
+        else:
+            rnl_choices = [0]
+        for rnl in rnl_choices:
+            idx += 1
+            if not shard_owns(idx, shard_i, shard_n):
+                continue
+            yield idx, ParallelStrategy(
+                device=gpu.device,
+                num_devices=gpu.num_devices,
+                recompute_num_layers=rnl,
+                recompute_method="uniform",
+                **dict(zip(keys, combo)),
+            )
+
+
 def iter_raw_strategies(
     arch: ModelArch,
     gpu: GpuConfig,
@@ -191,27 +266,8 @@ def iter_raw_strategies(
     space: Optional[dict[str, list]] = None,
 ) -> Iterable[ParallelStrategy]:
     """The unfiltered product space f(P) for one GPU configuration."""
-    spec = get_device(gpu.device)
-    space = space or default_parameter_space(
-        arch, gpu.num_devices, spec.devices_per_node, global_batch
-    )
-    keys = list(space)
-    for combo in itertools.product(*(space[k] for k in keys)):
-        kw = dict(zip(keys, combo))
-        # recompute_num_layers rides on the granularity choice
-        if kw.get("recompute_granularity") == "full":
-            layers_per_stage = arch.num_layers // kw["pipeline_parallel"]
-            rnl_choices = sorted({1, max(layers_per_stage // 2, 1), layers_per_stage})
-        else:
-            rnl_choices = [0]
-        for rnl in rnl_choices:
-            yield ParallelStrategy(
-                device=gpu.device,
-                num_devices=gpu.num_devices,
-                recompute_num_layers=rnl,
-                recompute_method="uniform",
-                **kw,
-            )
+    for _, s in _iter_raw_indexed(arch, gpu, global_batch, space):
+        yield s
 
 
 def iter_valid_strategies(
@@ -224,6 +280,8 @@ def iter_valid_strategies(
     space: Optional[dict[str, list]] = None,
     counts: Optional[SearchCounts] = None,
     filters: Optional[FilterBank] = None,
+    shard: tuple[int, int] = (0, 1),
+    indexed: bool = False,
 ) -> Iterable[ParallelStrategy]:
     """Streaming S_valid (Eq. 21): yields survivors of the full filter
     funnel while mutating ``counts`` in place. The batched engine consumes
@@ -232,12 +290,21 @@ def iter_valid_strategies(
 
     Pass a shared :class:`FilterBank` as ``filters`` to reuse memoized
     rule/memory verdicts across several streams of one search (``rules`` is
-    ignored then — the bank carries its own rule set)."""
+    ignored then — the bank carries its own rule set).
+
+    ``shard=(i, n)`` restricts the stream to the i-th round-robin slice of
+    each GPU config's raw space (see :func:`_iter_raw_indexed`); ``counts``
+    then tallies only this shard's funnel, so per-worker counts merged with
+    :meth:`SearchCounts.merge` reproduce the serial funnel exactly.
+    ``indexed=True`` yields ``((gpu_idx, raw_idx), strategy)`` pairs — the
+    stream position tuple the mergeable collectors tie-break on."""
     bank = filters if filters is not None else FilterBank(arch, seq, rules)
     if counts is None:
         counts = SearchCounts()
-    for gpu in gpus:
-        for s in iter_raw_strategies(arch, gpu, global_batch, space=space):
+    for g, gpu in enumerate(gpus):
+        for idx, s in _iter_raw_indexed(
+            arch, gpu, global_batch, space=space, shard=shard
+        ):
             counts.generated += 1
             if not s.is_divisible(arch, global_batch):
                 continue
@@ -248,7 +315,7 @@ def iter_valid_strategies(
             if not bank.memory_ok(s):
                 continue
             counts.after_memory += 1
-            yield s
+            yield ((g, idx), s) if indexed else s
 
 
 def generate_strategies(

@@ -69,6 +69,8 @@ class ServiceStats:
     coalesced: int = 0  # callers that joined an in-flight identical search
     store_put_errors: int = 0  # store failed mid-write; result still served
     store_get_errors: int = 0  # store failed a read; treated as a miss
+    searching: int = 0  # cold searches executing right now
+    peak_searching: int = 0  # high-water mark of concurrent cold searches
 
     @property
     def requests(self) -> int:
@@ -87,6 +89,8 @@ class ServiceStats:
             "store_get_errors": self.store_get_errors,
             "requests": self.requests,
             "hit_rate": round(self.hit_rate, 4),
+            "searching": self.searching,
+            "peak_searching": self.peak_searching,
         }
 
 
@@ -117,9 +121,22 @@ class SearchService:
     still serve the fresh result (counted in ``store_put_errors``), failed
     reads count as misses.
 
-    Actual searches are serialized by a lock — the underlying engines share
-    memo tables that are not audited for concurrent mutation — but distinct
-    specs still overlap with cache reads and with each other's waiters.
+    Cold searches of *distinct* specs run concurrently, bounded by
+    ``search_concurrency`` (a semaphore; identical specs are still
+    single-flighted above it). The engine stays correct under that
+    concurrency: sharded searches (``workers != 1``) share no mutable
+    state, and concurrent serial searches fall back to private engines
+    when the shared warm ones are already in use (see
+    :meth:`~repro.core.api.Astra.search`). ``/v1/stats`` reports
+    ``searching`` (cold searches executing now) and ``peak_searching``
+    (the concurrency high-water mark). ``workers`` (when not None)
+    overrides ``Limits.workers`` on every cold search — an execution
+    detail, so the cached report and its key are unchanged by it.
+
+    Sizing: total parallelism is ``search_concurrency x workers`` worker
+    processes at peak — keep that product around the host's core count
+    (e.g. prefer ``search_concurrency=2, workers=cores//2`` over
+    ``4 x cores``); oversubscribing slows every search below serial.
     """
 
     def __init__(
@@ -130,6 +147,8 @@ class SearchService:
         ttl_seconds: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
         store: Optional[ReportStore] = None,
+        search_concurrency: int = 4,
+        workers: Optional[int] = None,
     ):
         self.astra = astra
         if store is not None:
@@ -146,6 +165,12 @@ class SearchService:
             self.store = MemoryStore(
                 max_entries=max_entries, ttl_seconds=ttl_seconds, clock=clock,
             )
+        if search_concurrency < 1:
+            raise ValueError(
+                f"search_concurrency must be >= 1, got {search_concurrency}"
+            )
+        self.search_concurrency = search_concurrency
+        self.workers = workers
         self.stats = ServiceStats()
         self._inflight: dict[str, _Flight] = {}
         self._errors: "OrderedDict[str, str]" = OrderedDict()
@@ -154,7 +179,9 @@ class SearchService:
         self._orphans: "OrderedDict[str, str]" = OrderedDict()
         self._fills = 0  # bumped whenever a flight completes (see below)
         self._lock = threading.Lock()  # stats + flight bookkeeping
-        self._search_lock = threading.Lock()  # serializes Astra.search
+        # bounded executor for cold searches: distinct specs overlap up to
+        # this limit (identical specs never reach it — single-flight wins)
+        self._search_sem = threading.BoundedSemaphore(search_concurrency)
 
     # -- store access (error-contained; never call with _lock held) --------
     def _store_get(self, key: str) -> Optional[str]:
@@ -293,8 +320,24 @@ class SearchService:
 
     def _run_flight(self, key: str, spec: SearchSpec, flight: _Flight) -> None:
         try:
-            with self._search_lock:
-                report = self.astra.search(spec)
+            if self.workers is not None and spec.limits.workers != self.workers:
+                # execution-detail override: never changes the cache key or
+                # the report (workers is dropped from spec identity)
+                spec = dataclasses.replace(
+                    spec,
+                    limits=dataclasses.replace(spec.limits, workers=self.workers),
+                )
+            with self._search_sem:
+                with self._lock:
+                    self.stats.searching += 1
+                    self.stats.peak_searching = max(
+                        self.stats.peak_searching, self.stats.searching
+                    )
+                try:
+                    report = self.astra.search(spec)
+                finally:
+                    with self._lock:
+                        self.stats.searching -= 1
             text = report.to_json()
             try:
                 self.store.put(key, text)
@@ -338,6 +381,8 @@ class SearchService:
         d["store"] = self.store.kind
         d["max_entries"] = getattr(self.store, "max_entries", None)
         d["ttl_seconds"] = getattr(self.store, "ttl_seconds", None)
+        d["search_concurrency"] = self.search_concurrency
+        d["search_workers"] = self.workers
         return d
 
     def close(self) -> None:
@@ -359,15 +404,23 @@ class TokenInfo:
 
 
 class AuthQuota:
-    """Static bearer-token auth + fixed-window per-token quotas.
+    """Static bearer-token auth + per-token token-bucket (sliding) quotas.
 
     Token file format (see ``examples/README.md``): one token per line,
     whitespace-separated fields ``TOKEN IDENTITY [REQS [COLD]]`` where the
     optional quotas are integers or ``-`` for unlimited; blank lines and
-    ``#`` comments are skipped. Quotas are fixed windows of
-    ``window_seconds`` (measured on the injected ``clock``): ``REQS`` caps
-    all authenticated requests, ``COLD`` caps requests that would start a
-    fresh (cold) search — cache hits and coalesced joins never spend it.
+    ``#`` comments are skipped. A quota of Q is a token bucket of capacity
+    Q refilled continuously at ``Q / window_seconds`` per second (measured
+    on the injected ``clock``), so the limit is a true sliding rate: a
+    burst of Q is admitted from a full bucket, then requests are admitted
+    at the refill rate — there is no fixed-window boundary at which a
+    caller can double-spend (the old minute-boundary burst artifact).
+    ``REQS`` rates all authenticated requests, ``COLD`` rates requests that
+    would start a fresh (cold) search — cache hits and coalesced joins
+    never spend it. Over any window of ``window_seconds`` the admitted
+    count is at most 2Q (bucket + refill), and exactly Q per window in
+    sustained operation — the same steady-state budget the fixed windows
+    granted, without the boundary spike.
 
     ``/v1/stats`` reports per-identity usage; the service never logs or
     serves the tokens themselves.
@@ -387,12 +440,14 @@ class AuthQuota:
         self.clock = clock
         self._lock = threading.Lock()
         self.unauthorized = 0
-        # windows are per *token* (the unit the quotas are declared on —
-        # several tokens may share an identity without sharing budgets);
-        # lifetime totals aggregate per identity for /v1/stats
+        # buckets are per *token* (the unit the quotas are declared on —
+        # several tokens may share an identity without sharing budgets) and
+        # start full; lifetime totals aggregate per identity for /v1/stats
         self._usage: dict[str, dict] = {
             t.token: {
-                "window_start": None, "window_requests": 0, "window_cold": 0,
+                "requests_level": float(t.requests_per_window or 0),
+                "cold_level": float(t.cold_per_window or 0),
+                "refilled_at": None,
             }
             for t in tokens
         }
@@ -449,24 +504,35 @@ class AuthQuota:
                 self.unauthorized += 1
         return info
 
-    def _window(self, u: dict, now: float) -> dict:
-        if u["window_start"] is None or now - u["window_start"] >= self.window_seconds:
-            u["window_start"] = now
-            u["window_requests"] = 0
-            u["window_cold"] = 0
+    def _refill(self, info: TokenInfo, u: dict, now: float) -> dict:
+        """Continuous token-bucket refill up to capacity (the quota)."""
+        last = u["refilled_at"]
+        u["refilled_at"] = now
+        if last is None:
+            return u  # buckets start full
+        dt = max(now - last, 0.0)
+        if info.requests_per_window is not None:
+            u["requests_level"] = min(
+                float(info.requests_per_window),
+                u["requests_level"]
+                + dt * info.requests_per_window / self.window_seconds,
+            )
+        if info.cold_per_window is not None:
+            u["cold_level"] = min(
+                float(info.cold_per_window),
+                u["cold_level"] + dt * info.cold_per_window / self.window_seconds,
+            )
         return u
 
     def charge_request(self, info: TokenInfo) -> bool:
         """Spend one request; False means the quota rejected it (429)."""
         with self._lock:
-            u = self._window(self._usage[info.token], self.clock())
-            if (
-                info.requests_per_window is not None
-                and u["window_requests"] >= info.requests_per_window
-            ):
-                self._totals[info.identity]["throttled"] += 1
-                return False
-            u["window_requests"] += 1
+            u = self._refill(info, self._usage[info.token], self.clock())
+            if info.requests_per_window is not None:
+                if u["requests_level"] < 1.0:
+                    self._totals[info.identity]["throttled"] += 1
+                    return False
+                u["requests_level"] -= 1.0
             self._totals[info.identity]["requests"] += 1
             return True
 
@@ -476,17 +542,16 @@ class AuthQuota:
 
         def charge() -> None:
             with self._lock:
-                u = self._window(self._usage[info.token], self.clock())
-                if (
-                    info.cold_per_window is not None
-                    and u["window_cold"] >= info.cold_per_window
-                ):
-                    self._totals[info.identity]["throttled"] += 1
-                    raise QuotaExceeded(
-                        f"cold-search quota exceeded for {info.identity!r}"
-                        f" ({info.cold_per_window}/{self.window_seconds:g}s)"
-                    )
-                u["window_cold"] += 1
+                u = self._refill(info, self._usage[info.token], self.clock())
+                if info.cold_per_window is not None:
+                    if u["cold_level"] < 1.0:
+                        self._totals[info.identity]["throttled"] += 1
+                        raise QuotaExceeded(
+                            f"cold-search quota exceeded for {info.identity!r}"
+                            f" ({info.cold_per_window}/{self.window_seconds:g}s"
+                            f" sustained)"
+                        )
+                    u["cold_level"] -= 1.0
                 self._totals[info.identity]["cold_searches"] += 1
 
         return charge
@@ -715,7 +780,11 @@ def _cmd_serve(args) -> int:
     store = parse_store_url(
         args.store, max_entries=args.max_entries, ttl_seconds=args.ttl,
     )
-    service = SearchService(Astra(eta), store=store)
+    service = SearchService(
+        Astra(eta), store=store,
+        search_concurrency=args.search_concurrency,
+        workers=args.search_workers,
+    )
     auth = AuthQuota.from_file(args.auth_tokens) if args.auth_tokens else None
     serve_forever(service, args.host, args.port, auth=auth)
     return 0
@@ -783,6 +852,13 @@ def main(argv=None) -> int:
     p.add_argument("--auth-tokens", default=None, metavar="FILE",
                    help="enable bearer-token auth/quota from FILE "
                         "(lines: TOKEN IDENTITY [REQS_PER_MIN [COLD_PER_MIN]])")
+    p.add_argument("--search-concurrency", type=int, default=4,
+                   help="max cold searches of distinct specs running "
+                        "concurrently (identical specs still single-flight)")
+    p.add_argument("--search-workers", type=int, default=None, metavar="N",
+                   help="override Limits.workers on every cold search "
+                        "(0 = one worker per CPU core; execution detail — "
+                        "never changes a spec's cache key or its report)")
     p.set_defaults(fn=_cmd_serve)
 
     p = sub.add_parser("search", help="POST a spec file to a running service")

@@ -48,6 +48,47 @@ class CountingAstra:
         return self.astra.search(spec)
 
 
+class BlockingAstra:
+    """Engine whose searches park on a gate until released — the sleep-free
+    probe for "two distinct specs search *concurrently*".
+
+    Each ``search`` call signals ``entered`` (a semaphore the test acquires
+    once per expected concurrent search), records the concurrency
+    high-water mark, then waits on ``gate``. Set the gate to let every
+    parked search finish. Returns a minimal real ``SearchReport`` so the
+    full wire/store path runs.
+    """
+
+    def __init__(self):
+        from repro.core.api import SearchReport
+        from repro.core.search import SearchCounts
+
+        self._report = SearchReport(
+            mode="homogeneous", best=None, best_sim=None, top=[],
+            counts=SearchCounts(), search_seconds=0.0, simulate_seconds=0.0,
+        )
+        self.entered = threading.Semaphore(0)
+        self.gate = threading.Event()
+        self.calls = 0
+        self.active = 0
+        self.peak = 0
+        self._lock = threading.Lock()
+
+    def search(self, spec):
+        with self._lock:
+            self.calls += 1
+            self.active += 1
+            self.peak = max(self.peak, self.active)
+        self.entered.release()
+        try:
+            if not self.gate.wait(timeout=30.0):
+                raise TimeoutError("BlockingAstra gate never released")
+            return self._report
+        finally:
+            with self._lock:
+                self.active -= 1
+
+
 class FlakyStore(ReportStore):
     """Fault-injection wrapper: raise on the next N puts and/or gets.
 

@@ -257,6 +257,72 @@ def test_op_table_trim_across_batches(llama7b, monkeypatch):
     assert len(sim._comp.index) < len(ref._comp.index)
 
 
+def _toggle_corners(pp=4):
+    base = dict(device="A800", num_devices=64, tensor_parallel=2,
+                pipeline_parallel=pp, micro_batch_size=2)
+    return [
+        ParallelStrategy(**base),
+        ParallelStrategy(**base, recompute_granularity="full",
+                         recompute_num_layers=4),
+        ParallelStrategy(**base, use_distributed_optimizer=True,
+                         overlap_grad_reduce=True),
+        ParallelStrategy(**base, use_distributed_optimizer=True,
+                         overlap_grad_reduce=True, overlap_param_gather=True),
+        ParallelStrategy(**base, offload_optimizer=True),
+        ParallelStrategy(**base, offload_optimizer=True,
+                         overlap_grad_reduce=True),
+        ParallelStrategy(**base, sequence_parallel=True, tp_comm_overlap=True),
+        ParallelStrategy(**base, virtual_pipeline_stages=2, overlap_p2p=False),
+    ]
+
+
+def test_finalize_pending_matches_scalar_finalize_exactly(llama7b):
+    """The vectorized overlap/offload pass must equal the scalar
+    `_finalize_stage` reference bit-for-bit on every toggle corner."""
+    recorded = {}
+
+    class Recording(BatchedCostSimulator):
+        def _finalize_pending(self, pending_time):
+            recorded.update(pending_time)
+            super()._finalize_pending(pending_time)
+
+    sim = Recording(AnalyticEtaModel())
+    sim.simulate_batch(llama7b, _toggle_corners(), global_batch=GB, seq=SEQ)
+    assert recorded, "no timing keys were pending"
+    for tkey, (ckey, s) in recorded.items():
+        want = sim._finalize_stage(sim._raw_cache[ckey], s)
+        assert sim._stage_time_cache[tkey] == want, (tkey, s)
+
+
+def test_compose_batch_matches_scalar_compose(llama7b):
+    """The chunk-wide Eq. 22 array pass against the scalar
+    `compose_sim_result` reference on the same stage tuples: the
+    max-reductions and per-stage lists are bit-identical; the segment sums
+    (numpy pairwise vs Python left-to-right) agree to 1e-12 relative —
+    far inside the file's 1e-9 engine-parity contract."""
+    import dataclasses as _dc
+
+    from repro.core.simulate import compose_sim_result
+
+    strategies = _toggle_corners(pp=4) + _toggle_corners(pp=8)
+    sim = BatchedCostSimulator(AnalyticEtaModel())
+    got = sim.simulate_batch(llama7b, strategies, global_batch=GB, seq=SEQ)
+    for s, r in zip(strategies, got):
+        plan = sim._stage_plan(llama7b, s, SEQ)
+        per_stage = [sim._stage_time_cache[t] for t, _, _, _, _ in plan]
+        ref = compose_sim_result(s, per_stage, global_batch=GB, seq=SEQ)
+        # max-reductions and the per-stage vectors carry no summation: exact
+        assert r.stage_times == ref.stage_times, s
+        assert r.stage_p2p == ref.stage_p2p, s
+        assert r.dp_exposed_time == ref.dp_exposed_time, s
+        assert r.optimizer_time == ref.optimizer_time, s
+        assert r.money_per_hour == ref.money_per_hour, s
+        for f in _dc.fields(ref):
+            a, b = getattr(ref, f.name), getattr(r, f.name)
+            if isinstance(a, float):
+                assert b == pytest.approx(a, rel=1e-12), (f.name, s)
+
+
 def test_mode2_counts_are_honest(llama7b):
     astra = Astra(AnalyticEtaModel())
     pool = HeteroPool(total_devices=32, type_caps=(("A800", 16), ("H100", 16)))

@@ -3,13 +3,16 @@
 ``HeteroCaps.prune_slack`` bounds the water-filling minimax by its
 fractional FLOPs-proxy relaxation (see ``balanced_placements_for``): a
 composition is skipped when its lower bound exceeds ``slack`` x the best
-achieved discrete minimax. The ROADMAP flags the default 1.5 as
-uncalibrated against the simulator's *full* stage time (comm + edge-stage
-embedding). This test measures, on the seed fixtures, the tightest slack
-that still keeps the full-sweep optimum in the pruned candidate stream,
-and asserts the default preserves the optimum — recording the measured
-margin in the assertion message so a future tightening toward 1.0 has
-data to point at.
+achieved discrete minimax. This test measures, on the seed fixtures plus a
+bigger 48-device asymmetric pool, the tightest slack that still keeps the
+full-sweep optimum in the pruned candidate stream, and asserts the default
+preserves the optimum — recording the measured margin in the assertion
+message so a future tightening toward 1.0 has data to point at.
+
+Calibration history: the original 1.5 default was uncalibrated; the grid
+measures the tightest preserving slack at 1.0 on every fixture (seed pools,
+a 64-device symmetric pool and the 48-device pool below), so the default
+was lowered to 1.2 — still a 0.2 margin over everything measured.
 """
 from repro.calibration.fit import AnalyticEtaModel
 from repro.core import Astra, HeteroCaps, SearchSpec, Workload
@@ -39,6 +42,15 @@ def _cases(llama7b, tiny_dense):
                        type_caps=(("A800", 4), ("H100", 4))),
             Workload(32, 512),
         ),
+        (
+            llama7b,
+            # bigger pool (the ROADMAP's re-measure ask): more composition
+            # cells, asymmetric caps, so the FLOPs-proxy bound is stressed
+            # harder than on the seed fixtures
+            HeteroPool(total_devices=48,
+                       type_caps=(("A800", 32), ("H100", 16))),
+            Workload(128, 2048),
+        ),
     ]
 
 
@@ -53,7 +65,8 @@ def _strip_placement_key(s):
 def test_default_prune_slack_preserves_optimum_with_measured_margin(
     llama7b, tiny_dense
 ):
-    assert DEFAULT_SLACK == 1.5  # the documented default under calibration
+    assert DEFAULT_SLACK == 1.2  # the calibrated default (was 1.5; every
+    # fixture measures tightest-preserving slack 1.0 — see module docstring)
     measured = []
     for arch, pool, w in _cases(llama7b, tiny_dense):
         astra = Astra(AnalyticEtaModel())

@@ -507,3 +507,144 @@ def test_quota_windows_are_per_token_even_when_identity_is_shared(tiny_dense):
 def test_auth_rejects_duplicate_tokens():
     with pytest.raises(ValueError, match="duplicate token"):
         AuthQuota([TokenInfo("tok-x", "a"), TokenInfo("tok-x", "b")])
+
+
+def test_token_bucket_has_no_minute_boundary_burst():
+    """The fixed 60 s windows admitted 2x the quota across a window edge
+    (Q at :59 plus Q at :61). The token bucket must not: after draining a
+    full bucket, only ~refill-rate admissions fit in the next instant."""
+    clock = FakeClock()
+    auth = AuthQuota([TokenInfo("tok-a", "a", requests_per_window=10)],
+                     clock=clock)
+    info = auth.identify("Bearer tok-a")
+    clock.advance(59.0)  # arbitrary offset toward an old window boundary
+    assert sum(auth.charge_request(info) for _ in range(12)) == 10  # burst=Q
+    clock.advance(2.0)  # the old exploit: a fresh window right here
+    # 2 s of refill at 10/60 per s -> zero whole tokens, not a fresh 10
+    assert not auth.charge_request(info)
+    clock.advance(6.0)  # ~1 token refilled (8 s total / 6 s-per-token)
+    assert auth.charge_request(info)
+    assert not auth.charge_request(info)
+
+
+def test_token_bucket_sustained_rate_matches_old_window_budget():
+    """Sustained admission over many windows equals Q per window."""
+    clock = FakeClock()
+    auth = AuthQuota([TokenInfo("tok-a", "a", requests_per_window=6)],
+                     clock=clock)
+    info = auth.identify("Bearer tok-a")
+    admitted = 0
+    for _ in range(600):  # 10 windows in 1 s steps
+        clock.advance(1.0)
+        admitted += auth.charge_request(info)
+    assert 60 <= admitted <= 66  # 6/window sustained (+ the initial burst)
+
+
+# ---------------------------------------------------------------------------
+# concurrency: distinct specs search in parallel (sleep-free, gated engine)
+# ---------------------------------------------------------------------------
+
+def _post_async(base, spec, results, token=None):
+    def go():
+        results.append(_request(
+            f"{base}/v1/search?async=1", spec.to_json().encode(), token=token
+        ))
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    return t
+
+
+def test_distinct_specs_search_concurrently(tiny_dense):
+    from harness_service import BlockingAstra
+
+    engine = BlockingAstra()
+    svc = SearchService(engine, search_concurrency=4)
+    with serve_http(svc) as base:
+        s1, s2 = _spec(tiny_dense), _spec(tiny_dense, device="H100")
+        results = []
+        threads = [
+            _post_async(base, s1, results), _post_async(base, s2, results)
+        ]
+        # both cold searches are INSIDE the engine at the same time —
+        # event-paced, no sleeps, impossible under the old global lock
+        assert engine.entered.acquire(timeout=10.0)
+        assert engine.entered.acquire(timeout=10.0)
+        assert engine.peak == 2
+        stats = svc.stats_dict()
+        assert stats["searching"] == 2 and stats["peak_searching"] == 2
+        engine.gate.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        # both searches completed and are now cached
+        for key in (s1.cache_key(), s2.cache_key()):
+            status, payload = _request(f"{base}/v1/results/{key}")
+            assert status == 200 and payload["status"] == "ready"
+    assert engine.calls == 2
+    stats = svc.stats_dict()
+    assert stats["searching"] == 0 and stats["peak_searching"] == 2
+
+
+def test_search_concurrency_bound_is_enforced(tiny_dense):
+    """Three distinct cold specs against a bound of 2: at most two run at
+    once; the third starts only after a slot frees."""
+    from harness_service import BlockingAstra
+
+    engine = BlockingAstra()
+    svc = SearchService(engine, search_concurrency=2)
+    specs = [
+        _spec(tiny_dense), _spec(tiny_dense, device="H100"),
+        _spec(tiny_dense, n=8),
+    ]
+    with serve_http(svc) as base:
+        results = []
+        threads = [_post_async(base, s, results) for s in specs]
+        assert engine.entered.acquire(timeout=10.0)
+        assert engine.entered.acquire(timeout=10.0)
+        # the third flight exists but cannot enter the engine yet
+        assert not engine.entered.acquire(timeout=0.2)
+        assert engine.peak == 2 and svc.stats_dict()["searching"] == 2
+        engine.gate.set()  # frees slots; the third runs and finishes
+        for t in threads:
+            t.join(timeout=10.0)
+    assert engine.calls == 3 and engine.peak == 2
+    assert svc.stats_dict()["peak_searching"] == 2
+
+
+def test_identical_specs_still_single_flight_under_concurrency(tiny_dense):
+    """The bounded executor must not regress single-flight: N identical
+    concurrent specs run ONE search."""
+    from harness_service import BlockingAstra
+
+    engine = BlockingAstra()
+    svc = SearchService(engine, search_concurrency=4)
+    spec_json = _spec(tiny_dense).to_json()
+    results, threads = [], []
+    for _ in range(4):
+        t = threading.Thread(
+            target=lambda: results.append(svc.search_json(spec_json)),
+            daemon=True,
+        )
+        t.start()
+        threads.append(t)
+    assert engine.entered.acquire(timeout=10.0)  # exactly one search enters
+    assert not engine.entered.acquire(timeout=0.2)
+    engine.gate.set()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert engine.calls == 1
+    assert len({text for _, text, _ in results}) == 1  # one shared report
+    assert svc.stats_dict()["coalesced"] == 3
+
+
+def test_service_workers_override_is_identity_preserving(tiny_dense):
+    """A service pinned to workers=2 must serve byte-identical reports and
+    keys to a workers=1 service (workers is an execution detail)."""
+    spec = _spec(tiny_dense)
+    plain = _service()
+    pinned = _service(workers=2)
+    k1, t1, _ = plain.search_json(spec.to_json())
+    k2, t2, _ = pinned.search_json(spec.to_json())
+    assert k1 == k2
+    r1, r2 = SearchReport.from_json(t1), SearchReport.from_json(t2)
+    assert r1.normalized_json() == r2.normalized_json()
+    assert pinned.stats_dict()["search_workers"] == 2
