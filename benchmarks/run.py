@@ -49,6 +49,14 @@ def _derived(name: str, rows: list[dict]) -> str:
                 out += (f";parallel_speedup={best}x"
                         f";parallel_identical="
                         f"{all(r['report_identical'] for r in par)}")
+            flt = [r for r in rows if r["bench"] == "table1-fleet"
+                   and "partition_speedup" in r and r["workers"] == 2]
+            if flt:
+                out += f";fleet_partition_speedup={flt[0]['partition_speedup']}x"
+            warm = [r for r in rows if r["bench"] == "table1-fleet"
+                    and "spinup_delta_s" in r]
+            if warm:
+                out += f";pool_spinup_delta={warm[0]['spinup_delta_s']}s"
             return out
         if name in ("fig5", "fig6"):
             ratios = [r["ratio"] for r in rows if r.get("ratio")]

@@ -23,7 +23,7 @@ the same sqlite file, then warm from a *second replica* sharing that file —
 the paper's pay-once cost now survives restarts and is fleet-shared.
 
 ``table1-parallel`` rows measure the sharded execution engine
-(``Limits.workers`` -> :mod:`repro.core.parallel_eval`): one mode-2 and one
+(``Limits.workers`` -> :mod:`repro.core.backend`): one mode-2 and one
 mode-3 setting searched cold at workers=1 vs workers=2/4 on this host, with
 the winning reports asserted byte-identical (wall-time fields normalized).
 ``speedup_vs_serial`` is realized wall time and therefore bounded by the
@@ -32,10 +32,25 @@ setting the rows also record the host-independent work partition —
 ``shard_max_s``/``shard_sum_s`` from timing each shard's work serially —
 whose ``partition_speedup`` (serial work / slowest shard) is what a host
 with >= workers free cores realizes.
+
+``table1-fleet`` rows cross the host boundary: the mode-3 sweep searched
+through real HTTP workers (forked service processes answering
+``POST /v1/shard``) at 1/2/4 workers via :class:`repro.core.backend.
+FleetBackend`, byte-identity asserted against serial. ``fleet_s`` is the
+realized coordinator wall time (bounded by this host's cores, since every
+"remote" worker lives here); ``partition_speedup`` is the host-independent
+bound — each shard of the actual overshard (4 shards per worker) timed
+serially, then dealt greedily to the least-loaded worker, which is the
+assignment the work-stealing queue converges to. A final pair of rows
+reports the :class:`~repro.core.backend.LocalPoolBackend` warm-pool
+economics: per-search wall time with a fresh pool every search (cold)
+vs one long-lived pool (warm), the spin-up delta being what the warm
+pool removes from the parallel hot path.
 """
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
 import os
 import tempfile
 import time
@@ -52,10 +67,11 @@ from repro.core import (
     SearchSpec,
     Workload,
 )
+from repro.core.backend import FleetBackend, LocalPoolBackend, evaluate_shard
 from repro.core.batch import BatchedCostSimulator
 from repro.core.params import GpuConfig
 from repro.core.search import generate_strategies
-from repro.serve.search_service import SearchService
+from repro.serve.search_service import SearchService, make_server
 from repro.serve.store import SqliteStore
 
 SETTINGS = [64, 256, 1024, 4096]
@@ -70,6 +86,7 @@ PERSIST_SETTINGS = [("llama2-7b", 64)]
 # parallel-engine subset: one mode-2 (exhaustive sweep, so the stream is
 # big enough to shard) and one mode-3 setting
 PARALLEL_WORKERS = [1, 2, 4]
+FLEET_WORKERS = [1, 2, 4]
 
 
 def _parallel_settings():
@@ -124,8 +141,6 @@ def parallel_rows(eta) -> list[dict]:
             }
             if pool_kind == "sweep" and w > 1:
                 # host-independent evidence: time each shard's work alone
-                from repro.core.parallel_eval import evaluate_shard
-
                 shard_times = []
                 for i in range(w):
                     t0 = time.perf_counter()
@@ -138,6 +153,127 @@ def parallel_rows(eta) -> list[dict]:
                 )
             rows.append(row)
     return rows
+
+
+def _serve_worker(eta, q) -> None:  # pragma: no cover - child process body
+    """Child-process body: one worker service on an ephemeral port."""
+    server = make_server(SearchService(Astra(eta)), port=0)
+    q.put(server.server_address[1])
+    server.serve_forever()
+
+
+def _spawn_workers(eta, n: int):
+    """Fork ``n`` worker service processes; return (urls, procs).
+
+    ``fork`` hands each child the already-warm census/filter caches, the
+    same inheritance a production worker gets from its own warmup search.
+    """
+    ctx = multiprocessing.get_context("fork")
+    procs, urls = [], []
+    for _ in range(n):
+        q = ctx.SimpleQueue()
+        p = ctx.Process(target=_serve_worker, args=(eta, q), daemon=True)
+        p.start()
+        procs.append(p)
+        urls.append(f"http://127.0.0.1:{q.get()}")
+    return urls, procs
+
+
+def fleet_rows(eta) -> list[dict]:
+    """Realized fleet wall-time + host-independent partition speedup at
+    1/2/4 HTTP workers on the mode-3 sweep, then the warm-vs-cold pool
+    spin-up delta for :class:`LocalPoolBackend`."""
+    model, pool_kind, spec = _parallel_settings()[1]  # the mode-3 sweep
+    rows = []
+    # warmup fills the process-wide caches the forked workers inherit
+    Astra(eta).search(spec)
+    t0 = time.perf_counter()
+    serial_norm = Astra(eta).search(spec).normalized_json()
+    serial_s = time.perf_counter() - t0
+
+    urls, procs = _spawn_workers(eta, max(FLEET_WORKERS))
+    try:
+        for w in FLEET_WORKERS:
+            backend = FleetBackend(urls[:w])
+            t0 = time.perf_counter()
+            rep = Astra(eta, backend=backend).search(spec)
+            fleet_s = time.perf_counter() - t0
+            identical = rep.normalized_json() == serial_norm
+            assert identical, f"fleet workers={w} report diverged"
+            n = backend.last_run_stats["shards"]
+            # host-independent bound: time each shard of the *actual*
+            # overshard alone, then deal greedily to the least-loaded
+            # worker — the assignment work-stealing converges to. Shards
+            # run through one warm engine, as on a long-lived worker
+            # whose engine + filter bank persist across the shards it
+            # pulls (the first timed shard carries the one-per-worker
+            # bank build).
+            worker = Astra(eta)
+            shard_times = []
+            for i in range(n):
+                t0 = time.perf_counter()
+                worker.run_shard(spec, (i, n))
+                shard_times.append(time.perf_counter() - t0)
+            loads = [0.0] * w
+            for t in sorted(shard_times, reverse=True):
+                loads[loads.index(min(loads))] += t
+            rows.append({
+                "bench": "table1-fleet",
+                "model": model,
+                "pool": pool_kind,
+                "workers": w,
+                "shards": n,
+                "host_cores": os.cpu_count(),
+                "serial_s": round(serial_s, 3),
+                "fleet_s": round(fleet_s, 3),
+                "realized_speedup": round(serial_s / max(fleet_s, 1e-9), 2),
+                "shard_sum_s": round(sum(shard_times), 3),
+                "max_worker_load_s": round(max(loads), 3),
+                "partition_speedup": round(
+                    serial_s / max(max(loads), 1e-9), 2
+                ),
+                "report_identical": identical,
+            })
+    finally:
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.join(timeout=5.0)
+    rows.extend(_pool_spinup_rows(eta, model, spec))
+    return rows
+
+
+def _pool_spinup_rows(eta, model: str, spec: SearchSpec) -> list[dict]:
+    """Warm-pool economics: the same sharded search with a fresh pool per
+    search (cold, PR-5 behaviour) vs one long-lived pool (warm)."""
+    run_spec = dataclasses.replace(spec, limits=Limits(workers=2))
+    cold = []
+    for _ in range(2):
+        with LocalPoolBackend(eta, workers=2) as backend:
+            t0 = time.perf_counter()
+            Astra(eta, backend=backend).search(run_spec)
+            cold.append(time.perf_counter() - t0)
+
+    warm = []
+    with LocalPoolBackend(eta, workers=2) as backend:
+        astra = Astra(eta, backend=backend)
+        for _ in range(3):
+            t0 = time.perf_counter()
+            astra.search(run_spec)
+            warm.append(time.perf_counter() - t0)
+        spinups = backend.pool_spinups
+    assert spinups == 1, "warm pool was rebuilt mid-benchmark"
+    cold_s, warm_s = min(cold), min(warm[1:])  # skip the warm pool's build
+    return [{
+        "bench": "table1-fleet",
+        "model": model,
+        "pool": "local-pool",
+        "workers": 2,
+        "cold_pool_search_s": round(cold_s, 3),
+        "warm_pool_search_s": round(warm_s, 3),
+        "spinup_delta_s": round(cold_s - warm_s, 3),
+        "pool_spinups_across_3_searches": spinups,
+    }]
 
 
 def compare_engines(
@@ -312,4 +448,8 @@ def run(eta) -> list[dict]:
 
     # sharded parallel execution: workers=1 vs 2/4 cold wall-time
     par_rows = parallel_rows(eta)
-    return rows + engine_rows + service_rows + persist_rows + par_rows
+
+    # fleet execution over HTTP workers + warm-pool spin-up delta
+    flt_rows = fleet_rows(eta)
+    return (rows + engine_rows + service_rows + persist_rows + par_rows
+            + flt_rows)

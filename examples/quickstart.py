@@ -7,6 +7,7 @@ three shapes — this is what used to be the "three modes"), the workload,
 and an objective. Specs are plain data and round-trip through JSON, so the
 exact same search can be shipped to a service and replayed.
 """
+import dataclasses
 import os
 import sys
 
@@ -153,3 +154,38 @@ print(f"[service] warm hit == cold report; "
 #                                   pool=DeviceSweep(("A800", "H100"), 512),
 #                                   workload=workload,
 #                                   limits=Limits(workers=0)))
+
+# ---- fleet search: the same shards, dealt to workers over HTTP ------------
+# Every service is already a fleet worker (POST /v1/shard). Here: a
+# two-worker fleet on localhost, driven by Limits(fleet=...) — in
+# production the workers are other hosts and the coordinator is
+# `serve --fleet http://w1:8123,http://w2:8123`.
+import threading
+
+from repro.core import Limits
+from repro.serve.search_service import make_server
+
+servers = [make_server(SearchService(Astra(eta)), port=0) for _ in range(2)]
+for s in servers:
+    threading.Thread(target=s.serve_forever, daemon=True).start()
+urls = tuple(f"http://127.0.0.1:{s.server_address[1]}" for s in servers)
+
+fleet_spec = SearchSpec(
+    arch=llama7b,
+    pool=HeteroCaps(total_devices=16, type_caps=(("A800", 8), ("H100", 8))),
+    workload=workload,
+    limits=Limits(fleet=urls),
+)
+fleet_rep = Astra(eta).search(fleet_spec)
+serial_rep = Astra(eta).search(SearchSpec(
+    arch=fleet_spec.arch, pool=fleet_spec.pool, workload=fleet_spec.workload,
+))
+assert fleet_rep.normalized_json() == serial_rep.normalized_json()
+for s in servers:
+    s.shutdown()
+# fleet, like workers, is an execution detail: same cache key either way
+assert fleet_spec.cache_key() == dataclasses.replace(
+    fleet_spec, limits=Limits()
+).cache_key()
+print(f"\n[fleet] 2-worker fleet searched {fleet_rep.counts.generated} "
+      f"placements; report byte-identical to serial, same cache key")

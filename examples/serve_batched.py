@@ -28,12 +28,15 @@ from repro.models import lm
 from repro.serve import ServeEngine
 
 
-def pick_strategy_from_spec(path: str, url: str = None, token: str = None):
+def pick_strategy_from_spec(path: str, url: str = None, token: str = None,
+                            timeout: float = None):
     """Replay a serialized SearchSpec through the search service.
 
     In-process by default; with ``url`` the spec is POSTed to a remote
-    service (``token`` authenticates against an ``--auth-tokens`` service).
-    Either way the report arrives through the wire format."""
+    service (``token`` authenticates against an ``--auth-tokens`` service)
+    through the hardened HTTP client: a dead service fails within
+    ``timeout`` with a clean error instead of hanging the deploy forever,
+    and transient transport faults retry with backoff."""
     from repro.core import SearchSpec
 
     with open(path) as f:
@@ -43,7 +46,8 @@ def pick_strategy_from_spec(path: str, url: str = None, token: str = None):
     if url:
         from repro.serve.search_service import post_spec
 
-        key, report, cached = post_spec(url, spec_json, token=token)
+        kw = {} if timeout is None else {"timeout": timeout}
+        key, report, cached = post_spec(url, spec_json, token=token, **kw)
         print(f"served by {url} (key={key} cached={cached})")
         return spec, report
 
@@ -71,12 +75,21 @@ def main():
     ap.add_argument("--search-token", default=None, metavar="TOKEN",
                     help="bearer token when --search-url points at an "
                          "auth-enabled service")
+    ap.add_argument("--search-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-request timeout against --search-url "
+                         "(default: the service client's 600s)")
     args = ap.parse_args()
 
     if args.search_spec:
-        spec, report = pick_strategy_from_spec(args.search_spec,
-                                               url=args.search_url,
-                                               token=args.search_token)
+        try:
+            spec, report = pick_strategy_from_spec(
+                args.search_spec, url=args.search_url,
+                token=args.search_token, timeout=args.search_timeout,
+            )
+        except (RuntimeError, OSError) as e:
+            print(f"search service unavailable: {e}", file=sys.stderr)
+            return 2
         b = report.best
         if b is None:
             print(f"search spec {args.search_spec}: no feasible strategy")
@@ -111,4 +124,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -16,10 +16,20 @@ Layout mirrors the paper's pipeline (Fig. 2):
   planner.py  — spec -> tagged candidate streams over a shared FilterBank
   objectives.py — pluggable ranking / budget selection
   wire.py     — bit-exact JSON float encoding + versioned envelopes
+  backend.py  — ExecutionBackend: serial loop / warm local process pool /
+                HTTP fleet coordinator, all shard-exact
+  http_client.py — hardened stdlib HTTP JSON client (timeouts + retries)
   api.py      — Astra.search(spec): the unified pipeline; SearchReport is
                 the wire-exact result (to_json/from_json)
 """
 from repro.core.api import Astra, SearchReport
+from repro.core.backend import (
+    ExecutionBackend,
+    FleetBackend,
+    FleetError,
+    LocalPoolBackend,
+    SerialBackend,
+)
 from repro.core.batch import BatchedCostSimulator
 from repro.core.arch import (
     ASSIGNED_SHAPES,
@@ -46,6 +56,11 @@ from repro.core.spec import (
 __all__ = [
     "Astra",
     "SearchReport",
+    "ExecutionBackend",
+    "SerialBackend",
+    "LocalPoolBackend",
+    "FleetBackend",
+    "FleetError",
     "SearchSpec",
     "Workload",
     "FixedPool",

@@ -62,21 +62,24 @@ candidates are bounded by the chunk size plus the collector's survivors.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import json
-import threading
 import time
-from typing import Iterable, Optional, Sequence
+from typing import Optional, Sequence
 
-from repro.core import parallel_eval, wire
-from repro.core.batch import BatchedCostSimulator, stream_evaluate
+from repro.core import wire
+from repro.core.backend import (
+    ExecutionBackend,
+    FleetBackend,
+    LocalPoolBackend,
+    SerialBackend,
+)
 from repro.core.objectives import make_objective
 from repro.core.params import ParallelStrategy
 from repro.core.pareto import CostedStrategy
-from repro.core.planner import build_plan, pool_mode, timed as _timed
+from repro.core.planner import pool_mode
 from repro.core.rules import DEFAULT_RULES
 from repro.core.search import SearchCounts
-from repro.core.simulate import CostSimulator, SimResult
+from repro.core.simulate import SimResult
 from repro.core.spec import SearchSpec
 
 _REPORT_KIND = "astra.search_report"
@@ -157,7 +160,15 @@ class SearchReport:
 
 
 class Astra:
-    """Facade over the spec -> plan -> stream pipeline."""
+    """Facade over the spec -> backend -> stream pipeline.
+
+    Execution is delegated to an :class:`~repro.core.backend.ExecutionBackend`
+    chosen per spec (see :meth:`_backend_for`): the serial in-process loop,
+    the long-lived warm local process pool, or an HTTP fleet coordinator.
+    Every backend returns the identical (collector, counts, evaluated)
+    triple, so the report is a pure function of the spec — execution is an
+    implementation detail the report never reveals (wall-times aside).
+    """
 
     def __init__(
         self,
@@ -166,112 +177,83 @@ class Astra:
         *,
         use_batched: bool = True,
         chunk_size: int = 512,
+        backend: Optional[ExecutionBackend] = None,
     ):
         self.eta = eta_model
-        self.simulator = CostSimulator(eta_model)
-        self.batched = BatchedCostSimulator(eta_model)
         self.rules = rules
         self.use_batched = use_batched
         self.chunk_size = chunk_size
-        # the serial path evaluates on the shared engines above, whose memo
-        # tables are not safe under concurrent mutation. The lock is only
-        # ever try-acquired: the first concurrent serial search gets the
-        # warm shared engines, the rest evaluate on private ones — a
-        # multi-threaded caller (the search service) always overlaps.
-        # Parallel searches (workers != 1) never touch the shared engines.
-        self._engine_lock = threading.Lock()
+        # the serial backend owns the shared warm engines (and the
+        # try-acquire lease that lets a multi-threaded service overlap);
+        # it doubles as the worker half of the fleet protocol (run_shard)
+        self._serial = SerialBackend(
+            eta_model, rules, use_batched=use_batched, chunk_size=chunk_size
+        )
+        self.simulator = self._serial.simulator
+        self.batched = self._serial.batched
+        self._backend = backend  # constructor override: every search uses it
+        self._local: Optional[LocalPoolBackend] = None
+        self._fleets: dict[tuple, FleetBackend] = {}
+
+    @property
+    def _engine_lock(self):
+        """The serial backend's warm-engine lease (kept for callers that
+        pin the shared engines to force private-engine evaluation)."""
+        return self._serial._engine_lock
+
+    # -- backend selection -------------------------------------------------
+    def _backend_for(self, spec: SearchSpec) -> ExecutionBackend:
+        """Pick the execution backend for one spec.
+
+        Precedence: a ``max_candidates`` cap forces the serial loop (the
+        cap is defined on the serial stream order and cannot be
+        distributed); a constructor ``backend=`` override wins next;
+        then ``Limits.fleet`` (HTTP coordinator, one cached
+        :class:`FleetBackend` per distinct worker-URL tuple); then
+        ``Limits.workers != 1`` (the shared warm local pool); else serial.
+        """
+        if spec.limits.max_candidates is not None:
+            return self._serial
+        if self._backend is not None:
+            return self._backend
+        if spec.limits.fleet:
+            key = spec.limits.fleet
+            fleet = self._fleets.get(key)
+            if fleet is None:
+                fleet = self._fleets[key] = FleetBackend(key)
+            return fleet
+        if spec.limits.workers != 1:
+            if self._local is None:
+                self._local = LocalPoolBackend(
+                    self.eta, self.rules, use_batched=self.use_batched,
+                    chunk_size=self.chunk_size,
+                )
+            return self._local
+        return self._serial
 
     # -- the unified entry point -------------------------------------------
     def search(self, spec: SearchSpec) -> SearchReport:
         """Run one declarative search spec end to end.
 
-        ``spec.limits.workers`` picks the execution engine: 1 evaluates
-        serially on this facade's shared engines; N > 1 (or 0 = one per
-        core) shards every candidate stream over N workers
-        (:mod:`repro.core.parallel_eval`) and merges the collectors — same
-        report, same funnel counts, wall-time fields aside. A spec with
-        ``max_candidates`` always runs serially (the cap is defined on the
-        serial stream order).
-        """
-        workers = parallel_eval.resolve_workers(spec.limits.workers)
-        if workers > 1 and spec.limits.max_candidates is None:
-            return self._search_parallel(spec, workers)
-        return self._search_serial(spec)
+        ``spec.limits`` picks the execution backend — ``workers`` (1 =
+        serial, N > 1 or 0 = one per core on the warm local pool, clamped
+        to the spec's shard count) or ``fleet`` (remote HTTP workers with
+        work-stealing and reassignment) — and every backend produces the
+        same report, same funnel counts, wall-time fields aside. A spec
+        with ``max_candidates`` always runs serially (the cap is defined
+        on the serial stream order).
 
-    def _search_serial(self, spec: SearchSpec) -> SearchReport:
-        t0 = time.perf_counter()
-        # prefer the shared warm engines; when another thread already owns
-        # them (a concurrent serial search through a multi-threaded
-        # service), evaluate on private engines instead of queueing — the
-        # engines' caches never change values, so the report is identical
-        # either way and distinct specs truly overlap
-        locked = self._engine_lock.acquire(blocking=False)
-        try:
-            if locked:
-                engine = self.batched if self.use_batched else self.simulator
-            else:
-                engine = (
-                    BatchedCostSimulator(self.eta) if self.use_batched
-                    else CostSimulator(self.eta)
-                )
-            plan = build_plan(spec, rules=self.rules)
-            objective = make_objective(
-                spec.objective, train_tokens=spec.workload.train_tokens
-            )
-            collector = objective.collector(spec.limits.top_k)
-            chunk_size = spec.limits.chunk_size or self.chunk_size
-            w = spec.workload
-
-            evaluated = 0
-            budget = spec.limits.max_candidates
-            for stream in plan.streams:
-                it: Iterable[ParallelStrategy] = stream.strategies
-                if budget is not None:
-                    if budget <= evaluated:
-                        break
-                    it = itertools.islice(it, budget - evaluated)
-                evaluated += stream_evaluate(
-                    engine, spec.arch, _timed(it, plan.counts), collector.push,
-                    global_batch=w.global_batch, seq=w.seq,
-                    train_tokens=w.train_tokens, chunk_size=chunk_size,
-                )
-        finally:
-            if locked:
-                self._engine_lock.release()
-
-        top, pool = collector.results()
-        best = objective.select(top, pool)
-        total = time.perf_counter() - t0
-        search_seconds = plan.counts.gen_seconds
-        return SearchReport(
-            mode=plan.mode,
-            best=best.strategy if best else None,
-            best_sim=best.sim if best else None,
-            top=top,
-            counts=plan.counts,
-            search_seconds=search_seconds,
-            simulate_seconds=max(total - search_seconds, 0.0),
-            pool=pool,
-            evaluated=evaluated,
-        )
-
-    def _search_parallel(self, spec: SearchSpec, workers: int) -> SearchReport:
-        """Sharded execution: fan out, merge collectors, same report.
-
-        ``search_seconds`` is the summed generation CPU time across workers
-        (funnel counts merge exactly; wall-time is what shrinks), and
-        ``simulate_seconds`` is clamped at zero when the summed generation
-        time exceeds the parallel wall-time.
+        ``search_seconds`` is the summed generation CPU time across
+        workers (funnel counts merge exactly; wall-time is what shrinks),
+        and ``simulate_seconds`` is clamped at zero when the summed
+        generation time exceeds the realized wall-time.
         """
         t0 = time.perf_counter()
         objective = make_objective(
             spec.objective, train_tokens=spec.workload.train_tokens
         )
-        collector, counts, evaluated = parallel_eval.run_sharded(
-            spec, eta_model=self.eta, workers=workers, rules=self.rules,
-            use_batched=self.use_batched,
-            chunk_size=spec.limits.chunk_size or self.chunk_size,
-        )
+        backend = self._backend_for(spec)
+        collector, counts, evaluated = backend.run(spec, objective)
         top, pool = collector.results()
         best = objective.select(top, pool)
         total = time.perf_counter() - t0
@@ -287,3 +269,26 @@ class Astra:
             pool=pool,
             evaluated=evaluated,
         )
+
+    # -- fleet worker half -------------------------------------------------
+    def run_shard(
+        self,
+        spec: SearchSpec,
+        shard: tuple[int, int],
+        *,
+        chunk_size: Optional[int] = None,
+    ) -> dict:
+        """Evaluate one ``(i, n)`` shard of ``spec`` and return the
+        mergeable wire payload — what a fleet worker serves from
+        ``POST /v1/shard`` (see :class:`~repro.core.backend.FleetBackend`
+        for the coordinator half). Always runs on the serial backend's
+        warm engines, whatever ``spec.limits`` says."""
+        return self._serial.run_shard(spec, shard, chunk_size=chunk_size)
+
+    def close(self) -> None:
+        """Tear down held execution resources (the warm local pool)."""
+        if self._local is not None:
+            self._local.close()
+            self._local = None
+        if self._backend is not None:
+            self._backend.close()

@@ -222,6 +222,40 @@ def balanced_placements_for(
     return out
 
 
+def count_hetero_cells(
+    arch: ModelArch,
+    pool: HeteroPool,
+    global_batch: int,
+    *,
+    tensor_parallel_options: Sequence[int] = (1, 2, 4, 8),
+    micro_batches: Sequence[int] = (1, 2, 4),
+    pipeline_options: Optional[Sequence[int]] = None,
+) -> int:
+    """Exact number of (tp, pp, dp, mbs) cells
+    :func:`iter_hetero_strategies` deals to its shard workers — the sweep
+    arithmetic below MUST mirror that generator's loop structure (a cell is
+    counted exactly when its ``cell`` counter advances there). Backends
+    clamp mode-2 worker fan-out to this, so a tiny placement sweep never
+    forks idle workers."""
+    pps = pipeline_options or [
+        p for p in (2, 4, 8, 16, 32, 64)
+        if p <= min(arch.num_layers, pool.total_devices)
+    ]
+    cells = 0
+    for tp in tensor_parallel_options:
+        if not arch.is_attention_free and arch.heads % tp != 0:
+            continue
+        for pp in pps:
+            max_dp = pool.total_devices // (tp * pp)
+            for dp in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+                if dp > max_dp:
+                    continue
+                for mbs in micro_batches:
+                    if global_batch % (dp * mbs) == 0:
+                        cells += 1
+    return cells
+
+
 def iter_hetero_strategies(
     arch: ModelArch,
     pool: HeteroPool,

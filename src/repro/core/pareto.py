@@ -18,7 +18,7 @@ Both collectors are *mergeable*: ``push`` optionally takes an explicit
 Because full-key ties break on ``seq`` (not on arrival order), N shard
 collectors merged in any order reproduce the serial collector exactly,
 which is what makes the parallel evaluation engine
-(:mod:`repro.core.parallel_eval`) byte-identical to a serial search.
+(:mod:`repro.core.backend`) byte-identical to a serial search.
 """
 from __future__ import annotations
 

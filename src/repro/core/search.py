@@ -259,6 +259,53 @@ def _iter_raw_indexed(
             )
 
 
+def count_raw_indices(
+    arch: ModelArch,
+    gpu: GpuConfig,
+    global_batch: int,
+    space: Optional[dict[str, list]] = None,
+) -> int:
+    """Exact number of raw indices :func:`_iter_raw_indexed` enumerates,
+    computed arithmetically (no strategies are constructed). The product
+    space is separable, so the count is the base product with the
+    ``recompute_granularity == "full"`` slice expanded by its per-``pp``
+    ``recompute_num_layers`` fan-out — the same set expression the
+    generator evaluates per combo. Backends use this to clamp worker
+    fan-out (``ceil(count / SHARD_BLOCK)`` blocks exist to deal out), so a
+    tiny search never forks idle workers.
+    """
+    spec = get_device(gpu.device)
+    space = space or default_parameter_space(
+        arch, gpu.num_devices, spec.devices_per_node, global_batch
+    )
+    sizes = {k: len(v) for k, v in space.items()}
+    total = 1
+    for n in sizes.values():
+        total *= n
+    if total == 0:
+        return 0
+    rg = space.get("recompute_granularity")
+    if rg is None:
+        return total  # rnl_choices is always [0]: one index per combo
+    n_full = sum(1 for g in rg if g == "full")
+    per_rg = total // sizes["recompute_granularity"]  # combos per rg value
+    count = per_rg * (sizes["recompute_granularity"] - n_full)
+    if not n_full:
+        return count
+    pps = space.get("pipeline_parallel")
+    if pps is None:
+        # the generator indexes rnl choices off combo's pp; without a pp
+        # axis it cannot enumerate "full" combos at all (it would raise) —
+        # bound by the maximum fan-out so a clamp stays safe
+        return count + per_rg * n_full * 3
+    per_rg_pp = per_rg // sizes["pipeline_parallel"]
+    for pp in pps:
+        layers_per_stage = arch.num_layers // pp
+        rnl = len({1, max(layers_per_stage // 2, 1), layers_per_stage})
+        count += n_full * per_rg_pp * rnl
+    return count
+
+
 def iter_raw_strategies(
     arch: ModelArch,
     gpu: GpuConfig,

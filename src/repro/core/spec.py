@@ -186,11 +186,17 @@ class Limits:
 
     ``workers`` is the parallel-evaluation fan-out: 1 (the default) runs
     the serial path, N > 1 shards every candidate stream round-robin over N
-    workers (process pool when ``fork`` is available, thread pool
-    otherwise), and 0 means one worker per CPU core. It is an *execution*
-    detail, not search semantics: results are byte-identical across worker
-    counts (modulo wall-time fields), so :meth:`SearchSpec.canonicalize`
-    drops it and a parallel and a serial search of the same spec are cache
+    workers (a long-lived warm ``fork`` process pool where available,
+    threads otherwise), and 0 means one worker per CPU core. ``fleet`` is
+    the multi-host fan-out: a tuple of worker-service base URLs (hosts
+    running ``python -m repro.serve.search_service serve``) the shards are
+    shipped to over HTTP instead — when set it takes precedence over
+    ``workers``.
+
+    Both are *execution* details, not search semantics: results are
+    byte-identical across worker counts and fleets (modulo wall-time
+    fields), so :meth:`SearchSpec.canonicalize` drops them both and a
+    serial, a multi-core, and a fleet search of the same spec are cache
     hits for each other. With ``max_candidates`` set the search always runs
     serially (a candidate cap is defined on the serial stream order).
     """
@@ -199,10 +205,16 @@ class Limits:
     chunk_size: Optional[int] = None  # None -> the facade's default
     max_candidates: Optional[int] = None  # cap on candidates streamed
     workers: int = 1  # 0 = one per CPU core; execution detail, not identity
+    fleet: Optional[tuple[str, ...]] = None  # worker URLs; not identity
 
     def __post_init__(self):
         if self.workers < 0:
             raise ValueError(f"workers must be >= 0, got {self.workers}")
+        if self.fleet is not None:
+            if not self.fleet:
+                raise ValueError("fleet must name at least one worker URL")
+            if not all(isinstance(u, str) and u for u in self.fleet):
+                raise ValueError(f"fleet must be URL strings, got {self.fleet!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +237,12 @@ class SearchSpec:
     def to_dict(self) -> dict:
         pool_d = dataclasses.asdict(self.pool)
         pool_d["kind"] = self.pool.kind
+        limits_d = dataclasses.asdict(self.limits)
+        if limits_d.get("fleet") is None:
+            # sparse: non-fleet specs keep their pre-fleet wire bytes
+            limits_d.pop("fleet", None)
+        else:
+            limits_d["fleet"] = list(limits_d["fleet"])
         return {
             "version": 1,
             "arch": dataclasses.asdict(self.arch),
@@ -233,7 +251,7 @@ class SearchSpec:
             "objective": dataclasses.asdict(self.objective),
             "space": self.space,
             "hetero_base": self.hetero_base,
-            "limits": dataclasses.asdict(self.limits),
+            "limits": limits_d,
         }
 
     def to_json(self, *, indent: Optional[int] = None) -> str:
@@ -266,7 +284,7 @@ class SearchSpec:
             objective=ObjectiveSpec(**(d.get("objective") or {})),
             space=d.get("space"),
             hetero_base=d.get("hetero_base"),
-            limits=Limits(**(d.get("limits") or {})),
+            limits=_limits_from_dict(d.get("limits")),
         )
 
     @classmethod
@@ -284,13 +302,15 @@ class SearchSpec:
         already applied) with ``None`` entries dropped and integral floats
         normalized to ints.
 
-        ``limits.workers`` is dropped entirely: the parallel fan-out is an
-        execution detail that cannot change the result, so a spec searched
-        with 1 worker and the same spec searched with 8 must share one
-        cache key (and one wire-identical cached report).
+        ``limits.workers`` and ``limits.fleet`` are dropped entirely: the
+        parallel/fleet fan-out is an execution detail that cannot change
+        the result, so a spec searched serially, over 8 local workers, or
+        across a 16-host fleet must share one cache key (and one
+        wire-identical cached report).
         """
         d = _canonical(self.to_dict())
         d.get("limits", {}).pop("workers", None)
+        d.get("limits", {}).pop("fleet", None)
         return d
 
     def canonical_json(self) -> str:
@@ -303,6 +323,15 @@ class SearchSpec:
         result cache (see :class:`repro.serve.search_service.SearchService`)
         keys a :class:`~repro.core.api.SearchReport` on."""
         return hashlib.sha256(self.canonical_json().encode()).hexdigest()
+
+
+def _limits_from_dict(d: Optional[dict]) -> Limits:
+    """JSON-shaped limits dict -> Limits (the fleet URL list re-tuples so a
+    round-tripped spec compares equal to the constructed one)."""
+    d = dict(d or {})
+    if d.get("fleet") is not None:
+        d["fleet"] = tuple(str(u) for u in d["fleet"])
+    return Limits(**d)
 
 
 def _canonical(v):

@@ -21,8 +21,18 @@ that
 
       POST /v1/search            body = SearchSpec JSON -> report envelope
       POST /v1/search?async=1    -> 202 {key, status}; poll the result
+      POST /v1/shard             body = {spec, shard: [i, n]} -> shard payload
       GET  /v1/results/<key>     -> 200 report | 202 pending | 404 unknown
       GET  /v1/stats             -> cache/store counters + per-token usage
+
+``POST /v1/shard`` is the *worker role* of a fleet search: the body names
+one ``(i, n)`` shard of a spec, the response is the mergeable collector
+payload (``astra.shard_result`` wire dict) a
+:class:`~repro.core.backend.FleetBackend` coordinator merges. It shares
+the auth gate and the bounded search executor with ``/v1/search``, and a
+service started with ``serve --fleet URL,URL`` plays the *coordinator
+role*: every cold search fans out to those workers and the merged report
+lands in this service's store — one binary, both parts.
 
 Every result a caller sees — cached or fresh, in-process or over HTTP —
 passes through ``SearchReport.to_json``/``from_json``, so the serialized
@@ -32,7 +42,8 @@ path is the only path and is exact by construction (see
 A small CLI rides along::
 
     python -m repro.serve.search_service serve --port 8123 \\
-        [--store sqlite:reports.db] [--auth-tokens tokens.txt]
+        [--store sqlite:reports.db] [--auth-tokens tokens.txt] \\
+        [--fleet http://worker1:8123,http://worker2:8123]
     python -m repro.serve.search_service search --url http://host:8123 \\
         --spec spec.json [--token TOKEN] [--async-poll]
     python -m repro.serve.search_service stats --url http://host:8123
@@ -45,13 +56,18 @@ import http.server
 import json
 import threading
 import time
-import urllib.error
 import urllib.parse
-import urllib.request
 from collections import OrderedDict
 from typing import Callable, Optional
 
 from repro.core.api import Astra, SearchReport
+from repro.core.backend import DEFAULT_SHARD_TIMEOUT, FleetBackend
+from repro.core.http_client import (
+    DEFAULT_RETRIES,
+    DEFAULT_SEARCH_TIMEOUT,
+    DEFAULT_TIMEOUT,
+    http_json as _http_json,
+)
 from repro.core.spec import SearchSpec
 from repro.serve.store import MemoryStore, ReportStore, parse_store_url
 
@@ -71,6 +87,8 @@ class ServiceStats:
     store_get_errors: int = 0  # store failed a read; treated as a miss
     searching: int = 0  # cold searches executing right now
     peak_searching: int = 0  # high-water mark of concurrent cold searches
+    shards: int = 0  # fleet worker role: /v1/shard requests served
+    shard_errors: int = 0  # /v1/shard requests that failed
 
     @property
     def requests(self) -> int:
@@ -91,6 +109,8 @@ class ServiceStats:
             "hit_rate": round(self.hit_rate, 4),
             "searching": self.searching,
             "peak_searching": self.peak_searching,
+            "shards": self.shards,
+            "shard_errors": self.shard_errors,
         }
 
 
@@ -248,6 +268,53 @@ class SearchService:
                 target=self._run_flight, args=(key, spec, flight), daemon=True
             ).start()
         return key, "pending", None
+
+    def shard_json(self, body_json: str) -> dict:
+        """Worker role: evaluate one shard of a spec (``POST /v1/shard``).
+
+        ``body_json`` is ``{"spec": <spec dict>, "shard": [i, n],
+        "chunk_size"?: int}``; the return value is the mergeable
+        ``astra.shard_result`` wire payload from
+        :meth:`~repro.core.api.Astra.run_shard`. Runs under the same
+        bounded executor as cold searches, so a worker serving shards and
+        searches at once never exceeds ``search_concurrency``. Raises
+        ``NotImplementedError`` when the engine has no ``run_shard`` (the
+        HTTP layer maps it to 501), and ``ValueError``/``KeyError``/
+        ``TypeError`` on malformed bodies (mapped to 400); anything else
+        counts into ``shard_errors``.
+        """
+        run_shard = getattr(self.astra, "run_shard", None)
+        if run_shard is None:
+            raise NotImplementedError(
+                "this service's engine does not support shard evaluation"
+            )
+        body = json.loads(body_json)
+        if not isinstance(body, dict):
+            raise ValueError("shard request body must be a JSON object")
+        spec = SearchSpec.from_dict(body["spec"])
+        i, n = (int(x) for x in body["shard"])
+        chunk_size = body.get("chunk_size")
+        if chunk_size is not None:
+            chunk_size = int(chunk_size)
+        try:
+            with self._search_sem:
+                with self._lock:
+                    self.stats.searching += 1
+                    self.stats.peak_searching = max(
+                        self.stats.peak_searching, self.stats.searching
+                    )
+                try:
+                    payload = run_shard(spec, (i, n), chunk_size=chunk_size)
+                finally:
+                    with self._lock:
+                        self.stats.searching -= 1
+        except Exception:
+            with self._lock:
+                self.stats.shard_errors += 1
+            raise
+        with self._lock:
+            self.stats.shards += 1
+        return payload
 
     def result_json(self, key: str) -> tuple[str, Optional[str]]:
         """Poll a key: ``(status, report_json|error|None)`` with status one
@@ -629,6 +696,8 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         admitted, token = self._authorize()
         if not admitted:
             return
+        if url.path == "/v1/shard":
+            return self._do_shard(spec_json)
         if url.path != "/v1/search":
             return self._reply(404, {"error": f"unknown path {url.path}"})
         try:
@@ -665,6 +734,27 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return self._reply(500, {
                 "error": f"search failed: {type(e).__name__}: {e}"
             })
+
+    def _do_shard(self, body_json: str):
+        """Fleet worker endpoint: one shard in, one mergeable payload out.
+
+        Charges the request quota like every endpoint but never the cold
+        quota — a shard is a slice of someone else's search, and a
+        coordinator overshards, so cold-charging each slice would
+        multiply the spend by the shard count."""
+        try:
+            payload = self.service.shard_json(body_json)
+        except NotImplementedError as e:
+            return self._reply(501, {"error": str(e)})
+        except (ValueError, KeyError, TypeError) as e:
+            return self._reply(400, {
+                "error": f"bad shard request: {type(e).__name__}: {e}"
+            })
+        except Exception as e:
+            return self._reply(500, {
+                "error": f"shard failed: {type(e).__name__}: {e}"
+            })
+        return self._reply(200, payload)
 
     def do_GET(self):
         try:
@@ -738,28 +828,23 @@ def serve_forever(
 # CLI client
 # ---------------------------------------------------------------------------
 
-def _http_json(
-    url: str, data: Optional[bytes] = None, token: Optional[str] = None
-) -> tuple[int, dict]:
-    headers = {"Content-Type": "application/json"} if data else {}
-    if token:
-        headers["Authorization"] = f"Bearer {token}"
-    req = urllib.request.Request(url, data=data, headers=headers)
-    try:
-        with urllib.request.urlopen(req) as resp:
-            return resp.status, json.loads(resp.read().decode())
-    except urllib.error.HTTPError as e:
-        return e.code, json.loads(e.read().decode() or "{}")
-
-
 def post_spec(
-    base_url: str, spec_json: str, *, token: Optional[str] = None
+    base_url: str,
+    spec_json: str,
+    *,
+    token: Optional[str] = None,
+    timeout: float = DEFAULT_SEARCH_TIMEOUT,
+    retries: int = DEFAULT_RETRIES,
 ) -> tuple[str, SearchReport, bool]:
     """Client half of the sync endpoint: POST a spec JSON to a running
     service and return ``(cache_key, report, cached)``. The one place that
-    understands the response envelope — CLIs and examples share it."""
+    understands the response envelope — CLIs and examples share it. Goes
+    through the hardened client (:mod:`repro.core.http_client`): a dead
+    server fails within ``timeout`` instead of hanging, transient
+    transport faults retry with backoff, HTTP error statuses never do."""
     status, payload = _http_json(
-        f"{base_url.rstrip('/')}/v1/search", spec_json.encode(), token
+        f"{base_url.rstrip('/')}/v1/search", spec_json.encode(),
+        token=token, timeout=timeout, retries=retries,
     )
     if status != 200:
         raise RuntimeError(
@@ -777,11 +862,21 @@ def _cmd_serve(args) -> int:
     from repro.calibration.fit import load_or_train
 
     eta, _ = load_or_train()
+    backend = None
+    if args.fleet:
+        if args.search_workers is not None:
+            print("--fleet and --search-workers are mutually exclusive: "
+                  "a coordinator's fan-out is its worker list")
+            return 2
+        urls = [u.strip() for u in args.fleet.split(",") if u.strip()]
+        backend = FleetBackend(
+            urls, token=args.fleet_token, timeout=args.fleet_timeout,
+        )
     store = parse_store_url(
         args.store, max_entries=args.max_entries, ttl_seconds=args.ttl,
     )
     service = SearchService(
-        Astra(eta), store=store,
+        Astra(eta, backend=backend), store=store,
         search_concurrency=args.search_concurrency,
         workers=args.search_workers,
     )
@@ -797,12 +892,14 @@ def _cmd_search(args) -> int:
     base = args.url.rstrip("/")
     if args.async_poll:
         status, payload = _http_json(
-            f"{base}/v1/search?async=1", spec_json.encode(), args.token
+            f"{base}/v1/search?async=1", spec_json.encode(),
+            token=args.token, timeout=args.timeout, retries=args.retries,
         )
         while status == 202:
             time.sleep(args.poll_interval)
             status, payload = _http_json(
-                f"{base}/v1/results/{payload['key']}", token=args.token
+                f"{base}/v1/results/{payload['key']}", token=args.token,
+                timeout=args.timeout, retries=args.retries,
             )
         if status != 200:
             print(json.dumps(payload, indent=2))
@@ -811,8 +908,11 @@ def _cmd_search(args) -> int:
         report = SearchReport.from_dict(payload["report"])
     else:
         try:
-            key, report, cached = post_spec(base, spec_json, token=args.token)
-        except RuntimeError as e:
+            key, report, cached = post_spec(
+                base, spec_json, token=args.token,
+                timeout=args.timeout, retries=args.retries,
+            )
+        except (RuntimeError, OSError) as e:
             print(e)
             return 1
     b = report.best
@@ -828,9 +928,14 @@ def _cmd_search(args) -> int:
 
 
 def _cmd_stats(args) -> int:
-    status, payload = _http_json(
-        f"{args.url.rstrip('/')}/v1/stats", token=args.token
-    )
+    try:
+        status, payload = _http_json(
+            f"{args.url.rstrip('/')}/v1/stats", token=args.token,
+            timeout=args.timeout, retries=args.retries,
+        )
+    except OSError as e:
+        print(e)
+        return 1
     print(json.dumps(payload, indent=2))
     return 0 if status == 200 else 1
 
@@ -859,6 +964,19 @@ def main(argv=None) -> int:
                    help="override Limits.workers on every cold search "
                         "(0 = one worker per CPU core; execution detail — "
                         "never changes a spec's cache key or its report)")
+    p.add_argument("--fleet", default=None, metavar="URL[,URL...]",
+                   help="coordinator mode: fan every cold search out to "
+                        "these worker services (POST /v1/shard, "
+                        "work-stealing + reassignment) and merge here; "
+                        "the merged report lands in this service's store. "
+                        "Mutually exclusive with --search-workers")
+    p.add_argument("--fleet-token", default=None, metavar="TOKEN",
+                   help="bearer token this coordinator presents to "
+                        "auth-enabled fleet workers")
+    p.add_argument("--fleet-timeout", type=float,
+                   default=DEFAULT_SHARD_TIMEOUT, metavar="SECONDS",
+                   help="per-shard HTTP timeout before the shard is "
+                        "reassigned (default %(default)s)")
     p.set_defaults(fn=_cmd_serve)
 
     p = sub.add_parser("search", help="POST a spec file to a running service")
@@ -869,12 +987,24 @@ def main(argv=None) -> int:
     p.add_argument("--async-poll", action="store_true",
                    help="submit with ?async=1 and poll /v1/results/<key>")
     p.add_argument("--poll-interval", type=float, default=0.5)
+    p.add_argument("--timeout", type=float, default=DEFAULT_SEARCH_TIMEOUT,
+                   metavar="SECONDS",
+                   help="connect/read timeout per request; a sync search "
+                        "blocks for the whole cold search, hence the large "
+                        "default (%(default)s)")
+    p.add_argument("--retries", type=int, default=DEFAULT_RETRIES,
+                   help="additional attempts on transport faults "
+                        "(connection refused/reset/timeout; HTTP error "
+                        "statuses are never retried)")
     p.set_defaults(fn=_cmd_search)
 
     p = sub.add_parser("stats", help="print /v1/stats of a running service")
     p.add_argument("--url", required=True)
     p.add_argument("--token", default=None,
                    help="bearer token for an auth-enabled service")
+    p.add_argument("--timeout", type=float, default=DEFAULT_TIMEOUT,
+                   metavar="SECONDS")
+    p.add_argument("--retries", type=int, default=DEFAULT_RETRIES)
     p.set_defaults(fn=_cmd_stats)
 
     args = ap.parse_args(argv)

@@ -89,6 +89,60 @@ class BlockingAstra:
                 self.active -= 1
 
 
+class FlakyWorker:
+    """Engine for a fleet *worker* service that misbehaves on its first
+    ``fail_first`` shard calls, then delegates to a real ``Astra`` — the
+    probe for "coordinator reassignment reproduces the serial report".
+
+    Modes:
+      * ``"die"`` — raises ``SystemExit``, killing the HTTP handler thread
+        mid-request: the coordinator sees a dropped connection with no
+        HTTP response (a worker process death).
+      * ``"timeout"`` — parks the shard until :attr:`release` is set (or a
+        10 s backstop), so a coordinator with a short shard timeout gives
+        up and reassigns; tests must set ``release`` before teardown.
+      * ``"garbage"`` — returns a syntactically valid JSON payload whose
+        contents are broken (bad counts, bad candidates, non-int
+        evaluated): the coordinator must reject it at validation and
+        reassign, never half-merge it.
+    """
+
+    def __init__(self, mode: str, *, fail_first: int = 1,
+                 astra: Optional[Astra] = None):
+        if mode not in ("die", "timeout", "garbage"):
+            raise ValueError(f"unknown flaky mode {mode!r}")
+        self.astra = astra if astra is not None else Astra(AnalyticEtaModel())
+        self.mode = mode
+        self.fail_first = fail_first
+        self.failures_injected = 0
+        self.shard_calls = 0
+        self.release = threading.Event()
+        self._lock = threading.Lock()
+
+    def search(self, spec):
+        return self.astra.search(spec)
+
+    def run_shard(self, spec, shard, *, chunk_size=None):
+        with self._lock:
+            self.shard_calls += 1
+            inject = self.failures_injected < self.fail_first
+            if inject:
+                self.failures_injected += 1
+        if inject:
+            if self.mode == "die":
+                raise SystemExit("injected worker death")
+            if self.mode == "timeout":
+                self.release.wait(timeout=10.0)
+                raise RuntimeError("injected worker stall")
+            return {  # garbage: valid envelope, broken everything else
+                "version": 1, "kind": "astra.shard_result",
+                "shard": list(shard), "counts": {"bogus": 1},
+                "top": [[[0], {"garbage": True}]], "pool": [],
+                "evaluated": "not-a-number",
+            }
+        return self.astra.run_shard(spec, shard, chunk_size=chunk_size)
+
+
 class FlakyStore(ReportStore):
     """Fault-injection wrapper: raise on the next N puts and/or gets.
 

@@ -1,5 +1,6 @@
-"""Parallel (sharded) search: mergeable collectors, exact shard coverage,
-and byte-identical parallel==serial reports for all three pool shapes."""
+"""Execution backends: mergeable collectors, exact shard coverage,
+byte-identical parallel==serial reports for all three pool shapes, and the
+warm-pool lifecycle of :class:`LocalPoolBackend`."""
 import dataclasses
 import random
 
@@ -16,7 +17,14 @@ from repro.core import (
     SearchSpec,
     Workload,
 )
-from repro.core.parallel_eval import resolve_workers, run_sharded
+from repro.core.backend import (
+    LocalPoolBackend,
+    SerialBackend,
+    load_shard_payload,
+    resolve_workers,
+    run_sharded,
+)
+from repro.core.objectives import make_objective
 from repro.core.pareto import (
     CostedStrategy,
     ParetoStaircase,
@@ -266,3 +274,187 @@ def test_workers_semantics():
         Limits(workers=-1)
     with pytest.raises(ValueError, match="executor"):
         run_sharded(None, eta_model=None, workers=2, executor="bogus")
+
+
+def test_resolve_workers_clamps_to_shard_limit():
+    assert resolve_workers(16, limit=3) == 3
+    assert resolve_workers(2, limit=3) == 2
+    assert resolve_workers(0, limit=1) == 1  # tiny search: no idle forks
+    assert resolve_workers(4, limit=0) == 1  # limit floors at 1
+
+
+def test_shard_limit_matches_enumeration(tiny_dense):
+    """The arithmetic shard caps agree with actually walking the spaces."""
+    from repro.core.hetero import count_hetero_cells, iter_hetero_strategies
+    from repro.core.params import GpuConfig
+    from repro.core.planner import shard_limit
+    from repro.core.search import SHARD_BLOCK, _iter_raw_indexed, \
+        count_raw_indices
+
+    specs = _specs(tiny_dense)
+    fixed = specs["fixed"].pool
+    w = specs["fixed"].workload
+    raw = sum(1 for _ in _iter_raw_indexed(
+        tiny_dense, GpuConfig(fixed.device, fixed.num_devices), w.global_batch
+    ))
+    assert count_raw_indices(
+        tiny_dense, GpuConfig(fixed.device, fixed.num_devices), w.global_batch
+    ) == raw
+    assert shard_limit(specs["fixed"]) == -(-raw // SHARD_BLOCK)
+
+    hetero = specs["hetero"].pool
+    pairs = list(iter_hetero_strategies(
+        tiny_dense, hetero.to_pool(), w.global_batch, fast=True,
+        shard=(0, 1), indexed=True,
+    ))
+    cells = {seq[0] for seq, _ in pairs}
+    n_cells = count_hetero_cells(tiny_dense, hetero.to_pool(), w.global_batch)
+    assert cells <= set(range(n_cells))
+    assert shard_limit(specs["hetero"]) == n_cells
+    assert shard_limit(specs["sweep"]) >= 1
+
+
+def test_tiny_search_never_forks_idle_workers(tiny_dense):
+    """A worker ask beyond the spec's shard count is clamped: the pool
+    spawns at most shard_limit processes, and a limit of 1 takes the
+    in-process path without forking at all."""
+    from repro.core.planner import shard_limit
+
+    spec = dataclasses.replace(
+        _specs(tiny_dense)["fixed"],
+        arch=dataclasses.replace(tiny_dense, num_layers=1),
+        pool=FixedPool("A800", 1),
+        limits=Limits(workers=8),
+    )
+    limit = shard_limit(spec)
+    assert limit < 8  # the ask genuinely exceeds the useful fan-out
+    backend = LocalPoolBackend(AnalyticEtaModel())
+    try:
+        objective = make_objective(spec.objective,
+                                   train_tokens=spec.workload.train_tokens)
+        backend.run(spec, objective)
+        # the pool only ever saw `limit` shards, so it spawned no more
+        # than `limit` processes — the other 8 - limit asks never fork
+        assert len(backend.worker_pids()) <= limit
+    finally:
+        backend.close()
+
+    # and a limit of 1 short-circuits to the serial path: no pool at all
+    backend = LocalPoolBackend(AnalyticEtaModel())
+    try:
+        serial_spec = dataclasses.replace(spec, limits=Limits(workers=1))
+        objective = make_objective(
+            serial_spec.objective,
+            train_tokens=serial_spec.workload.train_tokens,
+        )
+        backend.run(serial_spec, objective, workers=1)
+        assert backend.pool_spinups == 0
+        assert backend.worker_pids() == ()
+    finally:
+        backend.close()
+
+
+# ---------------------------------------------------------------------------
+# warm pool: spin up once, stay hot across searches
+# ---------------------------------------------------------------------------
+
+def test_warm_pool_survives_across_searches(tiny_dense):
+    specs = _specs(tiny_dense)
+    backend = LocalPoolBackend(AnalyticEtaModel(), workers=2)
+    try:
+        objective = make_objective(
+            specs["fixed"].objective,
+            train_tokens=specs["fixed"].workload.train_tokens,
+        )
+        backend.run(specs["fixed"], objective)
+        pids1 = backend.worker_pids()
+        assert backend.pool_spinups == 1
+        assert pids1  # the pool exists and is held open
+        backend.run(specs["fixed"], objective)
+        backend.run(
+            specs["hetero"],
+            make_objective(specs["hetero"].objective,
+                           train_tokens=specs["hetero"].workload.train_tokens),
+        )
+        assert backend.pool_spinups == 1  # no per-search spin-up
+        assert backend.worker_pids() == pids1  # the same worker processes
+        assert backend.searches == 3
+    finally:
+        backend.close()
+    assert backend.worker_pids() == ()
+
+
+def test_astra_reuses_one_local_pool(tiny_dense):
+    astra = Astra(AnalyticEtaModel())
+    try:
+        spec = dataclasses.replace(
+            _specs(tiny_dense)["fixed"], limits=Limits(workers=2)
+        )
+        r1 = astra.search(spec)
+        backend = astra._local
+        assert backend is not None and backend.pool_spinups == 1
+        r2 = astra.search(spec)
+        assert astra._local is backend and backend.pool_spinups == 1
+        assert r1.normalized_json() == r2.normalized_json()
+    finally:
+        astra.close()
+    assert astra._local is None
+
+
+# ---------------------------------------------------------------------------
+# shard payload wire format
+# ---------------------------------------------------------------------------
+
+def test_run_shard_payload_round_trips(tiny_dense):
+    """SerialBackend.run_shard output reloads into the exact shard triple,
+    and the union of all shards is the serial search."""
+    spec = _specs(tiny_dense)["sweep"]
+    backend = SerialBackend(AnalyticEtaModel())
+    objective = make_objective(spec.objective,
+                               train_tokens=spec.workload.train_tokens)
+    n = 3
+    merged = objective.collector(spec.limits.top_k)
+    from repro.core.search import SearchCounts as _SC
+    counts, evaluated = _SC(), 0
+    for i in range(n):
+        payload = backend.run_shard(spec, (i, n))
+        assert payload["kind"] == "astra.shard_result"
+        assert payload["shard"] == [i, n]
+        collector, c, e = load_shard_payload(
+            payload, objective, spec.limits.top_k, shard=(i, n)
+        )
+        merged.merge(collector)
+        counts.merge(c)
+        evaluated += e
+    serial = Astra(AnalyticEtaModel()).search(spec)
+    top, pool = merged.results()
+    assert [c.to_dict() for c in top] == [c.to_dict() for c in serial.top]
+    assert [c.to_dict() for c in pool] == [c.to_dict() for c in serial.pool]
+    assert evaluated == serial.evaluated
+
+
+def test_load_shard_payload_rejects_garbage(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    objective = make_objective(spec.objective,
+                               train_tokens=spec.workload.train_tokens)
+    ok = SerialBackend(AnalyticEtaModel()).run_shard(spec, (0, 2))
+    with pytest.raises((ValueError, KeyError, TypeError)):
+        load_shard_payload("not a dict", objective, 3)
+    with pytest.raises(ValueError, match="kind"):
+        load_shard_payload({"kind": "bogus"}, objective, 3)
+    with pytest.raises(ValueError, match="shard"):
+        load_shard_payload(ok, objective, 3, shard=(1, 2))  # wrong echo
+    broken = dict(ok, top=[[[0], {"nope": 1}]])
+    with pytest.raises((ValueError, KeyError, TypeError)):
+        load_shard_payload(broken, objective, 3, shard=(0, 2))
+
+
+def test_run_shard_validates_shard_and_cap(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    backend = SerialBackend(AnalyticEtaModel())
+    with pytest.raises(ValueError, match="shard"):
+        backend.run_shard(spec, (2, 2))
+    with pytest.raises(ValueError, match="max_candidates"):
+        backend.run_shard(
+            dataclasses.replace(spec, limits=Limits(max_candidates=5)), (0, 2)
+        )

@@ -1,0 +1,295 @@
+"""Fleet execution: /v1/shard worker contract, coordinator work-stealing,
+retry/reassignment under injected worker failure, and byte-identity of the
+fleet report with the serial one for all three pool shapes."""
+import contextlib
+import dataclasses
+import json
+import socket
+
+import pytest
+
+from repro.calibration.fit import AnalyticEtaModel
+from repro.core import (
+    Astra,
+    DeviceSweep,
+    FixedPool,
+    HeteroCaps,
+    Limits,
+    ObjectiveSpec,
+    SearchSpec,
+    Workload,
+)
+from repro.core.backend import FleetBackend, FleetError
+from repro.core.objectives import make_objective
+from repro.core.planner import pool_mode
+from repro.serve.search_service import AuthQuota, SearchService, TokenInfo
+
+from harness_service import CountingAstra, FlakyWorker, http_service, request
+
+
+def _specs(tiny_dense):
+    w = Workload(32, 512)
+    return {
+        "fixed": SearchSpec(
+            arch=tiny_dense, pool=FixedPool("A800", 8), workload=w,
+        ),
+        "hetero": SearchSpec(
+            arch=tiny_dense,
+            pool=HeteroCaps(8, (("A800", 4), ("H100", 4))),
+            workload=w,
+        ),
+        "sweep": SearchSpec(
+            arch=tiny_dense,
+            pool=DeviceSweep(("A800", "H100"), 8),
+            workload=w,
+            objective=ObjectiveSpec.pareto(None),
+        ),
+    }
+
+
+def _worker_service(engine=None) -> SearchService:
+    return SearchService(engine if engine is not None
+                         else Astra(AnalyticEtaModel()))
+
+
+@contextlib.contextmanager
+def _fleet(engines):
+    """Run one worker service per engine; yield their base URLs."""
+    with contextlib.ExitStack() as stack:
+        yield [
+            stack.enter_context(http_service(_worker_service(e)))
+            for e in engines
+        ]
+
+
+def _report_of(backend, spec):
+    """Run a spec through an explicit backend via the Astra facade."""
+    return Astra(AnalyticEtaModel(), backend=backend).search(spec)
+
+
+def _dead_url() -> str:
+    """An address nothing listens on (bound then closed)."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return f"http://127.0.0.1:{port}"
+
+
+# ---------------------------------------------------------------------------
+# the worker contract: POST /v1/shard
+# ---------------------------------------------------------------------------
+
+def test_shard_endpoint_contract(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    svc = _worker_service()
+    with http_service(svc) as base:
+        body = json.dumps(
+            {"spec": spec.canonicalize(), "shard": [0, 2]}
+        ).encode()
+        status, payload = request(f"{base}/v1/shard", body)
+        assert status == 200
+        assert payload["kind"] == "astra.shard_result"
+        assert payload["shard"] == [0, 2]
+        assert payload["evaluated"] > 0
+
+        status, payload = request(f"{base}/v1/shard", b"not json")
+        assert status == 400 and "bad shard request" in payload["error"]
+        status, payload = request(
+            f"{base}/v1/shard", json.dumps({"spec": {}}).encode()
+        )
+        assert status == 400
+        # shard indices out of range are a caller bug, not a 500
+        bad = json.dumps(
+            {"spec": spec.canonicalize(), "shard": [2, 2]}
+        ).encode()
+        status, payload = request(f"{base}/v1/shard", bad)
+        assert status == 400
+    assert svc.stats.shards == 1
+    assert svc.stats.shard_errors == 1  # only the evaluated bad-shard call
+
+
+def test_shard_endpoint_501_without_engine_support(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    svc = SearchService(CountingAstra())  # no run_shard on the engine
+    with http_service(svc) as base:
+        body = json.dumps(
+            {"spec": spec.canonicalize(), "shard": [0, 2]}
+        ).encode()
+        status, payload = request(f"{base}/v1/shard", body)
+    assert status == 501
+    assert "shard" in payload["error"]
+
+
+def test_shard_endpoint_requires_auth_but_not_cold_quota(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    auth = AuthQuota([TokenInfo("tok", "ci", None, 0)])  # zero cold quota
+    svc = _worker_service()
+    with http_service(svc, auth=auth) as base:
+        body = json.dumps(
+            {"spec": spec.canonicalize(), "shard": [0, 2]}
+        ).encode()
+        status, _ = request(f"{base}/v1/shard", body)
+        assert status == 401  # no token
+        # shards never spend the cold quota: admitted despite COLD=0
+        status, payload = request(f"{base}/v1/shard", body, token="tok")
+        assert status == 200 and payload["kind"] == "astra.shard_result"
+
+
+# ---------------------------------------------------------------------------
+# fleet == serial, all three pool shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", ["fixed", "hetero", "sweep"])
+def test_fleet_report_is_byte_identical_to_serial(tiny_dense, shape):
+    spec = _specs(tiny_dense)[shape]
+    serial = Astra(AnalyticEtaModel()).search(spec)
+    with _fleet([None, None]) as urls:
+        fleet = Astra(AnalyticEtaModel()).search(
+            dataclasses.replace(spec, limits=Limits(fleet=tuple(urls)))
+        )
+    assert fleet.normalized_json() == serial.normalized_json()
+    assert fleet.mode == pool_mode(spec.pool)
+    # fleet is an execution detail: one cache key either way
+    assert dataclasses.replace(
+        spec, limits=Limits(fleet=("http://x", "http://y"))
+    ).cache_key() == spec.cache_key()
+
+
+def test_fleet_overshards_and_both_workers_contribute(tiny_dense):
+    spec = _specs(tiny_dense)["sweep"]
+    with _fleet([None, None]) as urls:
+        backend = FleetBackend(urls)
+        report = _report_of(backend, spec)
+    stats = backend.last_run_stats
+    assert stats["shards"] > 2  # oversharded beyond the worker count
+    assert stats["completed"] == stats["shards"]
+    assert sum(stats["assignments"].values()) == stats["shards"]
+    # the queue is shared: with healthy workers both drain some of it
+    assert all(n > 0 for n in stats["assignments"].values())
+    assert report.normalized_json() == \
+        Astra(AnalyticEtaModel()).search(spec).normalized_json()
+
+
+# ---------------------------------------------------------------------------
+# failure injection: death, garbage, timeout -> reassignment, same bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)
+@pytest.mark.parametrize("mode", ["die", "garbage"])
+def test_fleet_reassigns_failed_shards(tiny_dense, mode):
+    spec = _specs(tiny_dense)["hetero"]
+    flaky = FlakyWorker(mode, fail_first=2)
+    with _fleet([flaky, None]) as urls:
+        backend = FleetBackend(urls)
+        report = _report_of(backend, spec)
+    assert flaky.failures_injected == 2
+    stats = backend.last_run_stats
+    assert stats["reassigned"] >= 2
+    assert len(stats["errors"]) >= 2
+    assert stats["completed"] == stats["shards"]
+    assert report.normalized_json() == \
+        Astra(AnalyticEtaModel()).search(spec).normalized_json()
+
+
+def test_fleet_reassigns_timed_out_shards(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    flaky = FlakyWorker("timeout", fail_first=1)
+    try:
+        with _fleet([flaky, None]) as urls:
+            backend = FleetBackend(urls, timeout=0.5)
+            report = _report_of(backend, spec)
+            flaky.release.set()  # unpark the stalled handler before teardown
+        assert flaky.failures_injected == 1
+        assert backend.last_run_stats["reassigned"] >= 1
+        assert report.normalized_json() == \
+            Astra(AnalyticEtaModel()).search(spec).normalized_json()
+    finally:
+        flaky.release.set()
+
+
+def test_fleet_survives_a_fully_dead_worker(tiny_dense):
+    """One worker that was never up: every one of its pulls fails, it is
+    retired, and the live worker steals the whole queue."""
+    spec = _specs(tiny_dense)["fixed"]
+    with _fleet([None]) as urls:
+        backend = FleetBackend([urls[0], _dead_url()], timeout=5.0)
+        report = _report_of(backend, spec)
+    stats = backend.last_run_stats
+    assert stats["completed"] == stats["shards"]
+    assert stats["assignments"][backend.urls[0]] == stats["shards"]
+    assert report.normalized_json() == \
+        Astra(AnalyticEtaModel()).search(spec).normalized_json()
+
+
+def test_fleet_all_workers_dead_raises(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    backend = FleetBackend([_dead_url(), _dead_url()], timeout=1.0)
+    objective = make_objective(spec.objective,
+                               train_tokens=spec.workload.train_tokens)
+    with pytest.raises(FleetError, match="incomplete"):
+        backend.run(spec, objective)
+    assert backend.last_run_stats["completed"] == 0
+    assert backend.last_run_stats["errors"]
+
+
+def test_fleet_rejects_capped_specs(tiny_dense):
+    spec = dataclasses.replace(
+        _specs(tiny_dense)["fixed"], limits=Limits(max_candidates=10)
+    )
+    backend = FleetBackend([_dead_url()])
+    objective = make_objective(spec.objective,
+                               train_tokens=spec.workload.train_tokens)
+    with pytest.raises(ValueError, match="max_candidates"):
+        backend.run(spec, objective)
+    # and the facade never routes a capped spec to the fleet
+    report = Astra(AnalyticEtaModel()).search(
+        dataclasses.replace(
+            spec,
+            limits=Limits(max_candidates=10, fleet=(_dead_url(),)),
+        )
+    )
+    assert report.evaluated == 10
+
+
+# ---------------------------------------------------------------------------
+# coordinator role: fleet searches land in the service store
+# ---------------------------------------------------------------------------
+
+def test_coordinator_caches_fleet_results(tiny_dense):
+    spec = _specs(tiny_dense)["fixed"]
+    worker_svc = _worker_service()
+    with http_service(worker_svc) as url:
+        coordinator = SearchService(
+            Astra(AnalyticEtaModel(), backend=FleetBackend([url]))
+        )
+        r1 = coordinator.search(spec)
+        shards_after_cold = worker_svc.stats.shards
+        assert shards_after_cold > 0  # the fleet actually ran it
+        r2 = coordinator.search(spec)
+        # warm hit: served from the coordinator's store, workers untouched
+        assert worker_svc.stats.shards == shards_after_cold
+    assert coordinator.stats.hits == 1 and coordinator.stats.misses == 1
+    assert r1.normalized_json() == r2.normalized_json()
+    assert r1.normalized_json() == \
+        Astra(AnalyticEtaModel()).search(spec).normalized_json()
+
+
+def test_fleet_worker_plays_both_roles(tiny_dense):
+    """One service can serve /v1/search and /v1/shard at once — the 'one
+    binary, both parts' property."""
+    spec = _specs(tiny_dense)["fixed"]
+    svc = _worker_service()
+    with http_service(svc) as base:
+        status, _ = request(
+            f"{base}/v1/search", spec.to_json().encode()
+        )
+        assert status == 200
+        body = json.dumps(
+            {"spec": spec.canonicalize(), "shard": [1, 3]}
+        ).encode()
+        status, payload = request(f"{base}/v1/shard", body)
+        assert status == 200 and payload["shard"] == [1, 3]
+    assert svc.stats.shards == 1 and svc.stats.misses == 1

@@ -1,0 +1,104 @@
+"""The hardened HTTP client: timeouts, bounded retries (transport faults
+only), and protocol-violation handling — all sleep-free via injection."""
+import json
+import socket
+import threading
+
+import pytest
+
+from repro.core.http_client import TransportError, http_json
+
+
+def _dead_url() -> str:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return f"http://127.0.0.1:{port}"
+
+
+def _one_shot_server(response: bytes) -> str:
+    """Serve exactly one connection with a canned HTTP response."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+
+    def run():
+        conn, _ = srv.accept()
+        conn.recv(65536)
+        conn.sendall(response)
+        conn.close()
+        srv.close()
+
+    threading.Thread(target=run, daemon=True).start()
+    return f"http://127.0.0.1:{srv.getsockname()[1]}"
+
+
+def test_dead_server_fails_fast_with_transport_error():
+    with pytest.raises(TransportError, match="attempt"):
+        http_json(_dead_url(), timeout=1.0, retries=0)
+
+
+def test_retries_with_exponential_backoff_then_raises():
+    slept = []
+    with pytest.raises(TransportError, match="3 attempt"):
+        http_json(
+            _dead_url(), timeout=1.0, retries=2, backoff=0.25,
+            sleep=slept.append,
+        )
+    assert slept == [0.25, 0.5]  # backoff * 2**(k-1), never actually slept
+
+
+def test_http_error_statuses_are_returned_not_retried():
+    body = json.dumps({"error": "nope"}).encode()
+    url = _one_shot_server(
+        b"HTTP/1.1 404 Not Found\r\nContent-Type: application/json\r\n"
+        b"Content-Length: %d\r\nConnection: close\r\n\r\n%s"
+        % (len(body), body)
+    )
+    slept = []
+    status, payload = http_json(url, timeout=5.0, retries=3, sleep=slept.append)
+    assert status == 404
+    assert payload == {"error": "nope"}
+    assert slept == []  # a live server's answer is final: no retry
+
+
+def test_non_json_success_body_is_a_protocol_error_not_a_retry():
+    url = _one_shot_server(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/html\r\n"
+        b"Content-Length: 9\r\nConnection: close\r\n\r\n<html></h"
+    )
+    slept = []
+    with pytest.raises(TransportError, match="non-JSON"):
+        http_json(url, timeout=5.0, retries=3, sleep=slept.append)
+    assert slept == []
+
+
+def test_post_and_auth_header_reach_the_server():
+    captured = {}
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+
+    def run():
+        conn, _ = srv.accept()
+        captured["raw"] = conn.recv(65536)
+        body = b'{"ok": true}'
+        conn.sendall(
+            b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n"
+            b"Content-Length: %d\r\nConnection: close\r\n\r\n%s"
+            % (len(body), body)
+        )
+        conn.close()
+        srv.close()
+
+    threading.Thread(target=run, daemon=True).start()
+    url = f"http://127.0.0.1:{srv.getsockname()[1]}"
+    status, payload = http_json(
+        url, b'{"q": 1}', token="sekrit", timeout=5.0, retries=0
+    )
+    assert status == 200 and payload == {"ok": True}
+    raw = captured["raw"]
+    assert raw.startswith(b"POST ")
+    assert b"Authorization: Bearer sekrit" in raw
+    assert raw.endswith(b'{"q": 1}')
