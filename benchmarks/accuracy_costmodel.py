@@ -1,30 +1,67 @@
-"""Cost-model accuracy (the paper's >95% claim).
+"""Cost-model accuracy (the paper's >95% claim) as a pass/fail harness.
 
 Two levels: (a) per-operator latency accuracy of the GBT eta model on a
 held-out op sample; (b) end-to-end strategy step-time accuracy: simulate
 200 random valid strategies with the GBT model and with the ground truth,
 report mean(1 - |T_gbt - T_truth| / T_truth).
+
+Honesty contract: the paper's bar is 95% and ``meets_95pct`` means exactly
+that — this harness reports the measured numbers against the real bar (an
+earlier revision asserted ``> 0.93`` under the ``meets_95pct`` name, which
+hid the per-op compute number sitting below the claim). Regression gating
+is a *separate*, explicitly-labeled floor per metric (``REGRESSION_FLOORS``)
+set just under today's measured values: the bar is the claim, the floor is
+the tripwire. ``main()`` writes ``artifacts/accuracy_report.json`` (per-op +
+end-to-end + ranking rows plus the pass/fail verdict) and exits non-zero
+when any metric falls through its floor — the CI regression step.
+
+    PYTHONPATH=src python -m benchmarks.accuracy_costmodel \\
+        [--json-out artifacts/accuracy_report.json]
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import truth_simulator
 from repro.calibration.fit import train_eta_model
 from repro.configs import PAPER_MODELS
-from repro.core import Astra, CostSimulator, GpuConfig
+from repro.core import CostSimulator, GpuConfig
 from repro.core.search import generate_strategies
+
+PAPER_BAR = 0.95  # the claim the paper makes; never lowered to fit the data
+
+# regression tripwires: just under today's measured values, so a change that
+# degrades the cost model fails loudly while known shortfalls vs the paper
+# bar (per-op compute ~0.94) stay visible instead of being rebranded as 95%
+REGRESSION_FLOORS = {
+    "compute_latency_accuracy": 0.93,
+    "comm_latency_accuracy": 0.93,
+    "e2e_mean_accuracy": 0.95,
+    "ranking_regret_max": 0.02,
+}
 
 
 def run(eta) -> list[dict]:
     rows = []
     # (a) per-op accuracy — retrain on a fresh seed so the report is honest
     _, rep = train_eta_model(n_samples=3000, n_estimators=150, seed=7)
+    comp_acc = rep["compute_latency_accuracy"]
+    comm_acc = rep["comm_latency_accuracy"]
     rows.append({
         "bench": "accuracy-op",
-        "compute_latency_accuracy": round(rep["compute_latency_accuracy"], 4),
-        "comm_latency_accuracy": round(rep["comm_latency_accuracy"], 4),
-        "meets_95pct": bool(rep["compute_latency_accuracy"] > 0.93),
+        "compute_latency_accuracy": round(comp_acc, 4),
+        "comm_latency_accuracy": round(comm_acc, 4),
+        "bar": PAPER_BAR,
+        "meets_95pct": bool(comp_acc >= PAPER_BAR and comm_acc >= PAPER_BAR),
+        "regression_floor": REGRESSION_FLOORS["compute_latency_accuracy"],
+        "meets_regression_floor": bool(
+            comp_acc >= REGRESSION_FLOORS["compute_latency_accuracy"]
+            and comm_acc >= REGRESSION_FLOORS["comm_latency_accuracy"]
+        ),
     })
 
     # (b) end-to-end strategy accuracy
@@ -49,7 +86,12 @@ def run(eta) -> list[dict]:
         "n_strategies": len(sample),
         "mean_accuracy": round(float(accs.mean()), 4),
         "p10_accuracy": round(float(np.percentile(accs, 10)), 4),
-        "meets_95pct": bool(accs.mean() > 0.95),
+        "bar": PAPER_BAR,
+        "meets_95pct": bool(accs.mean() >= PAPER_BAR),
+        "regression_floor": REGRESSION_FLOORS["e2e_mean_accuracy"],
+        "meets_regression_floor": bool(
+            accs.mean() >= REGRESSION_FLOORS["e2e_mean_accuracy"]
+        ),
     })
     # (c) ranking fidelity: does the GBT model pick a near-optimal strategy?
     best_truth = max(
@@ -62,8 +104,63 @@ def run(eta) -> list[dict]:
         .throughput_tokens,
     )
     picked = tru_sim.simulate(arch, best_by_gbt, global_batch=512, seq=4096)
+    regret = round(1.0 - picked.throughput_tokens / best_truth, 4)
     rows.append({
         "bench": "accuracy-ranking",
-        "regret": round(1.0 - picked.throughput_tokens / best_truth, 4),
+        "regret": regret,
+        "regression_floor": REGRESSION_FLOORS["ranking_regret_max"],
+        "meets_regression_floor": bool(
+            regret <= REGRESSION_FLOORS["ranking_regret_max"]
+        ),
     })
     return rows
+
+
+def evaluate(rows: list[dict]) -> tuple[bool, list[str]]:
+    """Apply the regression floors; returns (passed, failure descriptions)."""
+    failures = []
+    for r in rows:
+        if not r.get("meets_regression_floor", True):
+            failures.append(
+                f"{r['bench']}: fell through its regression floor: "
+                + json.dumps(r)
+            )
+    return not failures, failures
+
+
+def write_report(rows: list[dict], path: str) -> dict:
+    passed, failures = evaluate(rows)
+    report = {
+        "bar": PAPER_BAR,
+        "regression_floors": REGRESSION_FLOORS,
+        "rows": rows,
+        "passed": passed,
+        "failures": failures,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def main(argv=None) -> int:
+    from benchmarks.common import eta_model
+
+    ap = argparse.ArgumentParser(prog="benchmarks.accuracy_costmodel")
+    ap.add_argument("--json-out", default="artifacts/accuracy_report.json")
+    args = ap.parse_args(argv)
+    rows = run(eta_model())
+    report = write_report(rows, args.json_out)
+    for r in rows:
+        print(json.dumps(r))
+    if not report["passed"]:
+        for f in report["failures"]:
+            print("FAIL " + f)
+        return 1
+    print(f"PASS (report: {args.json_out}; paper bar {PAPER_BAR:g}, "
+          f"honest meets_95pct per row above)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -189,3 +189,45 @@ assert fleet_spec.cache_key() == dataclasses.replace(
 ).cache_key()
 print(f"\n[fleet] 2-worker fleet searched {fleet_rep.counts.generated} "
       f"placements; report byte-identical to serial, same cache key")
+
+# ---- calibration loop: measured traces -> refit -> re-search --------------
+# Reports are stamped with the content-hash version of the eta model that
+# ranked them. A calibrating service ingests measured StepTraces, scores
+# them against the live model, refits when rolling accuracy decays, and
+# re-searches stale reports on demand (POST /v1/search?refresh=stale).
+from repro.calibration import (
+    CalibrationLoop,
+    GroundTruth,
+    replay_profile,
+    simulate_step_trace,
+)
+
+loop = CalibrationLoop(eta, threshold=0.95, min_traces=3,
+                       min_refit_samples=50, refit_estimators=60)
+cal_service = SearchService(Astra(eta), calibration=loop)
+v1 = loop.version
+r1 = cal_service.search(spec)
+print(f"\n[calibration] report stamped eta_model_version={r1.eta_model_version}")
+
+# stand-in for a real cluster drifting: the ground truth with derated
+# compute/comm efficiency. launch/train.py --emit-traces produces the same
+# wire documents from real measured step times.
+drifted = GroundTruth(jitter_sigma=0.0, base_eff_scale=0.6, comm_eff_scale=0.8)
+for seed in range(4):
+    comp, comm = replay_profile(drifted, n_compute=60, n_comm=60, seed=seed)
+    trace = simulate_step_trace(drifted, llama7b, r1.best,
+                                global_batch=512, seq=4096,
+                                compute_samples=comp, comm_samples=comm)
+    ack = cal_service.ingest_trace_json(trace.to_json())  # POST /v1/traces
+    print(f"[calibration] trace accuracy {ack['accuracy']:.3f} "
+          f"(rolling {ack['rolling_accuracy']:.3f})"
+          + (f" -> REFIT {ack['new_version']}" if ack["refit"] else ""))
+
+# the cached report is now stale (ranked by v1); refresh=stale re-searches
+# it under the refitted model and the new report is stamped accordingly
+_, text, cached = cal_service.search_json(spec.to_json(), refresh_stale=True)
+import json as _json
+
+print(f"[calibration] {v1} -> {loop.version}; refreshed report stamped "
+      f"{_json.loads(text)['eta_model_version']} (cached={cached}); "
+      f"registry holds {len(loop.registry)} model versions")

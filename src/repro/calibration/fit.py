@@ -15,6 +15,7 @@ models are calibrated.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 from typing import Optional, Sequence
@@ -83,6 +84,11 @@ class AnalyticEtaModel:
     loop); the scalar ``compute_time`` / ``comm_time`` remain the reference
     definitions and the two agree exactly (tests/test_eta_vectorized.py).
     """
+
+    def version_string(self) -> str:
+        """Registry identity. The analytic prior has no learned state, so a
+        fixed tag (bump the suffix if the closed form ever changes)."""
+        return "analytic-1"
 
     def compute_time(self, op: ComputeOp) -> float:
         dev = DEVICES[op.device]
@@ -200,24 +206,41 @@ class EtaModel:
             out[i] = np.clip(wire / (bw * max(t[i], 1e-12)), 1e-9, 1.0)
         return out
 
+    # -- identity ---------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"comp": self.comp_model.to_dict(), "comm": self.comm_model.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EtaModel":
+        return cls(
+            comp_model=GradientBoostedTrees.from_dict(d["comp"]),
+            comm_model=GradientBoostedTrees.from_dict(d["comm"]),
+        )
+
+    def version_string(self) -> str:
+        """Content hash of the learned trees: identical models (however they
+        were obtained) share a version; any refit that changes a single split
+        gets a new one. Cached — tree state never mutates after fit."""
+        cached = getattr(self, "_version", None)
+        if cached is None:
+            canon = json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+            cached = "eta-" + hashlib.sha256(canon.encode("utf-8")).hexdigest()[:16]
+            self._version = cached
+        return cached
+
     # -- persistence ------------------------------------------------------
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(
-                {"comp": self.comp_model.to_dict(), "comm": self.comm_model.to_dict()}, f
-            )
+            json.dump(self.to_dict(), f)
         os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "EtaModel":
         with open(path) as f:
             d = json.load(f)
-        return cls(
-            comp_model=GradientBoostedTrees.from_dict(d["comp"]),
-            comm_model=GradientBoostedTrees.from_dict(d["comm"]),
-        )
+        return cls.from_dict(d)
 
 
 # ---------------------------------------------------------------------------
@@ -289,21 +312,55 @@ def sample_comm_ops(
 # training
 # ---------------------------------------------------------------------------
 
+_LEARNING_RATE = 0.08  # shared by train and refit so warm starts compose
+
+
+def _residual_targets(
+    prior: AnalyticEtaModel,
+    samples: Sequence[tuple],
+    *,
+    comm: bool,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(features, log-residual targets) for measured (op, seconds) pairs."""
+    ops = [op for op, _ in samples]
+    t_meas = np.array([t for _, t in samples], dtype=np.float64)
+    if comm:
+        base = np.array([prior.comm_time(op) for op in ops])
+        X = featurize_comm(ops)
+        y = np.log(np.maximum(t_meas, 1e-12) / np.maximum(base, 1e-12))
+    else:
+        base = np.array([prior.compute_time(op) for op in ops])
+        X = featurize_compute(ops)
+        y = np.log(np.maximum(t_meas, 1e-12) / base)
+    return X, y
+
+
 def train_eta_model(
     devices: Optional[Sequence[str]] = None,
     n_samples: int = 6000,
     seed: int = 0,
     jitter_sigma: float = 0.02,
     n_estimators: int = 300,
+    *,
+    truth: Optional[GroundTruth] = None,
+    extra_compute: Sequence[tuple] = (),
+    extra_comm: Sequence[tuple] = (),
+    warm_start: Optional[EtaModel] = None,
 ) -> tuple[EtaModel, dict]:
     """Train GBTs on simulated measurements; returns (model, accuracy report).
 
     Accuracy is the paper's metric: mean(1 - |T_pred - T_meas| / T_meas) on a
     held-out set, reported separately for compute and comm operators.
+
+    ``truth`` injects a custom (e.g. drifted) simulator; ``extra_compute`` /
+    ``extra_comm`` are measured (op, seconds) pairs appended to the training
+    split — the calibration loop feeds ingested trace samples through here.
+    ``warm_start`` continues boosting from an existing model's trees instead
+    of restarting from the analytic prior alone.
     """
     devices = list(devices or DEVICES)
     rng = np.random.default_rng(seed)
-    truth = GroundTruth(jitter_sigma=jitter_sigma, seed=seed)
+    truth = truth if truth is not None else GroundTruth(jitter_sigma=jitter_sigma, seed=seed)
     prior = AnalyticEtaModel()
 
     comp_ops = sample_compute_ops(rng, n_samples, devices)
@@ -320,12 +377,23 @@ def train_eta_model(
     ym = np.log(np.maximum(t_comm, 1e-12) / np.maximum(base_comm, 1e-12))
 
     n_tr = int(0.8 * n_samples)
+    Xc_tr, yc_tr = Xc[:n_tr], yc[:n_tr]
+    Xm_tr, ym_tr = Xm[:n_tr], ym[:n_tr]
+    if extra_compute:
+        Xx, yx = _residual_targets(prior, extra_compute, comm=False)
+        Xc_tr, yc_tr = np.vstack([Xc_tr, Xx]), np.concatenate([yc_tr, yx])
+    if extra_comm:
+        Xx, yx = _residual_targets(prior, extra_comm, comm=True)
+        Xm_tr, ym_tr = np.vstack([Xm_tr, Xx]), np.concatenate([ym_tr, yx])
+
     comp_model = GradientBoostedTrees(
-        n_estimators=n_estimators, learning_rate=0.08, max_depth=7, seed=seed
-    ).fit(Xc[:n_tr], yc[:n_tr], eval_set=(Xc[n_tr:], yc[n_tr:]), early_stopping_rounds=30)
+        n_estimators=n_estimators, learning_rate=_LEARNING_RATE, max_depth=7, seed=seed
+    ).fit(Xc_tr, yc_tr, eval_set=(Xc[n_tr:], yc[n_tr:]), early_stopping_rounds=30,
+          init_model=warm_start.comp_model if warm_start is not None else None)
     comm_model = GradientBoostedTrees(
-        n_estimators=n_estimators, learning_rate=0.08, max_depth=6, seed=seed
-    ).fit(Xm[:n_tr], ym[:n_tr], eval_set=(Xm[n_tr:], ym[n_tr:]), early_stopping_rounds=30)
+        n_estimators=n_estimators, learning_rate=_LEARNING_RATE, max_depth=6, seed=seed
+    ).fit(Xm_tr, ym_tr, eval_set=(Xm[n_tr:], ym[n_tr:]), early_stopping_rounds=30,
+          init_model=warm_start.comm_model if warm_start is not None else None)
 
     model = EtaModel(comp_model=comp_model, comm_model=comm_model, prior=prior)
 
@@ -339,7 +407,80 @@ def train_eta_model(
         "comm_latency_accuracy": comm_acc,
         "n_train": n_tr,
         "n_test": n_samples - n_tr,
+        "eta_model_version": model.version_string(),
     }
+    return model, report
+
+
+def refit_eta_model(
+    compute_samples: Sequence[tuple],
+    comm_samples: Sequence[tuple],
+    *,
+    base: Optional[EtaModel] = None,
+    seed: int = 0,
+    n_estimators: int = 120,
+    holdout_frac: float = 0.2,
+) -> tuple[EtaModel, dict]:
+    """Refit from measured (op, seconds) samples alone — the online path.
+
+    Unlike :func:`train_eta_model` this never touches the simulator: the
+    inputs are whatever the calibration loop ingested from traces. With
+    ``base`` set, boosting warm-starts from the stale model's trees and the
+    new trees learn only the drift residual, which is far cheaper than a
+    from-scratch fit and deterministic under a fixed seed (same samples +
+    same seed => identical trees => identical version hash).
+    """
+    if not compute_samples and not comm_samples:
+        raise ValueError("refit needs at least one measured sample")
+    prior = base.prior if base is not None else AnalyticEtaModel()
+    rng = np.random.default_rng(seed)
+    report: dict = {"n_compute": len(compute_samples), "n_comm": len(comm_samples)}
+
+    def _fit(samples, old_model, *, comm, max_depth):
+        if not samples:
+            if old_model is None:
+                raise ValueError(
+                    "no %s samples and no base model to keep" % ("comm" if comm else "compute")
+                )
+            return old_model, None
+        X, y = _residual_targets(prior, samples, comm=comm)
+        order = rng.permutation(len(y))
+        X, y = X[order], y[order]
+        n_tr = max(1, int((1.0 - holdout_frac) * len(y)))
+        eval_set = (X[n_tr:], y[n_tr:]) if n_tr < len(y) else None
+        model = GradientBoostedTrees(
+            n_estimators=n_estimators, learning_rate=_LEARNING_RATE,
+            max_depth=max_depth, seed=seed,
+        ).fit(
+            X[:n_tr], y[:n_tr], eval_set=eval_set,
+            early_stopping_rounds=20 if eval_set is not None else None,
+            init_model=old_model,
+        )
+        return model, (X[n_tr:], y[n_tr:])
+
+    comp_model, comp_hold = _fit(
+        compute_samples, base.comp_model if base is not None else None,
+        comm=False, max_depth=7,
+    )
+    comm_model, comm_hold = _fit(
+        comm_samples, base.comm_model if base is not None else None,
+        comm=True, max_depth=6,
+    )
+    model = EtaModel(comp_model=comp_model, comm_model=comm_model, prior=prior)
+
+    # holdout accuracy in time space (same metric train_eta_model reports)
+    def _acc(hold, predict):
+        if hold is None or not len(hold[1]):
+            return None
+        X_h, y_h = hold
+        pred = predict(X_h)
+        # both pred and target are log-residuals; compare in time ratio space
+        ratio = np.exp(pred - y_h)
+        return float(np.mean(1.0 - np.abs(ratio - 1.0)))
+
+    report["compute_latency_accuracy"] = _acc(comp_hold, comp_model.predict)
+    report["comm_latency_accuracy"] = _acc(comm_hold, comm_model.predict)
+    report["eta_model_version"] = model.version_string()
     return model, report
 
 

@@ -15,6 +15,14 @@ Comm:     T = wire_bytes / (bw * eta_true) + latency(group)
   eta_true = sustained_frac * msg/(msg + half_saturation)
 
 Jitter: multiplicative lognormal, sigma configurable (0 => deterministic).
+
+Drift knobs: ``base_eff_scale`` / ``comm_eff_scale`` multiply the hidden
+sustained efficiencies, modeling the cluster changing underneath a fitted
+eta model (driver regression, thermal derating, congested fabric). The
+defaults (1.0) are exact no-ops, so an undrifted ``GroundTruth`` is
+bit-identical to the pre-drift-knob one. The calibration feedback loop
+(:mod:`repro.calibration.loop`) uses a drifted truth as the stand-in for
+"the measurements stopped matching the model".
 """
 from __future__ import annotations
 
@@ -49,8 +57,13 @@ class GroundTruth:
 
     jitter_sigma: float = 0.02
     seed: int = 0
+    # drift knobs (1.0 = no drift): scale the hidden sustained efficiencies
+    base_eff_scale: float = 1.0  # compute: multiplies every _BASE_EFF entry
+    comm_eff_scale: float = 1.0  # comm: multiplies _COMM_SUSTAINED
 
     def __post_init__(self):
+        if self.base_eff_scale <= 0 or self.comm_eff_scale <= 0:
+            raise ValueError("drift scales must be positive")
         self._rng = np.random.default_rng(self.seed)
 
     def _jitter(self) -> float:
@@ -62,7 +75,7 @@ class GroundTruth:
     def compute_eta(self, op: ComputeOp) -> float:
         """The hidden true efficiency (no jitter) — used only for analysis."""
         dev = DEVICES[op.device]
-        base = _BASE_EFF[dev.kind][op.kind]
+        base = _BASE_EFF[dev.kind][op.kind] * self.base_eff_scale
         tile = _TILE[dev.kind]
         if op.kind in ("matmul", "flash_attn", "attn"):
             quant = (op.m * op.n * op.k) / (
@@ -84,7 +97,8 @@ class GroundTruth:
     # -- communication ----------------------------------------------------
     def comm_eta(self, op: CommOp) -> float:
         msg = op.payload_bytes
-        return _COMM_SUSTAINED * msg / (msg + _COMM_HALF_SAT[op.intra_node])
+        sustained = _COMM_SUSTAINED * self.comm_eff_scale
+        return sustained * msg / (msg + _COMM_HALF_SAT[op.intra_node])
 
     def comm_time(self, op: CommOp) -> float:
         dev = DEVICES[op.device]

@@ -85,6 +85,23 @@ from repro.core.spec import SearchSpec
 _REPORT_KIND = "astra.search_report"
 
 
+def _eta_version(eta_model) -> Optional[str]:
+    """The eta model's content-hash version, if it declares one.
+
+    Duck-typed (``version_string()``) so this module never imports
+    :mod:`repro.calibration` — the dependency points the other way. Engines
+    without an identity (raw truth simulators, test doubles) stamp nothing.
+    """
+    fn = getattr(eta_model, "version_string", None)
+    if fn is None:
+        return None
+    try:
+        v = fn()
+    except Exception:
+        return None
+    return v if isinstance(v, str) else None
+
+
 @dataclasses.dataclass
 class SearchReport:
     mode: str
@@ -96,6 +113,9 @@ class SearchReport:
     simulate_seconds: float
     pool: list[CostedStrategy] = dataclasses.field(default_factory=list)
     evaluated: int = 0  # candidates streamed through the evaluator
+    # content-hash version of the eta model that ranked this report (see
+    # repro.calibration.registry); None for engines that don't declare one
+    eta_model_version: Optional[str] = None
 
     @property
     def e2e_seconds(self) -> float:
@@ -104,7 +124,7 @@ class SearchReport:
     # -- wire format -------------------------------------------------------
     def to_dict(self) -> dict:
         """Versioned wire envelope; exact (``from_dict(to_dict(r)) == r``)."""
-        return {
+        d = {
             "version": wire.WIRE_VERSION,
             "kind": _REPORT_KIND,
             "mode": self.mode,
@@ -118,6 +138,10 @@ class SearchReport:
             "pool": [c.to_dict() for c in self.pool],
             "evaluated": self.evaluated,
         }
+        # sparse: pre-calibration wire bytes are unchanged when unstamped
+        if self.eta_model_version is not None:
+            d["eta_model_version"] = self.eta_model_version
+        return d
 
     def to_json(self, *, indent: Optional[int] = None) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -138,6 +162,7 @@ class SearchReport:
             simulate_seconds=wire.load_float(d["simulate_seconds"]),
             pool=[CostedStrategy.from_dict(c) for c in d.get("pool", [])],
             evaluated=int(d.get("evaluated", 0)),
+            eta_model_version=d.get("eta_model_version"),
         )
 
     @classmethod
@@ -180,6 +205,7 @@ class Astra:
         backend: Optional[ExecutionBackend] = None,
     ):
         self.eta = eta_model
+        self.eta_version = _eta_version(eta_model)
         self.rules = rules
         self.use_batched = use_batched
         self.chunk_size = chunk_size
@@ -268,6 +294,7 @@ class Astra:
             simulate_seconds=max(total - search_seconds, 0.0),
             pool=pool,
             evaluated=evaluated,
+            eta_model_version=self.eta_version,
         )
 
     # -- fleet worker half -------------------------------------------------

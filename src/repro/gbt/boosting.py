@@ -44,20 +44,45 @@ class GradientBoostedTrees:
         *,
         eval_set: Optional[tuple[np.ndarray, np.ndarray]] = None,
         early_stopping_rounds: Optional[int] = None,
+        init_model: Optional["GradientBoostedTrees"] = None,
     ) -> "GradientBoostedTrees":
+        """Fit ``n_estimators`` additional trees on the squared-loss residual.
+
+        ``init_model`` warm-starts boosting: its trees are copied in and the
+        new trees correct *its* predictions on (X, y) — the online-refit
+        path of the calibration loop, where a drifted cluster supplies new
+        measured samples and the existing model is the starting margin.
+        The shrinkage applied at predict time is uniform, so the init
+        model's learning rate must match this one's.
+        """
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
         rng = np.random.default_rng(self.seed)
-        self.base_ = float(y.mean())
-        self.trees_ = []
-        pred = np.full(y.shape, self.base_)
+        if init_model is not None:
+            if init_model.learning_rate != self.learning_rate:
+                raise ValueError(
+                    "warm start requires matching learning rates "
+                    f"({init_model.learning_rate} != {self.learning_rate})"
+                )
+            self.base_ = init_model.base_
+            self.trees_ = list(init_model.trees_)
+            pred = init_model.predict(X)
+        else:
+            self.base_ = float(y.mean())
+            self.trees_ = []
+            pred = np.full(y.shape, self.base_)
+        n_warm = len(self.trees_)
         bin_edges = [quantile_bin_edges(X[:, j], self.max_bins) for j in range(X.shape[1])]
 
         best_eval = np.inf
         rounds_since_best = 0
         eval_pred = None
         if eval_set is not None:
-            eval_pred = np.full(eval_set[1].shape, self.base_)
+            eval_pred = (
+                init_model.predict(np.asarray(eval_set[0], dtype=np.float64))
+                if init_model is not None
+                else np.full(eval_set[1].shape, self.base_)
+            )
 
         for _ in range(self.n_estimators):
             grad = pred - y  # d/dpred 0.5*(pred-y)^2

@@ -22,6 +22,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.calibration.fit import AnalyticEtaModel, load_or_train
+from repro.calibration.traces import StepTrace, append_trace
+from repro.core.params import ParallelStrategy
 from repro.checkpoint import CheckpointManager
 from repro.configs import PAPER_MODELS, get_arch, get_reduced
 from repro.core import Astra, FixedPool, SearchSpec, Workload
@@ -72,6 +74,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--emit-traces", default=None, metavar="PATH",
+                    help="append one measured StepTrace (JSONL, wire format) "
+                         "per run — feed it to a calibration-enabled search "
+                         "service via 'python -m repro.serve.search_service "
+                         "traces' or CalibrationLoop.ingest")
     args = ap.parse_args(argv)
 
     arch = get_reduced(args.arch) if args.reduced and args.arch not in PAPER_MODELS \
@@ -84,8 +91,9 @@ def main(argv=None) -> dict:
     plan = make_plan(mesh, fsdp=True)
 
     remat, micro = args.remat, args.microbatches
+    searched = None  # the auto-strategy winner, reused for trace attribution
     if args.auto_strategy:
-        s = pick_strategy(arch, n_dev, args.batch, args.seq)
+        s = searched = pick_strategy(arch, n_dev, args.batch, args.seq)
         if s is not None:
             remat = s.recompute_granularity if s.recompute_granularity != "selective" else "selective"
             # num_microbatches is already per-DP-rank (GB / (dp * mbs)); the
@@ -126,9 +134,11 @@ def main(argv=None) -> dict:
 
     jitted = jax.jit(train_step, donate_argnums=(0, 1))
     losses = []
+    step_times: list[float] = []
     t0 = time.time()
     with mesh:
         for step in range(start_step, args.steps):
+            t_step = time.perf_counter()
             batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
             if arch.family == "encdec":
                 batch["enc_features"] = jax.random.normal(
@@ -139,7 +149,8 @@ def main(argv=None) -> dict:
                     jax.random.PRNGKey(step), (args.batch, arch.frontend_seq, arch.hidden)
                 ).astype(cfg.dtype)
             params, opt, metrics = jitted(params, opt, batch)
-            loss = float(metrics["loss"])
+            loss = float(metrics["loss"])  # blocks on the device computation
+            step_times.append(time.perf_counter() - t_step)
             losses.append(loss)
             if step % args.log_every == 0 or step == args.steps - 1:
                 print(f"step {step:5d} loss {loss:.4f} "
@@ -150,6 +161,22 @@ def main(argv=None) -> dict:
                           metadata={"data_step": pipe.step, "arch": arch.name})
     if ckpt:
         ckpt.wait()
+    if args.emit_traces and step_times:
+        # attribute the measurement to the searched strategy when there is
+        # one; otherwise describe the mesh this run actually used (pure
+        # data-parallel over whatever devices exist)
+        strategy = searched if searched is not None else ParallelStrategy(
+            device="tpu-v5e", num_devices=max(n_dev, 1),
+            micro_batch_size=max(args.batch // (max(n_dev, 1) * micro), 1),
+        )
+        trace = StepTrace(
+            arch=arch, strategy=strategy,
+            global_batch=args.batch, seq=args.seq,
+            step_times=tuple(step_times), source="train",
+        )
+        append_trace(args.emit_traces, trace)
+        print(f"[trace] appended {len(step_times)}-step trace "
+              f"(median {trace.measured_step_time:.4f}s) to {args.emit_traces}")
     result = {
         "first_loss": losses[0], "last_loss": losses[-1],
         "entropy_floor": corpus.entropy_rate(), "steps": len(losses),

@@ -21,9 +21,24 @@ that
 
       POST /v1/search            body = SearchSpec JSON -> report envelope
       POST /v1/search?async=1    -> 202 {key, status}; poll the result
+      POST /v1/search?refresh=stale  -> a warm hit ranked by an outdated
+                                        eta model re-searches under the
+                                        current one instead of being served
       POST /v1/shard             body = {spec, shard: [i, n]} -> shard payload
+      POST /v1/traces            body = StepTrace JSON -> calibration ack
       GET  /v1/results/<key>     -> 200 report | 202 pending | 404 unknown
       GET  /v1/stats             -> cache/store counters + per-token usage
+
+``POST /v1/traces`` is the calibration feedback inlet (see
+:mod:`repro.calibration.loop`): a service built with a
+:class:`~repro.calibration.loop.CalibrationLoop` scores every ingested
+measured :class:`~repro.calibration.traces.StepTrace` against its live eta
+model, and when the rolling accuracy decays below the paper's 95% bar the
+loop refits, registers the new model version, and the service swaps its
+engine — subsequent searches are ranked (and stamped) by the refit model.
+Cached reports stamped by an older version are *stale*: they are still
+served (and counted in ``stale_hits``) unless the caller asks for
+``?refresh=stale``, which forces a re-search under the current model.
 
 ``POST /v1/shard`` is the *worker role* of a fleet search: the body names
 one ``(i, n)`` shard of a spec, the response is the mergeable collector
@@ -46,6 +61,8 @@ A small CLI rides along::
         [--fleet http://worker1:8123,http://worker2:8123]
     python -m repro.serve.search_service search --url http://host:8123 \\
         --spec spec.json [--token TOKEN] [--async-poll]
+    python -m repro.serve.search_service traces --url http://host:8123 \\
+        --traces steps.jsonl [--token TOKEN]
     python -m repro.serve.search_service stats --url http://host:8123
 """
 from __future__ import annotations
@@ -89,6 +106,11 @@ class ServiceStats:
     peak_searching: int = 0  # high-water mark of concurrent cold searches
     shards: int = 0  # fleet worker role: /v1/shard requests served
     shard_errors: int = 0  # /v1/shard requests that failed
+    traces: int = 0  # calibration traces ingested via /v1/traces
+    trace_errors: int = 0  # trace ingestions that failed
+    refits: int = 0  # engine swaps after a calibration refit
+    stale_hits: int = 0  # cache hits stamped by an outdated eta model
+    stale_refreshes: int = 0  # stale hits re-searched via refresh=stale
 
     @property
     def requests(self) -> int:
@@ -111,6 +133,11 @@ class ServiceStats:
             "peak_searching": self.peak_searching,
             "shards": self.shards,
             "shard_errors": self.shard_errors,
+            "traces": self.traces,
+            "trace_errors": self.trace_errors,
+            "refits": self.refits,
+            "stale_hits": self.stale_hits,
+            "stale_refreshes": self.stale_refreshes,
         }
 
 
@@ -169,8 +196,15 @@ class SearchService:
         store: Optional[ReportStore] = None,
         search_concurrency: int = 4,
         workers: Optional[int] = None,
+        calibration=None,
+        engine_factory: Optional[Callable] = None,
     ):
         self.astra = astra
+        # calibration feedback: a repro.calibration.loop.CalibrationLoop
+        # scoring ingested traces; engine_factory(model) rebuilds the search
+        # engine after a refit (default: same knobs as the current engine)
+        self.calibration = calibration
+        self._engine_factory = engine_factory
         if store is not None:
             # time-based behavior lives entirely in the store; a clock (or
             # TTL/bound) passed alongside one would be silently dead state
@@ -218,6 +252,7 @@ class SearchService:
         spec_json: str,
         *,
         on_cold: Optional[Callable[[], None]] = None,
+        refresh_stale: bool = False,
     ) -> tuple[str, str, bool]:
         """Run (or replay) the search described by ``spec_json``.
 
@@ -226,10 +261,15 @@ class SearchService:
         rather than a fresh run owned by this caller. ``on_cold`` (the
         quota hook) is invoked only when this caller would start a fresh
         search; raising from it aborts before any work runs.
+        ``refresh_stale`` turns a warm hit whose ``eta_model_version`` no
+        longer matches the calibration loop's live model into a re-search
+        (charged as cold); without a calibration loop it is a no-op.
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
-        hit, flight, leader = self._join_or_lead(key, on_cold=on_cold)
+        hit, flight, leader = self._join_or_lead(
+            key, on_cold=on_cold, refresh_stale=refresh_stale
+        )
         if hit is not None:
             return key, hit, True
         if leader:
@@ -250,6 +290,7 @@ class SearchService:
         spec_json: str,
         *,
         on_cold: Optional[Callable[[], None]] = None,
+        refresh_stale: bool = False,
     ) -> tuple[str, str, Optional[str]]:
         """Async variant: start (or join) the search, return immediately.
 
@@ -260,7 +301,9 @@ class SearchService:
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
-        hit, flight, leader = self._join_or_lead(key, on_cold=on_cold)
+        hit, flight, leader = self._join_or_lead(
+            key, on_cold=on_cold, refresh_stale=refresh_stale
+        )
         if hit is not None:
             return key, "ready", hit
         if leader:
@@ -316,6 +359,61 @@ class SearchService:
             self.stats.shards += 1
         return payload
 
+    def ingest_trace_json(self, body_json: str) -> dict:
+        """Calibration inlet: one measured ``StepTrace`` in, one ack out
+        (``POST /v1/traces``).
+
+        The trace is scored by the :class:`~repro.calibration.loop.
+        CalibrationLoop` against the live eta model; if that trips a refit,
+        this service's engine is rebuilt around the refit model (via the
+        ``engine_factory`` passed at construction, defaulting to an engine
+        with the current one's knobs), so every subsequent cold search is
+        ranked and stamped by the new version. Raises
+        ``NotImplementedError`` when the service has no calibration loop
+        (HTTP 501) and ``ValueError``/``KeyError``/``TypeError`` on
+        malformed payloads (400); anything else counts ``trace_errors``.
+        """
+        if self.calibration is None:
+            raise NotImplementedError(
+                "this service has no calibration loop (start with a"
+                " CalibrationLoop / --calibration to ingest traces)"
+            )
+        from repro.calibration.traces import StepTrace
+
+        try:
+            body = json.loads(body_json)
+            if not isinstance(body, dict):
+                raise ValueError("trace body must be a JSON object")
+            trace = StepTrace.from_dict(body)
+            ack = self.calibration.ingest(trace)
+        except Exception:
+            # malformed payloads and scoring failures alike: a rejected
+            # submission is a rejected submission to the counter
+            with self._lock:
+                self.stats.trace_errors += 1
+            raise
+        with self._lock:
+            self.stats.traces += 1
+        if ack.get("refit"):
+            self._swap_engine()
+        return ack
+
+    def _swap_engine(self) -> None:
+        """Rebuild the search engine around the calibration loop's current
+        model. In-flight searches keep the engine they started with; the
+        swap only steers searches that begin after it."""
+        factory = self._engine_factory
+        if factory is None:
+            old = self.astra
+            factory = lambda model: Astra(  # noqa: E731
+                model, old.rules,
+                use_batched=old.use_batched, chunk_size=old.chunk_size,
+            )
+        new_engine = factory(self.calibration.model)
+        with self._lock:
+            self.astra = new_engine
+            self.stats.refits += 1
+
     def result_json(self, key: str) -> tuple[str, Optional[str]]:
         """Poll a key: ``(status, report_json|error|None)`` with status one
         of ``ready`` / ``pending`` / ``failed`` / ``unknown``."""
@@ -334,9 +432,27 @@ class SearchService:
                 return "failed", self._errors[key]
         return "unknown", None
 
+    # -- calibration staleness ---------------------------------------------
+    def _is_stale(self, report_json: str) -> bool:
+        """A cached report is stale when the version that ranked it differs
+        from the calibration loop's live model (an unstamped report under a
+        calibrating service is stale too — it can't be attributed at all).
+        Without a calibration loop nothing is ever stale."""
+        if self.calibration is None:
+            return False
+        try:
+            stamped = json.loads(report_json).get("eta_model_version")
+        except Exception:
+            return False  # undecodable text is the store's problem, not ours
+        return stamped != self.calibration.version
+
     # -- single-flight machinery -------------------------------------------
     def _join_or_lead(
-        self, key: str, *, on_cold: Optional[Callable[[], None]] = None
+        self,
+        key: str,
+        *,
+        on_cold: Optional[Callable[[], None]] = None,
+        refresh_stale: bool = False,
     ) -> tuple[Optional[str], Optional[_Flight], bool]:
         """One lookup: ``(cached_json, flight, leader)`` — a hit returns
         the text; otherwise join the in-flight search or lead a fresh one
@@ -347,15 +463,31 @@ class SearchService:
         flight that completes between our read and the lock is closed by
         the ``_fills`` generation counter: completion bumps it atomically
         with deregistration, so a stale read forces one retry instead of a
-        duplicate search."""
+        duplicate search.
+
+        A hit stamped by an outdated eta model counts into ``stale_hits``
+        and is served anyway — unless ``refresh_stale`` asks for a
+        re-search, which falls through to the miss path (joining an
+        in-flight refresh of the same key like any other search, and
+        charged as cold: a forced re-search is exactly the work the cold
+        quota meters)."""
         while True:
             with self._lock:
                 gen = self._fills
             text = self._store_get(key)  # no lock held: may be slow I/O
+            # staleness is judged outside the lock too (json decode of a
+            # potentially large report); the worst a race with a concurrent
+            # refit can do is mis-count one hit as fresh/stale
+            stale = text is not None and self._is_stale(text)
             with self._lock:
                 if text is not None:
-                    self.stats.hits += 1
-                    return text, None, False
+                    if stale:
+                        self.stats.stale_hits += 1
+                    if not (stale and refresh_stale):
+                        self.stats.hits += 1
+                        return text, None, False
+                    self.stats.stale_refreshes += 1
+                    # fall through: lead (or join) a re-search of this key
                 flight = self._inflight.get(key)
                 if flight is not None:
                     self.stats.coalesced += 1
@@ -450,6 +582,8 @@ class SearchService:
         d["ttl_seconds"] = getattr(self.store, "ttl_seconds", None)
         d["search_concurrency"] = self.search_concurrency
         d["search_workers"] = self.workers
+        if self.calibration is not None:
+            d["calibration"] = self.calibration.stats_dict()
         return d
 
     def close(self) -> None:
@@ -698,6 +832,8 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return
         if url.path == "/v1/shard":
             return self._do_shard(spec_json)
+        if url.path == "/v1/traces":
+            return self._do_traces(spec_json)
         if url.path != "/v1/search":
             return self._reply(404, {"error": f"unknown path {url.path}"})
         try:
@@ -706,6 +842,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return self._reply(400, {"error": f"bad spec: {e}"})
         query = urllib.parse.parse_qs(url.query)
         want_async = query.get("async", ["0"])[-1] not in ("0", "", "false")
+        refresh_stale = query.get("refresh", [""])[-1] == "stale"
         on_cold = (
             self.auth.cold_hook(token)
             if self.auth is not None and token is not None else None
@@ -713,7 +850,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         try:
             if want_async:
                 key, status, text = self.service.submit_json(
-                    spec_json, on_cold=on_cold
+                    spec_json, on_cold=on_cold, refresh_stale=refresh_stale
                 )
                 if status == "ready":
                     return self._reply(200, {
@@ -722,7 +859,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                     })
                 return self._reply(202, {"key": key, "status": "pending"})
             key, text, cached = self.service.search_json(
-                spec_json, on_cold=on_cold
+                spec_json, on_cold=on_cold, refresh_stale=refresh_stale
             )
             return self._reply(200, {
                 "key": key, "status": "ready", "cached": cached,
@@ -755,6 +892,25 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                 "error": f"shard failed: {type(e).__name__}: {e}"
             })
         return self._reply(200, payload)
+
+    def _do_traces(self, body_json: str):
+        """Calibration inlet: one StepTrace in, one scoring ack out.
+
+        Shares the auth/request-quota gate; never charges the cold quota
+        (a trace is telemetry, not a search)."""
+        try:
+            ack = self.service.ingest_trace_json(body_json)
+        except NotImplementedError as e:
+            return self._reply(501, {"error": str(e)})
+        except (ValueError, KeyError, TypeError) as e:
+            return self._reply(400, {
+                "error": f"bad trace: {type(e).__name__}: {e}"
+            })
+        except Exception as e:
+            return self._reply(500, {
+                "error": f"trace ingestion failed: {type(e).__name__}: {e}"
+            })
+        return self._reply(200, ack)
 
     def do_GET(self):
         try:
@@ -875,10 +1031,21 @@ def _cmd_serve(args) -> int:
     store = parse_store_url(
         args.store, max_entries=args.max_entries, ttl_seconds=args.ttl,
     )
+    calibration = None
+    if args.calibration:
+        from repro.calibration.loop import CalibrationLoop
+        from repro.calibration.registry import parse_registry_url
+
+        calibration = CalibrationLoop(
+            eta,
+            registry=parse_registry_url(args.calibration),
+            threshold=args.calibration_threshold,
+        )
     service = SearchService(
         Astra(eta, backend=backend), store=store,
         search_concurrency=args.search_concurrency,
         workers=args.search_workers,
+        calibration=calibration,
     )
     auth = AuthQuota.from_file(args.auth_tokens) if args.auth_tokens else None
     serve_forever(service, args.host, args.port, auth=auth)
@@ -925,6 +1092,43 @@ def _cmd_search(args) -> int:
               f"dp={b.data_parallel} -> "
               f"{report.best_sim.throughput_tokens:,.0f} tok/s simulated")
     return 0
+
+
+def _cmd_traces(args) -> int:
+    """POST a JSONL trace file (one StepTrace per line, the --emit-traces
+    format) to a calibration-enabled service and print each ack."""
+    from repro.calibration.traces import StepTrace
+
+    base = args.url.rstrip("/")
+    rc = 0
+    with open(args.traces) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                StepTrace.from_json(line)  # fail fast on malformed lines
+            except Exception as e:
+                print(f"{args.traces}:{ln}: bad trace: {e}")
+                return 1
+            status, payload = _http_json(
+                f"{base}/v1/traces", line.encode(), token=args.token,
+                timeout=args.timeout, retries=args.retries,
+            )
+            if status != 200:
+                print(f"{args.traces}:{ln}: {status}:"
+                      f" {payload.get('error', payload)}")
+                rc = 1
+                continue
+            line_out = (
+                f"{args.traces}:{ln}: accuracy={payload['accuracy']:.4f}"
+                f" rolling={payload['rolling_accuracy']:.4f}"
+                f" model={payload['eta_model_version']}"
+            )
+            if payload.get("refit"):
+                line_out += f" REFIT -> {payload['new_version']}"
+            print(line_out)
+    return rc
 
 
 def _cmd_stats(args) -> int:
@@ -977,6 +1181,16 @@ def main(argv=None) -> int:
                    default=DEFAULT_SHARD_TIMEOUT, metavar="SECONDS",
                    help="per-shard HTTP timeout before the shard is "
                         "reassigned (default %(default)s)")
+    p.add_argument("--calibration", default=None, metavar="URL",
+                   help="enable the calibration feedback loop with this "
+                        "model registry: memory | sqlite:PATH "
+                        "(POST /v1/traces ingests measured StepTraces; "
+                        "accuracy decay below the threshold refits the eta "
+                        "model and swaps the engine)")
+    p.add_argument("--calibration-threshold", type=float, default=0.95,
+                   metavar="FRAC",
+                   help="rolling-accuracy bar that triggers a refit "
+                        "(default %(default)s, the paper's 95%% claim)")
     p.set_defaults(fn=_cmd_serve)
 
     p = sub.add_parser("search", help="POST a spec file to a running service")
@@ -997,6 +1211,19 @@ def main(argv=None) -> int:
                         "(connection refused/reset/timeout; HTTP error "
                         "statuses are never retried)")
     p.set_defaults(fn=_cmd_search)
+
+    p = sub.add_parser("traces",
+                       help="POST a JSONL StepTrace file to /v1/traces")
+    p.add_argument("--url", required=True)
+    p.add_argument("--traces", required=True, metavar="TRACES_JSONL",
+                   help="one StepTrace JSON per line (the launch/train.py "
+                        "--emit-traces format)")
+    p.add_argument("--token", default=None,
+                   help="bearer token for an auth-enabled service")
+    p.add_argument("--timeout", type=float, default=DEFAULT_TIMEOUT,
+                   metavar="SECONDS")
+    p.add_argument("--retries", type=int, default=DEFAULT_RETRIES)
+    p.set_defaults(fn=_cmd_traces)
 
     p = sub.add_parser("stats", help="print /v1/stats of a running service")
     p.add_argument("--url", required=True)

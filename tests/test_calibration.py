@@ -1,0 +1,436 @@
+"""Calibration feedback loop: trace wire round-trips, the versioned model
+registry (memory + sqlite restart survival + corruption drops), drift
+detection on a synthetically perturbed ground truth, refit determinism
+under a fixed seed, SearchReport version stamping (wire back-compat), and
+the end-to-end service loop — drifted traces push accuracy below the bar,
+the loop refits to a new registry version, and ``?refresh=stale``
+re-searches the stale report under the new model. Everything is sleep-free:
+drift is a pure function of the replayed truth (``jitter_sigma=0``)."""
+import json
+import sqlite3
+
+import pytest
+
+from harness_service import http_service as serve_http, request as _request
+from repro.calibration import (
+    CalibrationLoop,
+    GroundTruth,
+    MemoryModelRegistry,
+    SqliteModelRegistry,
+    StepTrace,
+    append_trace,
+    parse_registry_url,
+    read_traces,
+    refit_eta_model,
+    replay_profile,
+    simulate_step_trace,
+    train_eta_model,
+)
+from repro.calibration.fit import AnalyticEtaModel, EtaModel
+from repro.core import Astra, FixedPool, SearchReport, SearchSpec, Workload
+from repro.core.api import _eta_version
+from repro.core.params import ParallelStrategy
+from repro.serve.search_service import SearchService
+
+GB, SEQ = 64, 1024
+SMALL_SPACE = {
+    "tensor_parallel": [1, 2, 4],
+    "pipeline_parallel": [1, 2],
+    "micro_batch_size": [1, 2],
+    "use_distributed_optimizer": [False, True],
+    "recompute_granularity": ["none", "full"],
+}
+
+# the perturbed cluster: compute 40% slower, comms 20% slower than the truth
+# the module eta model was fitted against — deterministic (no jitter), so
+# every accuracy number below is a pure function of the trace sequence
+DRIFT = dict(jitter_sigma=0.0, base_eff_scale=0.6, comm_eff_scale=0.8)
+
+
+@pytest.fixture(scope="module")
+def eta():
+    """One small trained eta model shared by the whole module (the trees —
+    hence the content-hash version — are deterministic under the seed)."""
+    model, report = train_eta_model(n_samples=600, n_estimators=40, seed=0)
+    assert report["eta_model_version"] == model.version_string()
+    return model
+
+
+def _spec(arch, device="A800", n=16) -> SearchSpec:
+    return SearchSpec(
+        arch=arch, pool=FixedPool(device, n), workload=Workload(GB, SEQ),
+        space=SMALL_SPACE,
+    )
+
+
+def _strategy(n=16) -> ParallelStrategy:
+    return ParallelStrategy(
+        device="A800", num_devices=n, tensor_parallel=2, micro_batch_size=2,
+    )
+
+
+def _drifted_trace(arch, seed=0, *, with_samples=True) -> StepTrace:
+    comp, comm = ((), ())
+    if with_samples:
+        comp, comm = replay_profile(
+            GroundTruth(**DRIFT), n_compute=60, n_comm=60, seed=seed
+        )
+    return simulate_step_trace(
+        GroundTruth(**DRIFT), arch, _strategy(),
+        global_batch=GB, seq=SEQ, steps=3,
+        compute_samples=comp, comm_samples=comm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace wire format
+# ---------------------------------------------------------------------------
+
+def test_trace_wire_round_trip_bit_for_bit(tiny_dense):
+    tr = _drifted_trace(tiny_dense, seed=3)
+    assert tr.compute_samples and tr.comm_samples
+    j = tr.to_json()
+    tr2 = StepTrace.from_json(j)
+    assert tr2 == tr
+    assert tr2.to_json() == j  # byte-identical re-serialization
+
+
+def test_trace_wire_sparse_without_samples(tiny_dense):
+    tr = _drifted_trace(tiny_dense, with_samples=False)
+    d = tr.to_dict()
+    assert "compute_samples" not in d and "comm_samples" not in d
+    assert StepTrace.from_dict(d) == tr
+
+
+def test_trace_validation(tiny_dense):
+    with pytest.raises(ValueError, match="source"):
+        StepTrace(arch=tiny_dense, strategy=_strategy(), global_batch=GB,
+                  seq=SEQ, step_times=(0.1,), source="wat")
+    with pytest.raises(ValueError, match="step time"):
+        StepTrace(arch=tiny_dense, strategy=_strategy(), global_batch=GB,
+                  seq=SEQ, step_times=())
+
+
+def test_trace_jsonl_append_read(tiny_dense, tmp_path):
+    path = str(tmp_path / "traces.jsonl")
+    traces = [_drifted_trace(tiny_dense, seed=s, with_samples=False)
+              for s in (0, 1)]
+    for tr in traces:
+        append_trace(path, tr)
+    assert read_traces(path) == traces
+
+
+def test_trace_derived_keys(tiny_dense):
+    tr = _drifted_trace(tiny_dense, with_samples=False)
+    assert tr.pool_key == "A800x16"
+    # strategy identity, not object identity: same knobs -> same key
+    assert tr.strategy_key == _drifted_trace(
+        tiny_dense, seed=9, with_samples=False
+    ).strategy_key
+    assert tr.measured_step_time == sorted(tr.step_times)[1]  # median of 3
+
+
+# ---------------------------------------------------------------------------
+# versioned registry
+# ---------------------------------------------------------------------------
+
+def test_version_hash_is_content_addressed(eta):
+    v = eta.version_string()
+    assert v.startswith("eta-") and len(v) == 4 + 16
+    # identical training run -> identical trees -> identical version
+    model2, _ = train_eta_model(n_samples=600, n_estimators=40, seed=0)
+    assert model2.version_string() == v
+    # serialization round-trip preserves the hash
+    assert EtaModel.from_dict(eta.to_dict()).version_string() == v
+    assert AnalyticEtaModel().version_string() == "analytic-1"
+
+
+def test_memory_registry_round_trip_and_idempotence(eta):
+    reg = MemoryModelRegistry()
+    v = reg.register(eta, meta={"reason": "initial"})
+    assert reg.register(eta) == v and len(reg) == 1  # idempotent
+    assert reg.latest() == v and reg.versions() == [v]
+    assert reg.get(v).version_string() == v
+    assert reg.meta(v) == {"reason": "initial"}
+    assert reg.get("eta-nope") is None
+
+
+def test_sqlite_registry_survives_restart(eta, tmp_path):
+    path = str(tmp_path / "registry.sqlite")
+    reg = parse_registry_url(f"sqlite:{path}")
+    assert isinstance(reg, SqliteModelRegistry)
+    v = reg.register(eta, meta={"reason": "initial", "acc": 0.95})
+    reg.register(eta)  # idempotent across the same handle
+    reg.close()
+
+    reg2 = SqliteModelRegistry(path)  # a new process would do exactly this
+    assert len(reg2) == 1
+    assert reg2.latest() == v and reg2.versions() == [v]
+    assert reg2.get(v).version_string() == v
+    assert reg2.meta(v) == {"reason": "initial", "acc": 0.95}
+    reg2.close()
+
+
+def test_sqlite_registry_drops_corrupt_rows(eta, tmp_path):
+    path = str(tmp_path / "registry.sqlite")
+    reg = SqliteModelRegistry(path)
+    v = reg.register(eta)
+    # flip the stored model text behind the registry's back
+    with sqlite3.connect(path) as raw:
+        raw.execute("UPDATE eta_models SET model = ? WHERE version = ?",
+                    ('{"broken": true}', v))
+    assert reg.get(v) is None  # checksum mismatch -> dropped, not parsed
+    assert reg.corruptions == 1 and len(reg) == 0
+    reg.close()
+
+
+def test_parse_registry_url_rejects_garbage():
+    assert isinstance(parse_registry_url("memory"), MemoryModelRegistry)
+    with pytest.raises(ValueError):
+        parse_registry_url("redis:whatever")
+
+
+# ---------------------------------------------------------------------------
+# drift detection + refit
+# ---------------------------------------------------------------------------
+
+def test_undrifted_truth_scores_above_bar(eta, tiny_dense):
+    """Sanity anchor: replaying the *unperturbed* truth the model was fitted
+    against stays above the 0.90 bar the drift tests use (the test-sized
+    600-sample model scores ~0.91 here; the drifted truth below scores
+    ~0.78 — the gap is what the loop detects)."""
+    loop = CalibrationLoop(eta, threshold=0.90, auto_refit=False)
+    tr = simulate_step_trace(
+        GroundTruth(jitter_sigma=0.0), tiny_dense, _strategy(),
+        global_batch=GB, seq=SEQ,
+    )
+    ack = loop.ingest(tr)
+    assert ack["accuracy"] > loop.threshold
+    assert ack["eta_model_version"] == eta.version_string()
+    assert not ack["refit"]
+
+
+def test_drift_detected_and_refit_recovers(eta, tiny_dense):
+    """The tentpole loop, in-process: perturbed truth drives accuracy below
+    the bar, the loop refits from the absorbed op samples, the registry gains
+    a second version, and post-refit traces score above the bar again."""
+    loop = CalibrationLoop(
+        eta, threshold=0.90, window=8, min_traces=3,
+        min_refit_samples=50, refit_seed=0, refit_estimators=40,
+    )
+    v1 = loop.version
+    acks = [loop.ingest(_drifted_trace(tiny_dense, seed=s)) for s in range(4)]
+    # traces scored by the stale model sit below the bar; the trace after
+    # the refit is scored by the new model and recovers
+    refit_at = next(i for i, a in enumerate(acks) if a["refit"])
+    assert all(a["accuracy"] < 0.90 for a in acks[: refit_at + 1])
+    assert all(a["accuracy"] > 0.90 for a in acks[refit_at + 1:])
+    assert sum(1 for a in acks if a["refit"]) == 1 and loop.refits == 1
+    v2 = acks[refit_at]["new_version"]
+    assert v2 == loop.version and v2 != v1
+
+    # the registry kept both generations, newest last, with lineage
+    assert loop.registry.versions() == [v1, v2]
+    assert loop.registry.latest() == v2
+    assert loop.registry.meta(v2)["refit_of"] == v1
+
+    # the refitted model predicts the drifted cluster accurately again
+    post = loop.ingest(_drifted_trace(tiny_dense, seed=99))
+    assert post["accuracy"] > 0.90 and not post["refit"]
+
+    stats = loop.stats_dict()
+    assert stats["eta_model_version"] == v2
+    assert stats["traces"] == 5 and stats["refits"] == 1
+    assert stats["registry"] == {"kind": "memory", "models": 2, "corruptions": 0}
+
+
+def test_refit_is_deterministic_under_fixed_seed(eta):
+    comp, comm = replay_profile(GroundTruth(**DRIFT), n_compute=120,
+                                n_comm=120, seed=0)
+    m1, r1 = refit_eta_model(comp, comm, base=eta, seed=0, n_estimators=40)
+    m2, r2 = refit_eta_model(comp, comm, base=eta, seed=0, n_estimators=40)
+    assert m1.version_string() == m2.version_string() != eta.version_string()
+    assert r1 == r2
+    # a different seed shuffles the holdout split -> different trees
+    m3, _ = refit_eta_model(comp, comm, base=eta, seed=1, n_estimators=40)
+    assert m3.version_string() != m1.version_string()
+
+
+def test_no_auto_refit_below_min_samples(eta, tiny_dense):
+    loop = CalibrationLoop(eta, threshold=0.90, min_traces=1,
+                           min_refit_samples=10_000)
+    ack = loop.ingest(_drifted_trace(tiny_dense))
+    assert ack["accuracy"] < 0.90 and not ack["refit"]
+    assert loop.refits == 0
+
+
+# ---------------------------------------------------------------------------
+# SearchReport stamping: wire back-compat
+# ---------------------------------------------------------------------------
+
+class _Unversioned:
+    """An eta-model-shaped engine with no version identity (pre-calibration
+    engines, raw truth simulators)."""
+
+    def __init__(self):
+        self._inner = AnalyticEtaModel()
+
+    def compute_time(self, op):
+        return self._inner.compute_time(op)
+
+    def comm_time(self, op):
+        return self._inner.comm_time(op)
+
+
+def test_report_stamped_with_eta_version(tiny_dense):
+    report = Astra(AnalyticEtaModel()).search(_spec(tiny_dense))
+    assert report.eta_model_version == "analytic-1"
+    assert report.to_dict()["eta_model_version"] == "analytic-1"
+    rt = SearchReport.from_json(report.to_json())
+    assert rt == report and rt.eta_model_version == "analytic-1"
+
+
+def test_unstamped_report_wire_bytes_unchanged(tiny_dense):
+    """Engines without a version leave the report exactly as before this
+    subsystem existed: no key on the wire, None after parsing."""
+    report = Astra(_Unversioned(), use_batched=False).search(_spec(tiny_dense))
+    assert report.eta_model_version is None
+    d = report.to_dict()
+    assert "eta_model_version" not in d
+    assert SearchReport.from_dict(d) == report
+
+
+def test_pre_calibration_report_dict_still_loads(tiny_dense):
+    """Back-compat: wire dicts produced before the field existed parse to
+    eta_model_version=None."""
+    d = Astra(AnalyticEtaModel()).search(_spec(tiny_dense)).to_dict()
+    del d["eta_model_version"]
+    assert SearchReport.from_dict(d).eta_model_version is None
+
+
+def test_eta_version_duck_typing_is_defensive():
+    class Raises:
+        def version_string(self):
+            raise RuntimeError("nope")
+
+    class NotAString:
+        def version_string(self):
+            return 42
+
+    assert _eta_version(object()) is None
+    assert _eta_version(Raises()) is None
+    assert _eta_version(NotAString()) is None
+    assert _eta_version(AnalyticEtaModel()) == "analytic-1"
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end service loop (the acceptance check)
+# ---------------------------------------------------------------------------
+
+def test_service_feedback_loop_end_to_end(eta, tiny_dense):
+    """Drifted traces over HTTP push accuracy below the bar -> the loop
+    refits to a new registry version -> the cached report is stale ->
+    ``?refresh=stale`` re-searches under the new model and the refreshed
+    report is byte-identical on re-request. Sleep-free throughout."""
+    loop = CalibrationLoop(
+        eta, threshold=0.90, window=8, min_traces=3,
+        min_refit_samples=50, refit_seed=0, refit_estimators=40,
+    )
+    v1 = loop.version
+    svc = SearchService(Astra(eta), calibration=loop)
+    spec_json = _spec(tiny_dense).to_json().encode()
+
+    with serve_http(svc) as base:
+        # cold search, stamped with the live model's version
+        st, cold = _request(f"{base}/v1/search", spec_json)
+        assert st == 200 and cold["cached"] is False
+        assert cold["report"]["eta_model_version"] == v1
+
+        # warm hit: the identical report (float.hex wire => bit-exact)
+        st, warm = _request(f"{base}/v1/search", spec_json)
+        assert st == 200 and warm["cached"] is True
+        assert warm["report"] == cold["report"]
+
+        # drifted traces through the wire inlet until the loop refits
+        acks = []
+        for s in range(6):
+            body = _drifted_trace(tiny_dense, seed=s).to_json().encode()
+            st, ack = _request(f"{base}/v1/traces", body)
+            assert st == 200
+            acks.append(ack)
+        refit_at = next(i for i, a in enumerate(acks) if a["refit"])
+        assert all(a["accuracy"] < 0.90 for a in acks[: refit_at + 1])
+        assert all(a["accuracy"] > 0.90 for a in acks[refit_at + 1:])
+        assert sum(1 for a in acks if a["refit"]) == 1
+        v2 = loop.version
+        assert v2 != v1 and loop.registry.versions() == [v1, v2]
+
+        # by default the stale report is still served (and counted)
+        st, stale = _request(f"{base}/v1/search", spec_json)
+        assert st == 200 and stale["cached"] is True
+        assert stale["report"]["eta_model_version"] == v1
+
+        # refresh=stale forces a re-search under the refitted model
+        st, fresh = _request(f"{base}/v1/search?refresh=stale", spec_json)
+        assert st == 200 and fresh["cached"] is False
+        assert fresh["report"]["eta_model_version"] == v2
+
+        # the refreshed report is now the cached one — byte-identical re-run
+        st, again = _request(f"{base}/v1/search?refresh=stale", spec_json)
+        assert st == 200 and again["cached"] is True
+        assert again["report"] == fresh["report"]
+
+        st, stats = _request(f"{base}/v1/stats")
+        assert st == 200
+        assert stats["traces"] == 6 and stats["refits"] == 1
+        assert stats["stale_hits"] >= 1 and stats["stale_refreshes"] == 1
+        assert stats["calibration"]["eta_model_version"] == v2
+        assert stats["calibration"]["refits"] == 1
+
+    # strict byte-identity at the service layer (dict equality above is
+    # already bit-exact for floats, but the wire text is the contract)
+    _, t1, c1 = svc.search_json(_spec(tiny_dense).to_json(),
+                                refresh_stale=True)
+    _, t2, c2 = svc.search_json(_spec(tiny_dense).to_json(),
+                                refresh_stale=True)
+    assert (c1, c2) == (True, True) and t1 == t2
+    assert json.loads(t1)["eta_model_version"] == loop.version
+
+
+def test_traces_endpoint_error_paths(tiny_dense):
+    # no calibration loop configured -> 501, and the counter stays clean
+    svc = SearchService(Astra(AnalyticEtaModel()))
+    with serve_http(svc) as base:
+        body = _drifted_trace(tiny_dense, with_samples=False).to_json().encode()
+        st, payload = _request(f"{base}/v1/traces", body)
+        assert st == 501 and "calibration" in payload["error"]
+
+    # calibrating service: malformed bodies -> 400, counted as trace_errors
+    loop = CalibrationLoop(AnalyticEtaModel(), threshold=0.90)
+    svc2 = SearchService(Astra(AnalyticEtaModel()), calibration=loop)
+    with serve_http(svc2) as base:
+        st, payload = _request(f"{base}/v1/traces", b"not json")
+        assert st == 400
+        st, payload = _request(f"{base}/v1/traces", b'{"kind": "wrong"}')
+        assert st == 400
+        stats = svc2.stats_dict()
+        assert stats["trace_errors"] == 2 and stats["traces"] == 0
+
+
+@pytest.mark.slow
+def test_train_emit_traces_writes_wire_jsonl(tmp_path):
+    """launch/train.py --emit-traces appends one parseable wire trace whose
+    step count matches the run (slow: jits a real reduced model)."""
+    from repro.launch.train import main as train_main
+
+    path = str(tmp_path / "train_traces.jsonl")
+    train_main([
+        "--arch", "qwen3-8b", "--reduced", "--steps", "3",
+        "--batch", "4", "--seq", "32", "--emit-traces", path,
+    ])
+    traces = read_traces(path)
+    assert len(traces) == 1
+    tr = traces[0]
+    assert tr.source == "train" and len(tr.step_times) == 3
+    assert tr.global_batch == 4 and tr.seq == 32
+    assert StepTrace.from_json(tr.to_json()) == tr
