@@ -57,6 +57,11 @@ def _derived(name: str, rows: list[dict]) -> str:
                     and "spinup_delta_s" in r]
             if warm:
                 out += f";pool_spinup_delta={warm[0]['spinup_delta_s']}s"
+            pln = [r for r in rows if r["bench"] == "table1-planner"
+                   and "replan_speedup" in r]
+            if pln:
+                out += (f";planner_replan_speedup={pln[0]['replan_speedup']}x"
+                        f";plan_identical={pln[0]['plan_identical']}")
             return out
         if name in ("fig5", "fig6"):
             ratios = [r["ratio"] for r in rows if r.get("ratio")]

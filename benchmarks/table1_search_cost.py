@@ -33,6 +33,13 @@ setting the rows also record the host-independent work partition —
 whose ``partition_speedup`` (serial work / slowest shard) is what a host
 with >= workers free cores realizes.
 
+``table1-planner`` rows put the fleet capacity planner (:mod:`repro.fleet`)
+on the same amortization axis: a 3-job x 2-pool ``FleetSpec`` planned cold
+(every grid cell searched), re-planned from the warm grid after evicting
+the cached plan (zero searches, byte-identical plan), and re-planned
+incrementally after one new job arrives (only the new job's cells are
+searched — the queue grows, the paid-for grid stays paid for).
+
 ``table1-fleet`` rows cross the host boundary: the mode-3 sweep searched
 through real HTTP workers (forked service processes answering
 ``POST /v1/shard``) at 1/2/4 workers via :class:`repro.core.backend.
@@ -276,6 +283,79 @@ def _pool_spinup_rows(eta, model: str, spec: SearchSpec) -> list[dict]:
     }]
 
 
+def planner_rows(eta) -> list[dict]:
+    """Fleet planner amortization: cold grid vs warm grid vs incremental
+    re-plan after one new job joins the queue."""
+    from repro.fleet import FleetPlan, FleetSpec, FleetWorkload, GpuPool
+
+    pools = (GpuPool("a800-pool", "A800", 16),
+             GpuPool("h100-pool", "H100", 8, price_per_hour=3.50))
+    jobs = (
+        FleetWorkload("chat-7b", PAPER_MODELS["llama2-7b"], 512, 4096,
+                      priority=2),
+        FleetWorkload("ablate-7b", PAPER_MODELS["llama2-7b"], 256, 4096),
+        FleetWorkload("tune-13b", PAPER_MODELS["llama2-13b"], 256, 2048),
+    )
+    fleet = FleetSpec(pools=pools, workloads=jobs)
+    service = SearchService(Astra(eta))
+
+    t0 = time.perf_counter()
+    key, cold_text, _ = service.plan_json(fleet.to_json())
+    cold_s = time.perf_counter() - t0
+    plan = FleetPlan.from_json(cold_text)
+    stats = service.stats_dict()
+    cells, cold_warm = stats["grid_cells"], stats["grid_warm_hits"]
+
+    # evict the plan but keep the grid: the re-plan must run zero searches
+    service.store.delete(key)
+    t0 = time.perf_counter()
+    _, warm_text, _ = service.plan_json(fleet.to_json())
+    warm_s = time.perf_counter() - t0
+    stats = service.stats_dict()
+    warm_hits = stats["grid_warm_hits"] - cold_warm
+    assert warm_text == cold_text, "warm-grid plan diverged from cold"
+    assert warm_hits == cells, "warm-grid re-plan ran a search"
+
+    # one new job arrives: only its cells are cold
+    grown = dataclasses.replace(fleet, workloads=jobs + (
+        FleetWorkload("long-ctx-7b", PAPER_MODELS["llama2-7b"], 128, 8192),
+    ))
+    t0 = time.perf_counter()
+    _, grown_text, _ = service.plan_json(grown.to_json())
+    incr_s = time.perf_counter() - t0
+    stats = service.stats_dict()
+    incr_cold = (stats["grid_cells"] - 2 * cells) \
+        - (stats["grid_warm_hits"] - cold_warm - cells)
+    assert incr_cold == len(pools), "incremental re-plan re-searched old cells"
+
+    return [{
+        "bench": "table1-planner",
+        "workloads": len(jobs),
+        "pools": len(pools),
+        "grid_cells": cells,
+        "solver": plan.solver,
+        "assigned": len(plan.assignments),
+        "aggregate_tokens_per_s": round(plan.total_throughput, 0),
+        "aggregate_dollars_per_hour": round(plan.total_dollars_per_hour, 2),
+        "thr_per_dollar": round(plan.throughput_per_dollar, 2),
+        "cold_plan_s": round(cold_s, 3),
+        "warm_grid_replan_s": round(warm_s, 6),
+        "replan_speedup": round(cold_s / max(warm_s, 1e-9), 1),
+        "plan_identical": True,
+    }, {
+        "bench": "table1-planner",
+        "workloads": len(jobs) + 1,
+        "pools": len(pools),
+        "grid_cells": cells + len(pools),
+        "solver": FleetPlan.from_json(grown_text).solver,
+        "assigned": len(FleetPlan.from_json(grown_text).assignments),
+        "incremental_replan_s": round(incr_s, 3),
+        "new_cells_searched": incr_cold,
+        "cold_plan_s": round(cold_s, 3),
+        "incremental_speedup": round(cold_s / max(incr_s, 1e-9), 1),
+    }]
+
+
 def compare_engines(
     eta, model: str, gpus: int, *, global_batch: int = 1024, seq: int = 4096
 ) -> dict:
@@ -451,5 +531,8 @@ def run(eta) -> list[dict]:
 
     # fleet execution over HTTP workers + warm-pool spin-up delta
     flt_rows = fleet_rows(eta)
+
+    # fleet capacity planner: cold grid / warm grid / incremental re-plan
+    plan_rows = planner_rows(eta)
     return (rows + engine_rows + service_rows + persist_rows + par_rows
-            + flt_rows)
+            + flt_rows + plan_rows)

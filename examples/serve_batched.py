@@ -79,8 +79,15 @@ def main():
                     metavar="SECONDS",
                     help="per-request timeout against --search-url "
                          "(default: the service client's 600s)")
+    ap.add_argument("--emit-traces", default=None, metavar="PATH",
+                    help="append one measured source='serve' StepTrace "
+                         "(JSONL, wire format) from this generate's decode "
+                         "steps — the same feedback inlet launch/train.py "
+                         "feeds ('python -m repro.serve.search_service "
+                         "traces' or CalibrationLoop.ingest)")
     args = ap.parse_args()
 
+    report = None
     if args.search_spec:
         try:
             spec, report = pick_strategy_from_spec(
@@ -121,6 +128,27 @@ def main():
     for i, row in enumerate(result.tokens[:2]):
         print(f"  req{i}: prompt={row[:args.prompt_len].tolist()[:8]}... "
               f"generated={row[args.prompt_len:].tolist()}")
+
+    if args.emit_traces and result.step_times:
+        from repro.calibration.traces import StepTrace, append_trace
+        from repro.core.params import ParallelStrategy
+
+        # attribute the measurement to the searched strategy when there is
+        # one; otherwise describe the device this serve actually ran on
+        strategy = report.best if report is not None and report.best \
+            is not None else ParallelStrategy(
+                device="tpu-v5e", num_devices=max(jax.device_count(), 1),
+                micro_batch_size=max(args.batch, 1),
+            )
+        trace = StepTrace(
+            arch=arch, strategy=strategy,
+            global_batch=args.batch, seq=args.prompt_len + args.tokens,
+            step_times=result.step_times, source="serve",
+        )
+        append_trace(args.emit_traces, trace)
+        print(f"[trace] appended {len(result.step_times)}-step serve trace "
+              f"(median {trace.measured_step_time:.4f}s) to "
+              f"{args.emit_traces}")
 
 
 if __name__ == "__main__":

@@ -2,12 +2,12 @@
 from repro.serve.engine import GenerateResult, ServeEngine
 
 __all__ = ["ServeEngine", "GenerateResult", "SearchService", "ServiceStats",
-           "AuthQuota", "TokenInfo", "make_server",
+           "AuthQuota", "TokenInfo", "make_server", "metrics_text",
            "ReportStore", "MemoryStore", "SqliteStore", "TieredStore",
            "parse_store_url"]
 
 _SERVICE_EXPORTS = ("SearchService", "ServiceStats", "AuthQuota", "TokenInfo",
-                    "make_server")
+                    "make_server", "metrics_text")
 _STORE_EXPORTS = ("ReportStore", "MemoryStore", "SqliteStore", "TieredStore",
                   "parse_store_url")
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -20,6 +21,11 @@ from repro.models.lm import ModelCfg
 class GenerateResult:
     tokens: np.ndarray  # (B, prompt + generated)
     prompt_len: int
+    # measured wall time per decode step (seconds, one per generated token;
+    # each step materializes its sampled token, so step i's time covers the
+    # device work it waited on). The first entry absorbs jit compilation —
+    # the raw material for a source="serve" calibration StepTrace
+    step_times: tuple = ()
 
 
 class ServeEngine:
@@ -57,16 +63,25 @@ class ServeEngine:
         out = [np.asarray(prompts)]
         last = logits[:, -1, :]
         pos = S + (frontend.shape[1] if frontend is not None else 0)
+        step_times = []
         for i in range(max_new_tokens):
+            t0 = time.perf_counter()
             if temperature > 0:
                 key, sub = jax.random.split(key)
                 nxt = jax.random.categorical(sub, last / temperature, axis=-1)
             else:
                 nxt = jnp.argmax(last, axis=-1)
             nxt = nxt[:, None].astype(jnp.int32)
+            # np.asarray blocks on the sampled token — and with it on the
+            # decode dispatched last iteration — so the measured interval is
+            # a true per-token step time, not just dispatch latency
             out.append(np.asarray(nxt))
             logits, caches = self._decode(
                 self.params, caches=caches, tokens=nxt, position=pos + i
             )
             last = logits[:, -1, :]
-        return GenerateResult(tokens=np.concatenate(out, axis=1), prompt_len=S)
+            step_times.append(time.perf_counter() - t0)
+        return GenerateResult(
+            tokens=np.concatenate(out, axis=1), prompt_len=S,
+            step_times=tuple(step_times),
+        )

@@ -26,8 +26,17 @@ that
                                         current one instead of being served
       POST /v1/shard             body = {spec, shard: [i, n]} -> shard payload
       POST /v1/traces            body = StepTrace JSON -> calibration ack
+      POST /v1/plan              body = FleetSpec JSON -> fleet plan envelope
       GET  /v1/results/<key>     -> 200 report | 202 pending | 404 unknown
       GET  /v1/stats             -> cache/store counters + per-token usage
+      GET  /metrics              -> the same counters, Prometheus text format
+
+``POST /v1/plan`` is the fleet capacity planner (see :mod:`repro.fleet`):
+the body names heterogeneous pools and a workload queue, the service
+searches the workload x pool grid through its own spec-keyed cache (warm
+cells are free — re-planning after adding one job only searches the new
+job's cells) and returns the solved ``astra.fleet_plan`` envelope, itself
+cached under the fleet's canonical cache key.
 
 ``POST /v1/traces`` is the calibration feedback inlet (see
 :mod:`repro.calibration.loop`): a service built with a
@@ -63,6 +72,8 @@ A small CLI rides along::
         --spec spec.json [--token TOKEN] [--async-poll]
     python -m repro.serve.search_service traces --url http://host:8123 \\
         --traces steps.jsonl [--token TOKEN]
+    python -m repro.serve.search_service plan --url http://host:8123 \\
+        --spec fleet.json [--token TOKEN]
     python -m repro.serve.search_service stats --url http://host:8123
 """
 from __future__ import annotations
@@ -111,6 +122,9 @@ class ServiceStats:
     refits: int = 0  # engine swaps after a calibration refit
     stale_hits: int = 0  # cache hits stamped by an outdated eta model
     stale_refreshes: int = 0  # stale hits re-searched via refresh=stale
+    plans: int = 0  # fleet plans computed (cold /v1/plan requests)
+    grid_cells: int = 0  # workload x pool cells planned over
+    grid_warm_hits: int = 0  # grid cells served without running a search
 
     @property
     def requests(self) -> int:
@@ -138,6 +152,9 @@ class ServiceStats:
             "refits": self.refits,
             "stale_hits": self.stale_hits,
             "stale_refreshes": self.stale_refreshes,
+            "plans": self.plans,
+            "grid_cells": self.grid_cells,
+            "grid_warm_hits": self.grid_warm_hits,
         }
 
 
@@ -273,7 +290,7 @@ class SearchService:
         if hit is not None:
             return key, hit, True
         if leader:
-            self._run_flight(key, spec, flight)
+            self._run_flight(key, flight, lambda: self._search_text(spec))
         else:
             flight.done.wait()
         if flight.error is not None:
@@ -284,6 +301,75 @@ class SearchService:
         """Spec in, report out — always through the wire format."""
         _, text, _ = self.search_json(spec.to_json())
         return SearchReport.from_json(text)
+
+    # -- fleet planning ----------------------------------------------------
+    def plan_json(
+        self,
+        fleet_json: str,
+        *,
+        on_cold: Optional[Callable[[], None]] = None,
+        refresh_stale: bool = False,
+    ) -> tuple[str, str, bool]:
+        """Run (or replay) the fleet plan described by ``fleet_json``
+        (``POST /v1/plan``; see :mod:`repro.fleet`).
+
+        Returns ``(fleet_cache_key, plan_json, cached)``. Plans reuse the
+        whole search machinery: cached in the same store under
+        :meth:`~repro.fleet.spec.FleetSpec.cache_key`, single-flighted per
+        key, and ``on_cold`` charged once per cold *plan* — the grid cells
+        a cold plan fans out to are never cold-charged individually (a
+        warm cell is a store read; a cold one is work the plan already
+        paid for). Cell searches count into ``hits``/``misses`` as usual,
+        plus ``grid_cells``/``grid_warm_hits``; the plan itself counts
+        into ``plans``. Like reports, a cached plan stamped by an outdated
+        eta model is stale: served (and counted) unless ``refresh_stale``
+        forces a re-plan — warm cells keep it cheap.
+        """
+        from repro.fleet.spec import FleetSpec
+
+        fspec = FleetSpec.from_json(fleet_json)
+        key = fspec.cache_key()
+        hit, flight, leader = self._join_or_lead(
+            key, on_cold=on_cold, refresh_stale=refresh_stale
+        )
+        if hit is not None:
+            return key, hit, True
+        if leader:
+            # NOT bounded by the search semaphore: the plan only
+            # orchestrates; its cells take the semaphore themselves (a plan
+            # holding a slot while its cells wait for one would deadlock at
+            # search_concurrency=1)
+            self._run_flight(key, flight, lambda: self._plan_text(fspec))
+        else:
+            flight.done.wait()
+        if flight.error is not None:
+            raise flight.error
+        return key, flight.report_json, not leader
+
+    def plan(self, fspec) -> "FleetPlan":  # noqa: F821 (lazy import below)
+        """FleetSpec in, FleetPlan out — always through the wire format."""
+        from repro.fleet.assign import FleetPlan
+
+        _, text, _ = self.plan_json(fspec.to_json())
+        return FleetPlan.from_json(text)
+
+    def _plan_text(self, fspec) -> str:
+        """Produce one fleet plan: search the grid through this service's
+        own cache, then solve the assignment."""
+        from repro.fleet.assign import solve
+        from repro.fleet.grid import search_grid
+
+        cells, warm, counts = search_grid(self, fspec)
+        with self._lock:
+            self.stats.grid_cells += len(cells)
+            self.stats.grid_warm_hits += warm
+        plan = solve(
+            fspec, cells, counts,
+            eta_model_version=getattr(self.astra, "eta_version", None),
+        )
+        with self._lock:
+            self.stats.plans += 1
+        return plan.to_json()
 
     def submit_json(
         self,
@@ -308,7 +394,9 @@ class SearchService:
             return key, "ready", hit
         if leader:
             threading.Thread(
-                target=self._run_flight, args=(key, spec, flight), daemon=True
+                target=self._run_flight,
+                args=(key, flight, lambda: self._search_text(spec)),
+                daemon=True,
             ).start()
         return key, "pending", None
 
@@ -517,27 +605,37 @@ class SearchService:
                     self.stats.store_put_errors += 1
             return text, None, False
 
-    def _run_flight(self, key: str, spec: SearchSpec, flight: _Flight) -> None:
-        try:
-            if self.workers is not None and spec.limits.workers != self.workers:
-                # execution-detail override: never changes the cache key or
-                # the report (workers is dropped from spec identity)
-                spec = dataclasses.replace(
-                    spec,
-                    limits=dataclasses.replace(spec.limits, workers=self.workers),
+    def _search_text(self, spec: SearchSpec) -> str:
+        """One cold search under the bounded executor -> report JSON."""
+        if self.workers is not None and spec.limits.workers != self.workers:
+            # execution-detail override: never changes the cache key or
+            # the report (workers is dropped from spec identity)
+            spec = dataclasses.replace(
+                spec,
+                limits=dataclasses.replace(spec.limits, workers=self.workers),
+            )
+        with self._search_sem:
+            with self._lock:
+                self.stats.searching += 1
+                self.stats.peak_searching = max(
+                    self.stats.peak_searching, self.stats.searching
                 )
-            with self._search_sem:
+            try:
+                report = self.astra.search(spec)
+            finally:
                 with self._lock:
-                    self.stats.searching += 1
-                    self.stats.peak_searching = max(
-                        self.stats.peak_searching, self.stats.searching
-                    )
-                try:
-                    report = self.astra.search(spec)
-                finally:
-                    with self._lock:
-                        self.stats.searching -= 1
-            text = report.to_json()
+                    self.stats.searching -= 1
+        return report.to_json()
+
+    def _run_flight(
+        self, key: str, flight: _Flight, produce: Callable[[], str]
+    ) -> None:
+        """Lead one single-flighted fill: run ``produce`` (a cold search or
+        a fleet plan), store the text, and wake every waiter. A plan's
+        ``produce`` must not hold the search semaphore itself — its grid
+        cells re-enter :meth:`search_json`, which does."""
+        try:
+            text = produce()
             try:
                 self.store.put(key, text)
                 with self._lock:
@@ -588,6 +686,69 @@ class SearchService:
 
     def close(self) -> None:
         self.store.close()
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition (GET /metrics)
+# ---------------------------------------------------------------------------
+
+# monotonic stats_dict keys -> *_total counters; everything else numeric in
+# the metric allowlist below is a point-in-time gauge
+_METRIC_COUNTERS = (
+    "hits", "misses", "coalesced", "requests",
+    "store_put_errors", "store_get_errors",
+    "shards", "shard_errors", "traces", "trace_errors",
+    "refits", "stale_hits", "stale_refreshes",
+    "plans", "grid_cells", "grid_warm_hits",
+    "evictions", "expirations", "corruptions",
+)
+_METRIC_GAUGES = (
+    "searching", "peak_searching", "inflight", "entries", "hit_rate",
+    "search_concurrency",
+)
+
+
+def metrics_text(
+    service: "SearchService", auth: Optional["AuthQuota"] = None
+) -> str:
+    """``/v1/stats`` counters in Prometheus text exposition format.
+
+    Cheap by design (tinygrad's global op-counters in spirit): one
+    ``stats_dict()`` snapshot formatted as ``astra_<name>_total`` counters
+    and ``astra_<name>`` gauges, plus per-identity auth counters labeled
+    ``{identity="..."}``. Non-numeric entries (store kind, calibration
+    sub-dict) stay on ``/v1/stats``.
+    """
+    d = service.stats_dict()
+    lines: list[str] = []
+
+    def emit(name: str, kind: str, value, labels: str = "") -> None:
+        if not any(ln.startswith(f"# TYPE {name} ") for ln in lines):
+            lines.append(f"# TYPE {name} {kind}")
+        v = float(value)
+        lines.append(f"{name}{labels} {int(v) if v.is_integer() else v}")
+
+    for k in _METRIC_COUNTERS:
+        v = d.get(k)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            emit(f"astra_{k}_total", "counter", v)
+    for k in _METRIC_GAUGES:
+        v = d.get(k)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            emit(f"astra_{k}", "gauge", v)
+    if auth is not None:
+        a = auth.stats_dict()
+        emit("astra_unauthorized_total", "counter", a["unauthorized"])
+        for ident in sorted(a["tokens"]):
+            t = a["tokens"][ident]
+            labels = '{identity="%s"}' % ident.replace('"', '\\"')
+            emit("astra_token_requests_total", "counter",
+                 t["requests"], labels)
+            emit("astra_token_cold_searches_total", "counter",
+                 t["cold_searches"], labels)
+            emit("astra_token_throttled_total", "counter",
+                 t["throttled"], labels)
+    return "\n".join(lines) + "\n"
 
 
 # ---------------------------------------------------------------------------
@@ -791,6 +952,16 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _reply_text(self, status: int, text: str) -> None:
+        body = text.encode()
+        self.send_response(status)
+        self.send_header(
+            "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+        )
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def _authorize(self) -> tuple[bool, Optional[TokenInfo]]:
         """401/429 gate shared by every endpoint. Returns (admitted, token);
         on False a response has already been sent."""
@@ -834,6 +1005,8 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return self._do_shard(spec_json)
         if url.path == "/v1/traces":
             return self._do_traces(spec_json)
+        if url.path == "/v1/plan":
+            return self._do_plan(spec_json, url, token)
         if url.path != "/v1/search":
             return self._reply(404, {"error": f"unknown path {url.path}"})
         try:
@@ -893,6 +1066,40 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             })
         return self._reply(200, payload)
 
+    def _do_plan(self, body_json: str, url, token: Optional[TokenInfo]):
+        """Fleet planner endpoint: FleetSpec JSON in, FleetPlan envelope out.
+
+        Shares the auth/request-quota gate; the cold quota is charged once
+        per cold *plan*, never per grid cell (see
+        :meth:`SearchService.plan_json`). ``?refresh=stale`` re-plans a
+        cached plan stamped by an outdated eta model."""
+        from repro.fleet.spec import FleetSpec
+
+        try:
+            FleetSpec.from_json(body_json)
+        except Exception as e:
+            return self._reply(400, {"error": f"bad fleet spec: {e}"})
+        query = urllib.parse.parse_qs(url.query)
+        refresh_stale = query.get("refresh", [""])[-1] == "stale"
+        on_cold = (
+            self.auth.cold_hook(token)
+            if self.auth is not None and token is not None else None
+        )
+        try:
+            key, text, cached = self.service.plan_json(
+                body_json, on_cold=on_cold, refresh_stale=refresh_stale
+            )
+            return self._reply(200, {
+                "key": key, "status": "ready", "cached": cached,
+                "plan": json.loads(text),
+            })
+        except QuotaExceeded as e:
+            return self._reply(429, {"error": str(e)})
+        except Exception as e:  # the fleet parsed; this is a planning failure
+            return self._reply(500, {
+                "error": f"plan failed: {type(e).__name__}: {e}"
+            })
+
     def _do_traces(self, body_json: str):
         """Calibration inlet: one StepTrace in, one scoring ack out.
 
@@ -930,6 +1137,10 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             if self.auth is not None:
                 stats["auth"] = self.auth.stats_dict()
             return self._reply(200, stats)
+        if url.path == "/metrics":
+            return self._reply_text(
+                200, metrics_text(self.service, self.auth)
+            )
         prefix = "/v1/results/"
         if url.path.startswith(prefix):
             key = url.path[len(prefix):]
@@ -1010,6 +1221,33 @@ def post_spec(
     return (
         payload["key"],
         SearchReport.from_dict(payload["report"]),
+        bool(payload.get("cached")),
+    )
+
+
+def post_plan(
+    base_url: str,
+    fleet_json: str,
+    *,
+    token: Optional[str] = None,
+    timeout: float = DEFAULT_SEARCH_TIMEOUT,
+    retries: int = DEFAULT_RETRIES,
+) -> tuple[str, "FleetPlan", bool]:  # noqa: F821 (lazy import)
+    """Client half of ``POST /v1/plan``: returns ``(key, plan, cached)``."""
+    from repro.fleet.assign import FleetPlan
+
+    status, payload = _http_json(
+        f"{base_url.rstrip('/')}/v1/plan", fleet_json.encode(),
+        token=token, timeout=timeout, retries=retries,
+    )
+    if status != 200:
+        raise RuntimeError(
+            f"search service answered {status}: "
+            f"{payload.get('error', payload)}"
+        )
+    return (
+        payload["key"],
+        FleetPlan.from_dict(payload["plan"]),
         bool(payload.get("cached")),
     )
 
@@ -1131,6 +1369,42 @@ def _cmd_traces(args) -> int:
     return rc
 
 
+def _cmd_plan(args) -> int:
+    """POST a FleetSpec file to /v1/plan and print the plan summary."""
+    from repro.fleet.spec import FleetSpec
+
+    with open(args.spec) as f:
+        fleet_json = f.read()
+    FleetSpec.from_json(fleet_json)  # fail fast on malformed fleets
+    try:
+        key, plan, cached = post_plan(
+            args.url, fleet_json, token=args.token,
+            timeout=args.timeout, retries=args.retries,
+        )
+    except (RuntimeError, OSError) as e:
+        print(e)
+        return 1
+    print(f"key={key} cached={cached} solver={plan.solver}"
+          f" objective={plan.objective.kind}")
+    for a in plan.assignments:
+        b = a.choice.strategy
+        print(f"  {a.workload} -> {a.pool} ({b.device} x{a.devices}"
+              f" tp={b.tensor_parallel} pp={b.pipeline_parallel}"
+              f" dp={b.data_parallel}): {a.throughput:,.0f} tok/s,"
+              f" ${a.dollars_per_hour:,.2f}/hr, {a.train_hours:,.1f} h,"
+              f" {a.carbon_kg:,.1f} kg CO2e")
+    for u in plan.unassigned:
+        print(f"  {u['workload']}: UNASSIGNED ({u['reason']})")
+    for p in plan.pools:
+        print(f"  pool {p.pool} ({p.device}): {p.used}/{p.capacity} devices"
+              f" used, {p.leftover} left")
+    print(f"  totals: {plan.total_throughput:,.0f} tok/s,"
+          f" ${plan.total_dollars_per_hour:,.2f}/hr,"
+          f" {plan.throughput_per_dollar:,.0f} tok/s per $/hr,"
+          f" {plan.total_carbon_kg:,.1f} kg CO2e")
+    return 0
+
+
 def _cmd_stats(args) -> int:
     try:
         status, payload = _http_json(
@@ -1224,6 +1498,19 @@ def main(argv=None) -> int:
                    metavar="SECONDS")
     p.add_argument("--retries", type=int, default=DEFAULT_RETRIES)
     p.set_defaults(fn=_cmd_traces)
+
+    p = sub.add_parser("plan",
+                       help="POST a FleetSpec file to /v1/plan")
+    p.add_argument("--url", required=True)
+    p.add_argument("--spec", required=True, metavar="FLEET_JSON")
+    p.add_argument("--token", default=None,
+                   help="bearer token for an auth-enabled service")
+    p.add_argument("--timeout", type=float, default=DEFAULT_SEARCH_TIMEOUT,
+                   metavar="SECONDS",
+                   help="connect/read timeout; a cold plan blocks for the "
+                        "whole grid search (default %(default)s)")
+    p.add_argument("--retries", type=int, default=DEFAULT_RETRIES)
+    p.set_defaults(fn=_cmd_plan)
 
     p = sub.add_parser("stats", help="print /v1/stats of a running service")
     p.add_argument("--url", required=True)

@@ -1,0 +1,448 @@
+"""Fleet capacity planner: spec identity, grid reuse, solver invariants,
+and the /v1/plan + /metrics endpoints.
+
+The tier-1 acceptance checks live here: a 2-pool / 3-job fleet yields a
+plan that (a) never exceeds pool capacity, (b) aggregates at least the
+naive single-pool-per-job baseline, (c) round-trips through the wire
+format bit for bit, and (d) re-plans from a warm grid with *zero* engine
+re-searches (probed with CountingAstra call counters). Solver unit tests
+run on synthetic options against an independent brute-force enumeration —
+no searches at all."""
+import dataclasses
+import itertools
+import json
+import urllib.request
+
+import pytest
+
+from harness_service import CountingAstra, http_service, request as _request
+from repro.core.spec import Limits
+from repro.fleet import (
+    FleetObjective,
+    FleetPlan,
+    FleetSpec,
+    FleetWorkload,
+    GpuPool,
+    Option,
+    grid_cells,
+    search_grid,
+)
+from repro.fleet import assign as fassign
+from repro.serve.search_service import AuthQuota, SearchService, TokenInfo
+
+SEQ = 512
+SMALL_SPACE = {
+    "tensor_parallel": [1, 2, 4],
+    "pipeline_parallel": [1, 2],
+    "micro_batch_size": [1, 2],
+    "use_distributed_optimizer": [False, True],
+    "recompute_granularity": ["none", "full"],
+}
+
+
+def _fleet(arch, **kw) -> FleetSpec:
+    def wl(name, gb, **wkw):
+        return FleetWorkload(name, arch, gb, SEQ, space=SMALL_SPACE, **wkw)
+
+    return FleetSpec(
+        pools=(GpuPool("a800-pool", "A800", 8),
+               GpuPool("h100-pool", "H100", 4, price_per_hour=3.50)),
+        workloads=(wl("job-a", 32), wl("job-b", 64, priority=2),
+                   wl("job-c", 16)),
+        **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def planned(request):
+    """One cold plan through a real service — shared by the read-only
+    acceptance assertions (the expensive part runs once)."""
+    arch = request.getfixturevalue("tiny_dense")
+    engine = CountingAstra()
+    service = SearchService(engine)
+    fleet = _fleet(arch)
+    key, text, cached = service.plan_json(fleet.to_json())
+    assert cached is False
+    return service, engine, fleet, key, text
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec wire + identity
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_roundtrip_bitexact(tiny_dense):
+    fleet = _fleet(tiny_dense, objective=FleetObjective.carbon(50.0))
+    text = fleet.to_json()
+    assert FleetSpec.from_json(text).to_json() == text
+
+
+def test_cache_key_invariant_under_permutation(tiny_dense):
+    fleet = _fleet(tiny_dense)
+    shuffled = dataclasses.replace(
+        fleet, pools=tuple(reversed(fleet.pools)),
+        workloads=tuple(reversed(fleet.workloads)),
+    )
+    assert shuffled.cache_key() == fleet.cache_key()
+
+
+def test_cache_key_sees_content_not_execution_limits(tiny_dense):
+    fleet = _fleet(tiny_dense)
+    assert dataclasses.replace(
+        fleet, limits=Limits(workers=4)
+    ).cache_key() == fleet.cache_key()
+    bigger = dataclasses.replace(
+        fleet, pools=(dataclasses.replace(fleet.pools[0], capacity=16),
+                      fleet.pools[1]),
+    )
+    assert bigger.cache_key() != fleet.cache_key()
+
+
+def test_fleet_spec_validation(tiny_dense):
+    wl = FleetWorkload("w", tiny_dense, 32, SEQ)
+    pool = GpuPool("p", "A800", 8)
+    with pytest.raises(ValueError, match="duplicate pool"):
+        FleetSpec(pools=(pool, GpuPool("p", "H100", 4)), workloads=(wl,))
+    with pytest.raises(ValueError, match="duplicate workload"):
+        FleetSpec(pools=(pool,), workloads=(wl, wl))
+    with pytest.raises(ValueError, match="at least one workload"):
+        FleetSpec(pools=(pool,), workloads=())
+    with pytest.raises(ValueError, match="capacity"):
+        GpuPool("p", "A800", 0)
+    with pytest.raises(ValueError, match="unknown fleet objective"):
+        FleetObjective("cheapest")
+    with pytest.raises(ValueError, match="carbon_budget_kg only applies"):
+        FleetObjective("throughput", carbon_budget_kg=10.0)
+
+
+# ---------------------------------------------------------------------------
+# the planned fleet: acceptance criteria (a)-(d)
+# ---------------------------------------------------------------------------
+
+def test_plan_respects_capacity(planned):
+    _, _, fleet, _, text = planned
+    plan = FleetPlan.from_json(text)
+    assert len(plan.assignments) == 3 and not plan.unassigned
+    used = {p.name: 0 for p in fleet.pools}
+    for a in plan.assignments:
+        used[a.pool] += a.devices
+    for pu in plan.pools:
+        assert pu.used == used[pu.pool]
+        assert 0 <= pu.used <= pu.capacity
+        assert pu.leftover == pu.capacity - pu.used
+
+
+def test_plan_wire_roundtrip_bitexact(planned):
+    _, _, _, _, text = planned
+    assert FleetPlan.from_json(text).to_json() == text
+
+
+def test_plan_beats_naive_baseline(planned):
+    service, _, fleet, _, text = planned
+    plan = FleetPlan.from_json(text)
+    canon = fleet.canonical()
+    cells, _, _ = search_grid(service, fleet)  # warm replay of the grid
+    options, _ = fassign.build_options(canon, cells)
+    naive = fassign._naive(canon, options, canon.objective)
+    naive_score = fassign._score(canon, options, canon.objective, naive)
+    _, thr, dph, _ = fassign._totals(canon, options, naive)
+    assert plan.total_throughput > 0
+    assert (plan.throughput_per_dollar
+            >= fassign._value(thr, dph, canon.objective))
+    # the winning candidate scores at least the naive candidate
+    got = (sum(fleet.workloads[i].priority for i in range(3)),
+           plan.throughput_per_dollar)
+    assert got >= naive_score[:2]
+
+
+def test_warm_plan_cached_and_byte_identical(planned):
+    service, engine, fleet, key, text = planned
+    calls = engine.calls
+    key2, text2, cached = service.plan_json(fleet.to_json())
+    assert (key2, cached) == (key, True)
+    assert text2 == text
+    assert engine.calls == calls
+
+
+def test_permuted_fleet_hits_same_plan(planned):
+    service, engine, fleet, key, text = planned
+    calls = engine.calls
+    shuffled = dataclasses.replace(
+        fleet, pools=tuple(reversed(fleet.pools)),
+        workloads=tuple(reversed(fleet.workloads)),
+    )
+    key2, text2, cached = service.plan_json(shuffled.to_json())
+    assert (key2, text2, cached) == (key, text, True)
+    assert engine.calls == calls
+
+
+def test_replan_from_warm_grid_runs_zero_searches(planned):
+    """Acceptance (d): evict the plan, keep the grid — the re-plan must be
+    byte-identical to the cold plan without a single engine search."""
+    service, engine, fleet, key, text = planned
+    service.store.delete(key)
+    calls = engine.calls
+    warm_before = service.stats.grid_warm_hits
+    key2, text2, cached = service.plan_json(fleet.to_json())
+    assert (key2, cached) == (key, False)
+    assert text2 == text  # warm-grid plan == cold plan, bit for bit
+    assert engine.calls == calls  # zero re-searches
+    assert (service.stats.grid_warm_hits - warm_before
+            == len(grid_cells(fleet)))
+
+
+def test_incremental_replan_searches_only_new_cells(planned):
+    service, engine, fleet, _, _ = planned
+    grown = dataclasses.replace(
+        fleet, workloads=fleet.workloads + (
+            FleetWorkload("job-d", fleet.workloads[0].arch, 48, SEQ,
+                          space=SMALL_SPACE),
+        ),
+    )
+    calls = engine.calls
+    _, text, cached = service.plan_json(grown.to_json())
+    assert cached is False
+    assert engine.calls == calls + len(fleet.pools)  # only job-d's cells
+    assert len(FleetPlan.from_json(text).assignments) == 4
+
+
+def test_plan_counts_merge_distinct_cells(planned):
+    service, _, fleet, _, text = planned
+    plan = FleetPlan.from_json(text)
+    _, _, merged = search_grid(service, fleet)
+    assert plan.counts.to_dict() == merged.to_dict()
+    assert plan.counts.generated > 0
+
+
+def test_deadline_filters_to_unassigned(planned):
+    """An impossible deadline drops every placement — the job lands in
+    ``unassigned`` with the deadline reason. Cells stay warm (the deadline
+    is an assignment parameter, not a search parameter)."""
+    service, engine, fleet, _, _ = planned
+    calls = engine.calls
+    doomed = dataclasses.replace(
+        fleet, workloads=tuple(
+            dataclasses.replace(w, deadline_hours=1e-9)
+            if w.name == "job-c" else w
+            for w in fleet.workloads
+        ),
+    )
+    _, text, _ = service.plan_json(doomed.to_json())
+    plan = FleetPlan.from_json(text)
+    assert engine.calls == calls
+    assert [u["workload"] for u in plan.unassigned] == ["job-c"]
+    assert plan.unassigned[0]["reason"] == \
+        "deadline_hours filters every placement"
+    assert len(plan.assignments) == 2
+
+
+# ---------------------------------------------------------------------------
+# solver invariants on synthetic options (no searches)
+# ---------------------------------------------------------------------------
+
+def _synthetic(arch, pools, names, priorities=None):
+    priorities = priorities or [1] * len(names)
+    return FleetSpec(
+        pools=tuple(GpuPool(n, "A800", cap) for n, cap in pools),
+        workloads=tuple(
+            FleetWorkload(n, arch, 32, SEQ, priority=p)
+            for n, p in zip(names, priorities)
+        ),
+    ).canonical()
+
+
+def _opt(w, pool, devices, thr, dph=1.0, carbon=0.0):
+    return Option(workload=w, pool=pool, devices=devices, choice=None,
+                  throughput=thr, dollars_per_hour=dph, money=0.0,
+                  train_hours=1.0, carbon_kg=carbon)
+
+
+def _brute_force(canon, options, objective):
+    """Independent optimum: enumerate every (option|skip) combination."""
+    best = None
+    choices = [[None] + list(range(len(options[w.name])))
+               for w in canon.workloads]
+    for assign in itertools.product(*choices):
+        cap = {p.name: p.capacity for p in canon.pools}
+        ok = True
+        for i, j in enumerate(assign):
+            if j is None:
+                continue
+            o = options[canon.workloads[i].name][j]
+            cap[o.pool] -= o.devices
+            if cap[o.pool] < 0:
+                ok = False
+                break
+        if not ok:
+            continue
+        score = fassign._score(canon, options, objective, list(assign))
+        if score is None:
+            continue
+        sig = fassign._signature(assign)
+        if (best is None or score > best[0]
+                or (score == best[0] and sig < best[1])):
+            best = (score, sig)
+    return best
+
+
+def test_exhaustive_matches_brute_force(tiny_dense):
+    import random
+
+    rng = random.Random(7)
+    for trial in range(25):
+        n_pools = rng.randint(1, 3)
+        pools = [(f"p{k}", rng.randint(2, 6)) for k in range(n_pools)]
+        names = [f"w{k}" for k in range(3)]
+        prios = [rng.randint(1, 3) for _ in names]
+        canon = _synthetic(tiny_dense, pools, names, prios)
+        objective = rng.choice([FleetObjective.throughput(),
+                                FleetObjective.throughput_per_dollar()])
+        canon = dataclasses.replace(canon, objective=objective)
+        options = {}
+        for w in names:
+            opts = [
+                _opt(w, f"p{rng.randrange(n_pools)}", rng.randint(1, 4),
+                     thr=rng.randint(10, 100) * 1.0,
+                     dph=rng.randint(1, 8) * 1.0)
+                for _ in range(rng.randint(0, 3))
+            ]
+            opts.sort(key=lambda o: (-o.throughput, o.dollars_per_hour,
+                                     o.pool, o.devices))
+            options[w] = opts
+        exh = fassign._exhaustive(canon, options, objective)
+        exh_score = fassign._score(canon, options, objective, exh)
+        ref = _brute_force(canon, options, objective)
+        assert exh_score == ref[0], f"trial {trial}"
+        assert fassign._signature(exh) == ref[1], f"trial {trial}"
+        for solver in (fassign._greedy, fassign._naive):
+            s = fassign._score(canon, options, objective,
+                               solver(canon, options, objective))
+            assert s is not None and s <= exh_score, f"trial {trial}"
+
+
+def test_greedy_priority_wins_scarce_capacity(tiny_dense):
+    canon = _synthetic(tiny_dense, [("p0", 2)], ["hi", "lo"], [5, 1])
+    options = {"hi": [_opt("hi", "p0", 2, thr=10.0)],
+               "lo": [_opt("lo", "p0", 2, thr=100.0)]}
+    for solver in (fassign._greedy, fassign._exhaustive):
+        assign = solver(canon, options, canon.objective)
+        picked = {canon.workloads[i].name
+                  for i, j in enumerate(assign) if j is not None}
+        assert picked == {"hi"}, solver.__name__
+
+
+def test_greedy_regret_places_inflexible_job_first(tiny_dense):
+    """The single-option job (infinite regret) claims its only slot before
+    the flexible job eats it — greedy finds the 2-job packing."""
+    canon = _synthetic(tiny_dense, [("p0", 2), ("p1", 2)], ["flex", "stuck"])
+    options = {
+        "flex": [_opt("flex", "p0", 2, thr=100.0),
+                 _opt("flex", "p1", 2, thr=90.0)],
+        "stuck": [_opt("stuck", "p0", 2, thr=50.0)],
+    }
+    objective = FleetObjective.throughput()
+    canon = dataclasses.replace(canon, objective=objective)
+    assign = fassign._greedy(canon, options, objective)
+    _, thr, _, _ = fassign._totals(canon, options, assign)
+    assert thr == 140.0  # stuck->p0, flex->p1; not flex->p0 + stuck dropped
+
+
+def test_carbon_budget_is_a_hard_constraint(tiny_dense):
+    objective = FleetObjective.carbon(10.0)
+    canon = dataclasses.replace(
+        _synthetic(tiny_dense, [("p0", 8)], ["a", "b", "c"]),
+        objective=objective,
+    )
+    options = {
+        "a": [_opt("a", "p0", 2, thr=100.0, carbon=6.0)],
+        "b": [_opt("b", "p0", 2, thr=90.0, carbon=6.0)],
+        "c": [_opt("c", "p0", 2, thr=10.0, carbon=3.0)],
+    }
+    over = fassign._score(canon, options, objective, [0, 0, 0])
+    assert over is None  # 15 kg > 10 kg budget: infeasible, never ships
+    for solver in (fassign._exhaustive, fassign._greedy, fassign._naive):
+        assign = solver(canon, options, objective)
+        _, _, _, carbon = fassign._totals(canon, options, assign)
+        assert carbon <= 10.0, solver.__name__
+
+
+def test_solve_falls_back_to_greedy_above_exhaustive_limit(planned):
+    service, _, fleet, _, text = planned
+    cells, _, counts = search_grid(service, fleet)
+    plan = fassign.solve(fleet, cells, counts, exhaustive_limit=1)
+    assert plan.solver in ("greedy", "naive")
+    exact = FleetPlan.from_json(text)
+    assert plan.total_throughput <= exact.total_throughput or \
+        plan.throughput_per_dollar <= exact.throughput_per_dollar
+
+
+# ---------------------------------------------------------------------------
+# HTTP: POST /v1/plan + GET /metrics
+# ---------------------------------------------------------------------------
+
+def _small_fleet(arch):
+    return FleetSpec(
+        pools=(GpuPool("a800-pool", "A800", 4),),
+        workloads=(FleetWorkload("solo", arch, 16, SEQ, space=SMALL_SPACE),),
+    )
+
+
+def _get_text(url: str, token=None) -> tuple[int, str, str]:
+    headers = {"Authorization": f"Bearer {token}"} if token else {}
+    req = urllib.request.Request(url, headers=headers)
+    with urllib.request.urlopen(req) as resp:
+        return (resp.status, resp.read().decode(),
+                resp.headers.get("Content-Type", ""))
+
+
+def test_http_plan_and_metrics(tiny_dense):
+    engine = CountingAstra()
+    service = SearchService(engine)
+    auth = AuthQuota([TokenInfo("tok-a", "alice")])
+    fleet_json = _small_fleet(tiny_dense).to_json()
+    with http_service(service, auth=auth) as base:
+        status, body = _request(f"{base}/v1/plan",
+                                fleet_json.encode(), token="tok-a")
+        assert status == 200 and body["status"] == "ready"
+        assert body["cached"] is False
+        plan = FleetPlan.from_dict(body["plan"])
+        assert [a.workload for a in plan.assignments] == ["solo"]
+
+        status2, body2 = _request(f"{base}/v1/plan",
+                                  fleet_json.encode(), token="tok-a")
+        assert status2 == 200 and body2["cached"] is True
+        assert body2["plan"] == body["plan"]
+        assert body2["key"] == body["key"]
+
+        status3, body3 = _request(f"{base}/v1/plan", b"{\"version\": 1}",
+                                  token="tok-a")
+        assert status3 == 400 and "bad fleet spec" in body3["error"]
+
+        status4, _ = _request(f"{base}/v1/plan", fleet_json.encode())
+        assert status4 == 401  # no token
+
+        code, text, ctype = _get_text(f"{base}/metrics", token="tok-a")
+        assert code == 200
+        assert ctype.startswith("text/plain") and "version=0.0.4" in ctype
+        lines = text.splitlines()
+        assert "# TYPE astra_plans_total counter" in lines
+        assert "astra_plans_total 1" in lines
+        assert "astra_grid_cells_total 1" in lines
+        assert "astra_grid_warm_hits_total 0" in lines
+        assert any(ln.startswith("astra_misses_total ") for ln in lines)
+        assert "# TYPE astra_hit_rate gauge" in lines
+        assert 'astra_token_requests_total{identity="alice"}' in text
+        assert "astra_unauthorized_total 1" in lines
+    assert engine.calls == 1
+
+
+def test_metrics_text_is_float_safe(tiny_dense):
+    service = SearchService(CountingAstra())
+    from repro.serve.search_service import metrics_text
+
+    text = metrics_text(service)
+    for ln in text.splitlines():
+        if ln.startswith("#"):
+            continue
+        name, value = ln.rsplit(" ", 1)
+        float(value)  # every sample parses as a number
+    assert text.endswith("\n")

@@ -67,6 +67,32 @@ def test_jitted_callables_are_exercised_and_compiled_once(engine_setup):
     assert real_decode._cache_size() == 1
 
 
+def test_step_times_measure_each_decode_step(engine_setup):
+    """generate records one positive wall-time per generated token — the
+    raw material for a source="serve" calibration StepTrace."""
+    arch, cfg, params = engine_setup
+    engine = ServeEngine(arch, cfg, params, max_len=16)
+    steps = 4
+    result = engine.generate(_prompts(arch.vocab), max_new_tokens=steps)
+    assert isinstance(result.step_times, tuple)
+    assert len(result.step_times) == steps
+    assert all(t > 0 for t in result.step_times)
+
+    from repro.calibration.traces import StepTrace
+    from repro.core.params import ParallelStrategy
+
+    trace = StepTrace(
+        arch=arch,
+        strategy=ParallelStrategy(device="tpu-v5e", num_devices=1,
+                                  micro_batch_size=2),
+        global_batch=2, seq=5 + steps,
+        step_times=result.step_times, source="serve",
+    )
+    text = trace.to_json()
+    assert StepTrace.from_json(text).to_json() == text
+    assert trace.measured_step_time > 0
+
+
 def test_greedy_generation_is_deterministic(engine_setup):
     arch, cfg, params = engine_setup
     engine = ServeEngine(arch, cfg, params, max_len=16)
