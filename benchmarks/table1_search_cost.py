@@ -40,6 +40,14 @@ the cached plan (zero searches, byte-identical plan), and re-planned
 incrementally after one new job arrives (only the new job's cells are
 searched — the queue grows, the paid-for grid stays paid for).
 
+``table1-serving`` rows put the serving-workload path on the same cost
+axis: a batched-inference spec (prefill + decode under a per-token SLO)
+searched cold on a device sweep, then the pool shrunk and re-searched
+through ``POST /v1/search?elastic=1`` — the elastic row reports the
+warm-start funnel (prior winners re-simulated, only the newly-feasible
+region streamed) against the cold re-search it replaces, with the winning
+deployment asserted identical.
+
 ``table1-fleet`` rows cross the host boundary: the mode-3 sweep searched
 through real HTTP workers (forked service processes answering
 ``POST /v1/shard``) at 1/2/4 workers via :class:`repro.core.backend.
@@ -69,8 +77,10 @@ from repro.core import (
     DeviceSweep,
     FixedPool,
     HeteroCaps,
+    InferenceShape,
     Limits,
     ObjectiveSpec,
+    SearchReport,
     SearchSpec,
     Workload,
 )
@@ -281,6 +291,65 @@ def _pool_spinup_rows(eta, model: str, spec: SearchSpec) -> list[dict]:
         "spinup_delta_s": round(cold_s - warm_s, 3),
         "pool_spinups_across_3_searches": spinups,
     }]
+
+
+def serving_elastic_rows(eta) -> list[dict]:
+    """Serving-workload search cost + the elastic re-search saving.
+
+    One batched-inference spec (per-token latency SLO) searched cold at 64
+    devices, then the pool shrunk to 32 and re-searched elastically (warm
+    start from the prior report) vs cold (fresh service, no prior). The
+    winning deployment must agree; the funnel counters are the saving.
+    """
+    inf = InferenceShape(prefill_len=512, decode_len=128, slo_per_token=0.5)
+
+    def spec_for(n: int) -> SearchSpec:
+        return SearchSpec(
+            arch=PAPER_MODELS["llama2-7b"],
+            pool=DeviceSweep(("A800", "H100"), max_devices=n, min_devices=2),
+            workload=Workload(global_batch=64, seq=4096, inference=inf),
+            objective=ObjectiveSpec.latency(),
+        )
+
+    service = SearchService(Astra(eta))
+    t0 = time.perf_counter()
+    cold64 = service.search(spec_for(64))
+    cold64_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    _, elastic_text, _ = service.search_json(
+        spec_for(32).to_json(), elastic=True
+    )
+    elastic_s = time.perf_counter() - t0
+    elastic32 = SearchReport.from_json(elastic_text)
+    assert service.stats_dict()["elastic_warm_starts"] == 1
+
+    cold_service = SearchService(Astra(eta))  # no prior: a true cold re-search
+    t0 = time.perf_counter()
+    cold32 = cold_service.search(spec_for(32))
+    cold32_s = time.perf_counter() - t0
+    assert elastic32.best == cold32.best, "elastic winner diverged from cold"
+    assert elastic32.evaluated < cold32.evaluated
+
+    def row(tag: str, rep: SearchReport, secs: float) -> dict:
+        return {
+            "bench": "table1-serving",
+            "model": "llama2-7b",
+            "search": tag,
+            "generated": rep.counts.generated,
+            "evaluated": rep.evaluated,
+            "e2e_s": round(secs, 3),
+            "best_device": rep.best.device if rep.best else None,
+            "best_gpus": rep.best.num_devices if rep.best else 0,
+            "decode_tok_s": round(rep.best_sim.step_time, 6)
+            if rep.best_sim else None,
+        }
+
+    shrink = row("elastic-32", elastic32, elastic_s)
+    shrink["evals_saved"] = cold32.evaluated - elastic32.evaluated
+    shrink["speedup_vs_cold"] = round(cold32_s / max(elastic_s, 1e-9), 1)
+    return [row("cold-64", cold64, cold64_s),
+            row("cold-32", cold32, cold32_s), shrink]
 
 
 def planner_rows(eta) -> list[dict]:
@@ -532,7 +601,10 @@ def run(eta) -> list[dict]:
     # fleet execution over HTTP workers + warm-pool spin-up delta
     flt_rows = fleet_rows(eta)
 
+    # serving-workload search + elastic re-search saving
+    serve_rows = serving_elastic_rows(eta)
+
     # fleet capacity planner: cold grid / warm grid / incremental re-plan
     plan_rows = planner_rows(eta)
     return (rows + engine_rows + service_rows + persist_rows + par_rows
-            + flt_rows + plan_rows)
+            + flt_rows + serve_rows + plan_rows)

@@ -274,3 +274,36 @@ assert replan.to_json() == fleet_plan.to_json()
 s = service.stats_dict()
 print(f"[planner] warm re-plan byte-identical; grid cells {s['grid_cells']}, "
       f"warm {s['grid_warm_hits']}, plans {s['plans']}")
+
+# ---- serving workloads + elastic re-search --------------------------------
+# A Workload with an InferenceShape searches a *deployment* instead of a
+# training run: the cost model scores one dense prefill plus per-token
+# decode steps (KV-cache-bound), and a latency objective picks the
+# cheapest plan meeting the per-token SLO.
+from repro.core import InferenceShape
+
+serving = SearchSpec(
+    arch=llama7b,
+    pool=DeviceSweep(("A800", "H100"), max_devices=64),
+    workload=Workload(global_batch=64, seq=4096, inference=InferenceShape(
+        prefill_len=512, decode_len=128, slo_per_token=0.05,
+    )),
+    objective=ObjectiveSpec.latency(),  # SLO defaults to slo_per_token
+)
+srv_rep = service.search(serving)
+sb = srv_rep.best
+print(f"\n[serving] <=64 GPUs, 50ms/token SLO: {sb.device} x{sb.num_devices} "
+      f"(tp={sb.tensor_parallel} pp={sb.pipeline_parallel}), "
+      f"{srv_rep.best_sim.step_time * 1e3:.1f} ms/token, "
+      f"TTFT {srv_rep.best_sim.pipeline_time * 1e3:.0f} ms")
+
+# the pool shrinks (half the sweep is gone): ?elastic=1 warm-starts from
+# the prior report of the same search *family* (the spec minus its pool) —
+# prior winners re-simulate, only newly-feasible cells stream, and the
+# funnel counters prove the saving
+shrunk = dataclasses.replace(serving, pool=DeviceSweep(("A800", "H100"), 32))
+_, text, _ = service.search_json(shrunk.to_json(), elastic=True)
+er = _json.loads(text)
+print(f"[elastic] pool 64 -> 32: re-searched with {er['evaluated']} "
+      f"evaluations (cold was {srv_rep.evaluated}); "
+      f"warm starts: {service.stats_dict()['elastic_warm_starts']}")

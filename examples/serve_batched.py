@@ -129,7 +129,11 @@ def main():
         print(f"  req{i}: prompt={row[:args.prompt_len].tolist()[:8]}... "
               f"generated={row[args.prompt_len:].tolist()}")
 
-    if args.emit_traces and result.step_times:
+    # drop the jit-compile warmup steps before the trace ships to the
+    # calibration loop — a compile-polluted step time skews drift scoring
+    # toward spurious refits; the exclusion is recorded on the trace
+    clean_steps = result.step_times[result.warmup_steps:]
+    if args.emit_traces and clean_steps:
         from repro.calibration.traces import StepTrace, append_trace
         from repro.core.params import ParallelStrategy
 
@@ -143,12 +147,16 @@ def main():
         trace = StepTrace(
             arch=arch, strategy=strategy,
             global_batch=args.batch, seq=args.prompt_len + args.tokens,
-            step_times=result.step_times, source="serve",
+            step_times=clean_steps, source="serve",
+            warmup_steps_excluded=result.warmup_steps,
         )
         append_trace(args.emit_traces, trace)
-        print(f"[trace] appended {len(result.step_times)}-step serve trace "
-              f"(median {trace.measured_step_time:.4f}s) to "
-              f"{args.emit_traces}")
+        print(f"[trace] appended {len(clean_steps)}-step serve trace "
+              f"({result.warmup_steps} warmup step(s) excluded, median "
+              f"{trace.measured_step_time:.4f}s) to {args.emit_traces}")
+    elif args.emit_traces:
+        print("[trace] nothing to append: every measured step was a "
+              "compile warmup")
 
 
 if __name__ == "__main__":

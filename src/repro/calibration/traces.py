@@ -46,6 +46,11 @@ class StepTrace:
     # plain step timers, populated by profiler replays (replay_profile)
     compute_samples: tuple = ()
     comm_samples: tuple = ()
+    # how many jit-compile warmup steps the emitter measured and DROPPED
+    # before building step_times (sparse on the wire; 0 for emitters that
+    # never saw a compile). Records the exclusion so drift scoring knows the
+    # trace is already clean
+    warmup_steps_excluded: int = 0
 
     def __post_init__(self):
         if self.source not in TRACE_SOURCES:
@@ -54,6 +59,11 @@ class StepTrace:
             )
         if not self.step_times:
             raise ValueError("a StepTrace needs at least one step time")
+        if self.warmup_steps_excluded < 0:
+            raise ValueError(
+                f"warmup_steps_excluded must be >= 0, "
+                f"got {self.warmup_steps_excluded}"
+            )
         object.__setattr__(
             self, "step_times", tuple(float(t) for t in self.step_times)
         )
@@ -105,6 +115,8 @@ class StepTrace:
                 {"op": dataclasses.asdict(op), "t": wire.dump_float(t)}
                 for op, t in self.comm_samples
             ]
+        if self.warmup_steps_excluded:
+            d["warmup_steps_excluded"] = self.warmup_steps_excluded
         return d
 
     @classmethod
@@ -125,6 +137,7 @@ class StepTrace:
                 (CommOp(**e["op"]), wire.load_float(e["t"]))
                 for e in d.get("comm_samples", ())
             ),
+            warmup_steps_excluded=int(d.get("warmup_steps_excluded", 0)),
         )
 
     def to_json(self) -> str:

@@ -47,6 +47,7 @@ from repro.core.spec import (
     DeviceSweep,
     FixedPool,
     HeteroCaps,
+    InferenceShape,
     Limits,
     ObjectiveSpec,
     SearchSpec,
@@ -63,6 +64,7 @@ __all__ = [
     "FleetError",
     "SearchSpec",
     "Workload",
+    "InferenceShape",
     "FixedPool",
     "HeteroCaps",
     "DeviceSweep",

@@ -113,6 +113,12 @@ class SearchReport:
     simulate_seconds: float
     pool: list[CostedStrategy] = dataclasses.field(default_factory=list)
     evaluated: int = 0  # candidates streamed through the evaluator
+    # per-(device, num_devices) champions under the objective's key — one
+    # entry per pool cell, sorted by cell. Top-k keeps the global winners
+    # (often all in one cell); the champions keep every *covered* cell's
+    # best, which is what elastic re-search warm-starts from when the pool
+    # shrinks (repro.core.elastic)
+    cells: list[CostedStrategy] = dataclasses.field(default_factory=list)
     # content-hash version of the eta model that ranked this report (see
     # repro.calibration.registry); None for engines that don't declare one
     eta_model_version: Optional[str] = None
@@ -141,6 +147,9 @@ class SearchReport:
         # sparse: pre-calibration wire bytes are unchanged when unstamped
         if self.eta_model_version is not None:
             d["eta_model_version"] = self.eta_model_version
+        # sparse: pre-elastic report bytes are unchanged when empty
+        if self.cells:
+            d["cells"] = [c.to_dict() for c in self.cells]
         return d
 
     def to_json(self, *, indent: Optional[int] = None) -> str:
@@ -163,6 +172,7 @@ class SearchReport:
             pool=[CostedStrategy.from_dict(c) for c in d.get("pool", [])],
             evaluated=int(d.get("evaluated", 0)),
             eta_model_version=d.get("eta_model_version"),
+            cells=[CostedStrategy.from_dict(c) for c in d.get("cells", [])],
         )
 
     @classmethod
@@ -276,7 +286,8 @@ class Astra:
         """
         t0 = time.perf_counter()
         objective = make_objective(
-            spec.objective, train_tokens=spec.workload.train_tokens
+            spec.objective, train_tokens=spec.workload.train_tokens,
+            inference=spec.workload.inference,
         )
         backend = self._backend_for(spec)
         collector, counts, evaluated = backend.run(spec, objective)
@@ -295,7 +306,24 @@ class Astra:
             pool=pool,
             evaluated=evaluated,
             eta_model_version=self.eta_version,
+            cells=collector.cells.sorted(),
         )
+
+    def search_elastic(
+        self,
+        spec: SearchSpec,
+        prior_spec: SearchSpec,
+        prior: SearchReport,
+    ) -> Optional[SearchReport]:
+        """Warm-start ``spec`` from a prior report of the same search
+        family (:meth:`~repro.core.spec.SearchSpec.family_key`) on a
+        different pool: re-simulate the prior winners that still fit, and
+        stream only the newly-feasible region (see
+        :mod:`repro.core.elastic`). Returns ``None`` when the warm start
+        doesn't apply — the caller runs :meth:`search` cold instead."""
+        from repro.core.elastic import elastic_search
+
+        return elastic_search(self, spec, prior_spec, prior)
 
     # -- fleet worker half -------------------------------------------------
     def run_shard(

@@ -123,7 +123,8 @@ def evaluate_shard(
     i, n = shard
     plan = build_plan(spec, rules=rules, filters=filters)
     objective = make_objective(
-        spec.objective, train_tokens=spec.workload.train_tokens
+        spec.objective, train_tokens=spec.workload.train_tokens,
+        inference=spec.workload.inference,
     )
     collector = objective.collector(spec.limits.top_k)
     if engine is None:
@@ -137,6 +138,7 @@ def evaluate_shard(
             lambda c, seq, si=si: collector.push(c, seq=(si,) + seq),
             global_batch=w.global_batch, seq=w.seq,
             train_tokens=w.train_tokens, chunk_size=chunk_size,
+            inference=w.inference,
         )
     return collector, plan.counts, evaluated
 
@@ -162,6 +164,9 @@ def dump_shard_payload(
         "pool": [
             (list(seq), c.to_dict()) for seq, c in collector.pool.entries()
         ] if collector.pool is not None else [],
+        "cells": [
+            (list(seq), c.to_dict()) for seq, c in collector.cells.entries()
+        ],
         "counts": counts.to_dict(),
         "evaluated": evaluated,
     }
@@ -197,6 +202,8 @@ def load_shard_payload(
     if collector.pool is not None:
         for seq, d in payload.get("pool", []):
             collector.pool.push(CostedStrategy.from_dict(d), seq=tuple(seq))
+    for seq, d in payload.get("cells", []):
+        collector.cells.push(CostedStrategy.from_dict(d), seq=tuple(seq))
     counts = SearchCounts.from_dict(payload["counts"])
     return collector, counts, int(payload["evaluated"])
 
@@ -213,6 +220,8 @@ def merge_shard_payload(
     if collector.pool is not None:
         for seq, d in p.get("pool", []):
             collector.pool.push(CostedStrategy.from_dict(d), seq=tuple(seq))
+    for seq, d in p.get("cells", []):
+        collector.cells.push(CostedStrategy.from_dict(d), seq=tuple(seq))
     return int(p["evaluated"])
 
 
@@ -296,6 +305,24 @@ class SerialBackend(ExecutionBackend):
     def _shared_engine(self):
         return self.batched if self.use_batched else self.simulator
 
+    def _get_bank(self, spec: SearchSpec) -> FilterBank:
+        """Memoized FilterBank for this spec's filter identity. Serving
+        specs key on the inference shape too (their memory verdicts differ
+        from the training ones at the same arch/seq), and on global_batch,
+        which sizes the default request mix."""
+        w = spec.workload
+        key = (
+            spec.arch, w.seq, w.inference,
+            w.global_batch if w.inference is not None else None,
+        )
+        bank = self._banks.get(key)
+        if bank is None:
+            bank = self._banks[key] = FilterBank(
+                spec.arch, w.seq, self.rules,
+                inference=w.inference, global_batch=w.global_batch,
+            )
+        return bank
+
     def run(
         self, spec: SearchSpec, objective
     ) -> tuple[Collector, SearchCounts, int]:
@@ -322,6 +349,7 @@ class SerialBackend(ExecutionBackend):
                     engine, spec.arch, timed(it, plan.counts), collector.push,
                     global_batch=w.global_batch, seq=w.seq,
                     train_tokens=w.train_tokens, chunk_size=chunk_size,
+                    inference=w.inference,
                 )
         finally:
             if locked:
@@ -350,12 +378,7 @@ class SerialBackend(ExecutionBackend):
         try:
             if locked:
                 engine = self._shared_engine()
-                key = (spec.arch, spec.workload.seq)
-                bank = self._banks.get(key)
-                if bank is None:
-                    bank = self._banks[key] = FilterBank(
-                        spec.arch, spec.workload.seq, self.rules
-                    )
+                bank = self._get_bank(spec)
             else:
                 engine, bank = _make_engine(self.eta, self.use_batched), None
             collector, counts, evaluated = evaluate_shard(
@@ -399,11 +422,16 @@ def _pool_shard(ctx_id: int, spec_json: str, i: int, n: int,
     if engine is None:
         engine = _WORKER_ENGINES[ctx_id] = _make_engine(eta_model, use_batched)
     spec = SearchSpec.from_json(spec_json)
-    bank_key = (ctx_id, spec.arch, spec.workload.seq)
+    w = spec.workload
+    bank_key = (
+        ctx_id, spec.arch, w.seq, w.inference,
+        w.global_batch if w.inference is not None else None,
+    )
     bank = _WORKER_BANKS.get(bank_key)
     if bank is None:
         bank = _WORKER_BANKS[bank_key] = FilterBank(
-            spec.arch, spec.workload.seq, rules
+            spec.arch, w.seq, rules,
+            inference=w.inference, global_batch=w.global_batch,
         )
     collector, counts, evaluated = evaluate_shard(
         spec, engine=engine, rules=rules, chunk_size=chunk_size,

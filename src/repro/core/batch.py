@@ -48,6 +48,7 @@ from repro.core.simulate import (
     _P2P_OVERLAP_EFFICIENCY,
     _PCIE_BW,
     SimResult,
+    compose_serving_result,
     strategy_money_per_hour,
 )
 
@@ -123,9 +124,20 @@ _TIMING_FIELDS = (
 _STAGE_CACHE_MAX = 65536
 _OP_TABLE_MAX = 65536
 
+# serving censuses are forward-only and batch-explicit: micro_batch_size,
+# recompute and optimizer fields cannot change them
+_SERVING_CENSUS_FIELDS = (
+    "tensor_parallel",
+    "expert_parallel",
+    "use_flash_attn",
+    "sequence_parallel",
+    "pipeline_parallel",
+)
+
 
 _CENSUS_GETTER = operator.attrgetter(*_CENSUS_FIELDS)
 _TIMING_GETTER = operator.attrgetter(*_TIMING_FIELDS)
+_SERVING_CENSUS_GETTER = operator.attrgetter(*_SERVING_CENSUS_FIELDS)
 
 
 class BatchedCostSimulator:
@@ -504,6 +516,130 @@ class BatchedCostSimulator:
         """Single-strategy convenience wrapper (same signature as scalar)."""
         return self.simulate_batch(arch, [s], global_batch=global_batch, seq=seq)[0]
 
+    # -- serving -------------------------------------------------------------
+    def simulate_serving_batch(
+        self,
+        arch: ModelArch,
+        strategies: Sequence[ParallelStrategy],
+        *,
+        inference,
+        global_batch: int,
+    ) -> list[SimResult]:
+        """Vectorized serving evaluation (scalar reference:
+        :meth:`CostSimulator.simulate_serving`).
+
+        Serving stages are forward-only, so the cache rows are simpler than
+        training's 9-tuples: per census key a ``((prefill comp, comm, p2p),
+        (decode comp, comm, p2p))`` raw pair, finalized per timing key into
+        ``((t_pre, h_pre), (t_dec, h_dec))``. All unseen ops of a chunk
+        still resolve through one vectorized eta query per table, and the
+        serving keys are namespaced so they never collide with training
+        entries in the shared caches.
+        """
+        self._maybe_trim()
+        from repro.core.costmodel import (
+            build_serving_stage_census_vec,
+            serving_decode_context,
+        )
+
+        prefill = inference.prefill_len
+        context = serving_decode_context(prefill, inference.decode_len)
+        mix = inference.mix(global_batch)
+
+        plans = []  # per strategy: [(b, w, [tkey per stage])]
+        pending: dict = {}  # ckey -> (prefill census, decode census)
+        pending_time: dict = {}  # tkey -> (ckey, strategy)
+        for s in strategies:
+            cbase = (
+                arch, "serve", prefill, context, s.device,
+            ) + _SERVING_CENSUS_GETTER(s)
+            cid = self._census_base_ids.setdefault(
+                cbase, len(self._census_base_ids)
+            )
+            tid = self._time_base_ids.setdefault(
+                (cid, "serve", s.tp_comm_overlap), len(self._time_base_ids)
+            )
+            if s.hetero is not None:
+                stages = s.hetero.stage_sequence()
+            else:
+                layers = arch.num_layers // s.pipeline_parallel
+                stages = [(None, layers)] * s.pipeline_parallel
+            pp = len(stages)
+            plan = []
+            for b, w in mix:
+                tkeys = []
+                for i, (dev, n) in enumerate(stages):
+                    pos = (dev, n, i == 0, i == pp - 1, b)
+                    tkey = ("serve", tid) + pos
+                    tkeys.append(tkey)
+                    if tkey in self._stage_time_cache or tkey in pending_time:
+                        continue
+                    ckey = ("serve", cid) + pos
+                    pending_time[tkey] = (ckey, s)
+                    if ckey in self._raw_cache or ckey in pending:
+                        continue
+                    pending[ckey] = build_serving_stage_census_vec(
+                        arch, s, i, prefill=prefill, context=context,
+                        batch=b, device=dev, layers_in_stage=n,
+                    )
+                plan.append((b, w, tkeys))
+            plans.append(plan)
+
+        if pending:
+            comp_ops: dict = {}
+            comm_ops: dict = {}
+            for pre, dec in pending.values():
+                for c in (pre, dec):
+                    comp_ops.update(dict.fromkeys(c.fwd_comp))
+                    comm_ops.update(dict.fromkeys(c.fwd_comm))
+                    p2p = self._p2p_op(c)
+                    if p2p is not None:
+                        comm_ops[p2p] = None
+            self._comp.resolve(list(comp_ops))
+            self._comm.resolve(list(comm_ops))
+            comp_t, comm_t = self._comp.times, self._comm.times
+            cindex, mindex = self._comp.index, self._comm.index
+            for ckey, (pre, dec) in pending.items():
+                rows = []
+                for c in (pre, dec):
+                    tc = sum(
+                        comp_t[cindex[op]] * cnt
+                        for op, cnt in c.fwd_comp.items()
+                    )
+                    cc = sum(
+                        comm_t[mindex[op]] * cnt
+                        for op, cnt in c.fwd_comm.items()
+                    )
+                    p2p = self._p2p_op(c)
+                    hr = float(comm_t[mindex[p2p]]) if p2p is not None else 0.0
+                    rows.append((float(tc), float(cc), hr))
+                self._raw_cache[ckey] = tuple(rows)
+
+        for tkey, (ckey, s) in pending_time.items():
+            disc = (
+                1.0 - _OVERLAP_EFFICIENCY * 0.5 if s.tp_comm_overlap else 1.0
+            )
+            (ptc, pcc, ph), (dtc, dcc, dh) = self._raw_cache[ckey]
+            self._stage_time_cache[tkey] = (
+                (ptc + pcc * disc, ph), (dtc + dcc * disc, dh),
+            )
+
+        cache = self._stage_time_cache
+        out = []
+        for s, plan in zip(strategies, plans):
+            entries = []
+            for b, w, tkeys in plan:
+                pre_stages, dec_stages = [], []
+                for tkey in tkeys:
+                    (tp, hp), (td, hd) = cache[tkey]
+                    pre_stages.append((tp, hp))
+                    dec_stages.append((td, hd))
+                entries.append((b, w, pre_stages, dec_stages))
+            out.append(compose_serving_result(
+                s, entries, decode_len=inference.decode_len
+            ))
+        return out
+
     # -- streaming evaluation ----------------------------------------------
     def evaluate_stream(
         self,
@@ -547,6 +683,7 @@ def stream_evaluate(
     seq: int,
     train_tokens: float,
     chunk_size: int = 512,
+    inference=None,
 ) -> int:
     """Engine-agnostic chunked streaming evaluation.
 
@@ -555,11 +692,20 @@ def stream_evaluate(
     reference). Each candidate is costed and handed to ``push`` — typically
     an :class:`~repro.core.objectives.Objective` collector — so at most
     ``chunk_size`` candidates plus the collector's survivors are ever held.
-    Returns the number of candidates evaluated.
+    With ``inference`` set (a :class:`~repro.core.spec.InferenceShape`) each
+    chunk routes through the engine's serving path instead of the training
+    step simulator. Returns the number of candidates evaluated.
     """
     n = 0
     for chunk in _chunks(strategies, chunk_size):
-        sims = engine.simulate_batch(arch, chunk, global_batch=global_batch, seq=seq)
+        if inference is not None:
+            sims = engine.simulate_serving_batch(
+                arch, chunk, inference=inference, global_batch=global_batch
+            )
+        else:
+            sims = engine.simulate_batch(
+                arch, chunk, global_batch=global_batch, seq=seq
+            )
         for s, sim in zip(chunk, sims):
             push(
                 CostedStrategy(
@@ -583,6 +729,7 @@ def stream_evaluate_indexed(
     seq: int,
     train_tokens: float,
     chunk_size: int = 512,
+    inference=None,
 ) -> int:
     """Seq-carrying variant of :func:`stream_evaluate` for sharded streams.
 
@@ -596,9 +743,15 @@ def stream_evaluate_indexed(
     n = 0
     for chunk in _chunks(pairs, chunk_size):
         strategies = [s for _, s in chunk]
-        sims = engine.simulate_batch(
-            arch, strategies, global_batch=global_batch, seq=seq
-        )
+        if inference is not None:
+            sims = engine.simulate_serving_batch(
+                arch, strategies, inference=inference,
+                global_batch=global_batch,
+            )
+        else:
+            sims = engine.simulate_batch(
+                arch, strategies, global_batch=global_batch, seq=seq
+            )
         for (q, s), sim in zip(chunk, sims):
             push(
                 CostedStrategy(

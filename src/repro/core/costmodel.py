@@ -399,6 +399,192 @@ def step_ops_counted_cached(
     return hit
 
 
+# ---------------------------------------------------------------------------
+# serving census: dense prefill forward + KV-cache-bound per-token decode
+# ---------------------------------------------------------------------------
+# Serving reuses the training layer census for prefill (one dense forward at
+# the prompt length) and models decode as a single-token forward whose
+# attention core is bound by reading the KV cache at the mean context length.
+# The request batch comes from the workload's mix, not s.micro_batch_size,
+# so the serving caches key on the explicit batch.
+
+_SERVING_KEY_FIELDS = (
+    "tensor_parallel",
+    "expert_parallel",
+    "use_flash_attn",
+    "sequence_parallel",
+)
+_SERVING_LAYER_CACHE: dict = {}
+
+
+def decode_layer_fwd_ops(
+    arch: ModelArch, s: ParallelStrategy, dev: str, b: int, context: int
+) -> tuple[list[ComputeOp], list[CommOp]]:
+    """One decoder layer for one autoregressive token at KV ``context``."""
+    comp: list[ComputeOp] = []
+    comm: list[CommOp] = []
+    t = s.tensor_parallel
+    h = arch.hidden
+    spec = get_device(dev)
+    tp_intra = t <= spec.devices_per_node
+    act_payload = float(BF16 * b * h)
+
+    has_attn = not arch.is_attention_free
+    if has_attn:
+        q_dim = arch.attn_q_dim // t
+        kv_dim = 2 * arch.attn_kv_dim // min(t, arch.kv_heads)
+        comp.append(matmul_op(dev, b, q_dim + kv_dim, h))  # fused QKV, 1 token
+        comp.append(matmul_op(dev, b, h, q_dim))  # output projection
+        # one query row against `context` cached keys/values: FLOPs are the
+        # q.K + attn.V products, bytes are dominated by the KV-cache read
+        comp.append(
+            ComputeOp(
+                kind="attn", device=dev, m=b, n=context, k=q_dim,
+                flops=4.0 * b * context * q_dim,
+                bytes_accessed=BF16 * (b * context * kv_dim + 2.0 * b * q_dim),
+            )
+        )
+    if arch.family in ("ssm", "hybrid"):
+        comp += _ssm_ops(arch, s, dev, b, 1)
+    comp += _mlp_ops(arch, s, dev, b, 1)
+    comp += _norm_ops(arch, s, dev, b, 1)
+
+    if t > 1:
+        n_blocks = 2 if (has_attn or arch.family == "ssm") and arch.ffn else 1
+        for _ in range(n_blocks):
+            if s.sequence_parallel:
+                comm.append(CommOp("reduce_scatter", dev, t, act_payload, tp_intra))
+                comm.append(CommOp("all_gather", dev, t, act_payload, tp_intra))
+            else:
+                comm.append(CommOp("all_reduce", dev, t, act_payload, tp_intra))
+    if arch.family == "moe" and s.expert_parallel > 1:
+        ep = s.expert_parallel
+        ep_intra = ep * t <= spec.devices_per_node
+        a2a_payload = float(BF16 * b * h * arch.top_k)
+        comm.append(CommOp("all_to_all", dev, ep, a2a_payload, ep_intra))
+        comm.append(CommOp("all_to_all", dev, ep, a2a_payload, ep_intra))
+    return comp, comm
+
+
+def serving_decode_context(prefill_len: int, decode_len: int) -> int:
+    """Mean KV context during decode (the cache grows one token per step)."""
+    return int(prefill_len + (decode_len + 1) // 2)
+
+
+def serving_layer_counters_cached(
+    arch: ModelArch, s: ParallelStrategy, dev: str, b: int,
+    *, prefill: int, context: int,
+) -> tuple[tuple[dict, dict], tuple[dict, dict]]:
+    """((prefill comp, comm), (decode comp, comm)) per-layer op->count
+    dicts, memoized per (arch, device, batch, lengths, TP-shape)."""
+    key = (arch, dev, b, prefill, context) + tuple(
+        getattr(s, f) for f in _SERVING_KEY_FIELDS
+    )
+    hit = _SERVING_LAYER_CACHE.get(key)
+    if hit is None:
+        if len(_SERVING_LAYER_CACHE) >= _LAYER_CACHE_MAX:
+            _SERVING_LAYER_CACHE.clear()
+        pcomp, pcomm = layer_fwd_ops(arch, s, dev, b, prefill)
+        dcomp, dcomm = decode_layer_fwd_ops(arch, s, dev, b, context)
+        hit = (
+            (_counted(pcomp), _counted(pcomm)),
+            (_counted(dcomp), _counted(dcomm)),
+        )
+        _SERVING_LAYER_CACHE[key] = hit
+    return hit
+
+
+def build_serving_stage_census_vec(
+    arch: ModelArch,
+    s: ParallelStrategy,
+    stage: int,
+    *,
+    prefill: int,
+    context: int,
+    batch: int,
+    device: Optional[str] = None,
+    layers_in_stage: Optional[int] = None,
+) -> tuple[StageCensusVec, StageCensusVec]:
+    """(prefill census, decode census) for one stage at one mix batch.
+
+    Both censuses are forward-only: no recompute surcharge and no
+    once-per-step optimizer/gradient ops (serving has neither). The decode
+    census is one token's work; per-request decode cost is ``decode_len``
+    of these steps.
+    """
+    dev = device or s.device
+    pp = s.pipeline_parallel
+    layers = (
+        layers_in_stage if layers_in_stage is not None
+        else arch.num_layers // pp
+    )
+    b = batch
+    (pcomp_cnt, pcomm_cnt), (dcomp_cnt, dcomm_cnt) = (
+        serving_layer_counters_cached(
+            arch, s, dev, b, prefill=prefill, context=context
+        )
+    )
+    layers_f = float(layers)
+    pre = StageCensusVec(device=dev)
+    pre.fwd_comp = {op: c * layers_f for op, c in pcomp_cnt.items()}
+    pre.fwd_comm = {op: c * layers_f for op, c in pcomm_cnt.items()}
+    dec = StageCensusVec(device=dev)
+    dec.fwd_comp = {op: c * layers_f for op, c in dcomp_cnt.items()}
+    dec.fwd_comm = {op: c * layers_f for op, c in dcomm_cnt.items()}
+
+    for census, seq_len in ((pre, prefill), (dec, 1)):
+        edge_comp, edge_comm = _edge_stage_ops(
+            arch, s, dev, stage, pp, b, seq_len
+        )
+        for op in edge_comp:
+            census.fwd_comp[op] = census.fwd_comp.get(op, 0.0) + 1.0
+        for op in edge_comm:
+            census.fwd_comm[op] = census.fwd_comm.get(op, 0.0) + 1.0
+
+    pre.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, prefill)
+    dec.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, 1)
+    return pre, dec
+
+
+def build_serving_stage_census(
+    arch: ModelArch,
+    s: ParallelStrategy,
+    stage: int,
+    *,
+    prefill: int,
+    context: int,
+    batch: int,
+    device: Optional[str] = None,
+    layers_in_stage: Optional[int] = None,
+) -> tuple[StageCensus, StageCensus]:
+    """List-form twin of :func:`build_serving_stage_census_vec` (the scalar
+    reference simulator's input)."""
+    dev = device or s.device
+    pp = s.pipeline_parallel
+    layers = (
+        layers_in_stage if layers_in_stage is not None
+        else arch.num_layers // pp
+    )
+    b = batch
+    pcomp, pcomm = layer_fwd_ops(arch, s, dev, b, prefill)
+    dcomp, dcomm = decode_layer_fwd_ops(arch, s, dev, b, context)
+    pre = StageCensus(device=dev)
+    pre.fwd_comp = list(pcomp) * layers
+    pre.fwd_comm = list(pcomm) * layers
+    dec = StageCensus(device=dev)
+    dec.fwd_comp = list(dcomp) * layers
+    dec.fwd_comm = list(dcomm) * layers
+    for census, seq_len in ((pre, prefill), (dec, 1)):
+        edge_comp, edge_comm = _edge_stage_ops(
+            arch, s, dev, stage, pp, b, seq_len
+        )
+        census.fwd_comp += edge_comp
+        census.fwd_comm += edge_comm
+    pre.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, prefill)
+    dec.p2p_bytes = _stage_p2p_bytes(arch, s, stage, pp, b, 1)
+    return pre, dec
+
+
 def build_stage_census_vec(
     arch: ModelArch,
     s: ParallelStrategy,

@@ -138,26 +138,99 @@ def peak_stage_memory(
     return worst, worst_stage
 
 
-class MemoryFilter:
-    """Eq. 20-21: drop s_j if any stage exceeds the device's HBM."""
+def kv_state_bytes_per_layer(
+    arch: ModelArch, strategy: ParallelStrategy, batch: int, context: int
+) -> float:
+    """Per-layer per-device KV-cache (attention) / state (SSM) bytes for
+    ``batch`` concurrent requests at ``context`` tokens."""
+    t = strategy.tensor_parallel
+    total = 0.0
+    if not arch.is_attention_free:
+        kv_dim = 2.0 * arch.attn_kv_dim / min(t, arch.kv_heads)
+        total += BF16 * batch * context * kv_dim
+    if arch.family in ("ssm", "hybrid"):
+        d_inner = arch.ssm_expand * arch.hidden
+        total += BF16 * batch * (d_inner / t) * arch.ssm_state
+    return total
 
-    def __init__(self, seq: int):
+
+def serving_stage_memory(
+    arch: ModelArch,
+    strategy: ParallelStrategy,
+    stage: int,
+    *,
+    prefill: int,
+    decode_len: int,
+    batch: int,
+    layers_in_stage: int | None = None,
+) -> StageMemory:
+    """Serving footprint of one stage: weights + KV cache at the *peak*
+    context (``prefill + decode_len``) + one transient prefill working set.
+    No gradients, optimizer states, or saved activations — inference keeps
+    nothing for a backward pass."""
+    pp = strategy.pipeline_parallel
+    layers = (
+        layers_in_stage if layers_in_stage is not None
+        else arch.num_layers // pp
+    )
+    params = stage_parameter_count(arch, strategy, stage, layers)
+    kv = kv_state_bytes_per_layer(
+        arch, strategy, batch, prefill + decode_len
+    ) * layers
+    # transient working set of the dense prompt forward (one layer's input
+    # stream; nothing is retained across layers without a backward pass)
+    act = 2.0 * float(prefill) * batch * arch.hidden
+    return StageMemory(
+        weights=params * BF16, grads=0.0, optimizer=0.0,
+        activations=act, kv_or_state=kv,
+    )
+
+
+class MemoryFilter:
+    """Eq. 20-21: drop s_j if any stage exceeds the device's HBM.
+
+    With ``inference`` set (plus ``batch``, the largest request batch of
+    the workload mix) the per-stage estimate switches to the serving
+    footprint — weights + peak-context KV cache instead of the training
+    activations/optimizer terms."""
+
+    def __init__(self, seq: int, *, inference=None, batch: int | None = None):
         self.seq = seq
+        self.inference = inference
+        self.batch = batch
+
+    def _stage_total(
+        self, arch: ModelArch, strategy: ParallelStrategy, stage: int,
+        layers_in_stage: int | None = None,
+    ) -> float:
+        if self.inference is not None:
+            return serving_stage_memory(
+                arch, strategy, stage,
+                prefill=self.inference.prefill_len,
+                decode_len=self.inference.decode_len,
+                batch=self.batch if self.batch is not None else 1,
+                layers_in_stage=layers_in_stage,
+            ).total
+        return stage_memory(
+            arch, strategy, stage, seq=self.seq,
+            layers_in_stage=layers_in_stage,
+        ).total
 
     def is_valid(self, arch: ModelArch, strategy: ParallelStrategy) -> bool:
         cap = get_device(strategy.device).mem_bytes
         if strategy.hetero is not None:
             for stage, (dev, n_layers) in enumerate(strategy.hetero.stage_sequence()):
-                m = stage_memory(
+                m = self._stage_total(
                     arch,
                     dataclasses.replace(strategy, device=dev,
                                         pipeline_parallel=strategy.hetero.pp),
                     stage,
-                    seq=self.seq,
                     layers_in_stage=n_layers,
-                ).total
+                )
                 if m > get_device(dev).mem_bytes:
                     return False
             return True
-        peak, _ = peak_stage_memory(arch, strategy, seq=self.seq)
-        return peak <= cap
+        worst = 0.0
+        for i in range(strategy.pipeline_parallel):
+            worst = max(worst, self._stage_total(arch, strategy, i))
+        return worst <= cap

@@ -13,6 +13,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core.pareto import (
+    CellBest,
     CostedStrategy,
     ParetoStaircase,
     TopK,
@@ -41,16 +42,21 @@ class Collector:
     def __init__(self, top_k: int, *, keep_pool: bool, key=None):
         self.topk = TopK(top_k, key) if key is not None else TopK(top_k)
         self.pool = ParetoStaircase() if keep_pool else None
+        # per-(device, num_devices) champions under the same key: one entry
+        # per pool cell, the seed set elastic re-search warm-starts from
+        self.cells = CellBest(key) if key is not None else CellBest()
 
     def push(self, c: CostedStrategy, seq=None) -> None:
         self.topk.push(c, seq=seq)
         if self.pool is not None:
             self.pool.push(c, seq=seq)
+        self.cells.push(c, seq=seq)
 
     def merge(self, other: "Collector") -> None:
         self.topk.merge(other.topk)
         if self.pool is not None and other.pool is not None:
             self.pool.merge(other.pool)
+        self.cells.merge(other.cells)
 
     def results(self) -> tuple[list[CostedStrategy], list[CostedStrategy]]:
         """(ranked top-k, Pareto pool — empty when the objective keeps none)."""
@@ -113,6 +119,13 @@ class LatencyObjective(Objective):
     ``slo_seconds``. SLO-satisfiers rank first (money ascending, throughput
     tiebreak); ``select`` returns None when nothing meets the SLO. With no
     SLO it degenerates to the lowest-step-time plan.
+
+    For a serving workload ``sim.step_time`` is the mix-weighted per-token
+    decode latency, so ``slo_seconds`` reads as a *per-token* SLO: the
+    objective returns the cheapest deployment that generates each token
+    within the bound. ``ObjectiveSpec.latency()`` with no explicit SLO
+    falls back to the workload's ``inference.slo_per_token`` (see
+    :func:`make_objective`).
     """
 
     slo_seconds: Optional[float] = None
@@ -167,11 +180,16 @@ class CarbonObjective(Objective):
         return None
 
 
-def make_objective(spec: ObjectiveSpec, *, train_tokens: float = 1e9) -> Objective:
+def make_objective(
+    spec: ObjectiveSpec, *, train_tokens: float = 1e9, inference=None
+) -> Objective:
     """Lower a declarative :class:`ObjectiveSpec` onto its implementation.
 
     ``train_tokens`` (the workload's token budget) parameterizes the
-    objectives whose metric integrates over the whole training run."""
+    objectives whose metric integrates over the whole training run.
+    ``inference`` (the workload's :class:`~repro.core.spec.InferenceShape`,
+    when serving) supplies the default per-token SLO for a latency
+    objective that doesn't pin its own ``slo_seconds``."""
     if spec.kind == "throughput":
         return ThroughputObjective()
     if spec.kind == "money":
@@ -179,7 +197,10 @@ def make_objective(spec: ObjectiveSpec, *, train_tokens: float = 1e9) -> Objecti
     if spec.kind == "pareto":
         return ParetoObjective(budget=spec.budget)
     if spec.kind == "latency":
-        return LatencyObjective(slo_seconds=spec.slo_seconds)
+        slo = spec.slo_seconds
+        if slo is None and inference is not None:
+            slo = inference.slo_per_token
+        return LatencyObjective(slo_seconds=slo)
     if spec.kind == "carbon":
         return CarbonObjective(
             budget_kg=spec.budget,

@@ -196,6 +196,64 @@ class TopK:
         return [c for _, _, c in sorted(self._heap, reverse=True)]
 
 
+class CellBest:
+    """Incremental per-pool-cell champion under a bigger-is-better key.
+
+    A *cell* is one ``(device, num_devices)`` point of the pool — the unit
+    elastic re-search (:mod:`repro.core.elastic`) reasons about when a pool
+    shrinks or grows. Top-k and the Pareto staircase concentrate on the
+    globally best candidates, which often collapse into a single cell; the
+    cell champions are what let a warm start vouch for *every* overlapped
+    cell: the champion dominates its whole cell under the objective key, so
+    re-simulating the champions alone finds the exact best of the retained
+    region.
+
+    Mergeable with the same seq discipline as :class:`TopK`: full-key ties
+    resolve to the earliest stream position, so shard collectors merge into
+    the serial result in any order. State is one entry per cell — bounded
+    by the pool shape, not the candidate count.
+    """
+
+    def __init__(self, key: Callable[[CostedStrategy], tuple] = _eq33_key):
+        self.key = key
+        # cell -> (full_key, seq, candidate); full_key ends with the negated
+        # seq so bigger == better-or-earlier, exactly like TopK
+        self._best: dict[tuple, tuple] = {}
+        self._counter = itertools.count()
+
+    @staticmethod
+    def cell_of(c: CostedStrategy) -> tuple:
+        return (c.strategy.device, c.strategy.num_devices)
+
+    def push(self, c: CostedStrategy, seq: Optional[tuple] = None) -> None:
+        if seq is None:
+            seq = (next(self._counter),)
+        seq = tuple(seq)
+        self._push_key(self.key(c) + (tuple(-x for x in seq),), seq, c)
+
+    def _push_key(self, full_key: tuple, seq: tuple, c: CostedStrategy) -> None:
+        cell = self.cell_of(c)
+        cur = self._best.get(cell)
+        if cur is None or full_key > cur[0]:
+            self._best[cell] = (full_key, seq, c)
+
+    def merge(self, other: "CellBest") -> None:
+        """Fold another CellBest (same key function) in, order-independent."""
+        for full_key, seq, c in other._best.values():
+            self._push_key(full_key, seq, c)
+
+    def entries(self) -> list[tuple[tuple, CostedStrategy]]:
+        """``(seq, champion)`` pairs in deterministic cell order — the
+        mergeable state for cross-process transport."""
+        return [
+            (seq, c) for _, (_, seq, c) in sorted(self._best.items())
+        ]
+
+    def sorted(self) -> list[CostedStrategy]:
+        """Champions in deterministic cell order (device, then count)."""
+        return [c for _, (_, _, c) in sorted(self._best.items())]
+
+
 class ParetoStaircase:
     """Incremental Eq. 30-31 non-dominated pool.
 

@@ -156,10 +156,20 @@ class FilterBank:
     """
 
     def __init__(self, arch: ModelArch, seq: int,
-                 rules: Sequence[str] = DEFAULT_RULES):
+                 rules: Sequence[str] = DEFAULT_RULES,
+                 *, inference=None, global_batch: int | None = None):
         self.arch = arch
         self.rule_filter = RuleFilter(rules)
-        self.mem_filter = MemoryFilter(seq=seq)
+        # serving workloads swap the memory estimate to the KV-cache-bound
+        # footprint sized at the largest request batch of the mix
+        batch = None
+        if inference is not None:
+            batch = max(
+                b for b, _ in inference.mix(global_batch or 1)
+            )
+        self.mem_filter = MemoryFilter(
+            seq=seq, inference=inference, batch=batch
+        )
         self._rule_memo: dict = {}
         self._mem_memo: dict = {}
         # resolve each referenced $var to a strategy getter; a rule set that
@@ -329,6 +339,7 @@ def iter_valid_strategies(
     filters: Optional[FilterBank] = None,
     shard: tuple[int, int] = (0, 1),
     indexed: bool = False,
+    inference=None,
 ) -> Iterable[ParallelStrategy]:
     """Streaming S_valid (Eq. 21): yields survivors of the full filter
     funnel while mutating ``counts`` in place. The batched engine consumes
@@ -345,7 +356,9 @@ def iter_valid_strategies(
     :meth:`SearchCounts.merge` reproduce the serial funnel exactly.
     ``indexed=True`` yields ``((gpu_idx, raw_idx), strategy)`` pairs — the
     stream position tuple the mergeable collectors tie-break on."""
-    bank = filters if filters is not None else FilterBank(arch, seq, rules)
+    bank = filters if filters is not None else FilterBank(
+        arch, seq, rules, inference=inference, global_batch=global_batch
+    )
     if counts is None:
         counts = SearchCounts()
     for g, gpu in enumerate(gpus):

@@ -193,6 +193,80 @@ class CostSimulator:
             for s in strategies
         ]
 
+    # -- serving ------------------------------------------------------------
+    def _serving_stage_time(
+        self, census: StageCensus, s: ParallelStrategy
+    ) -> tuple[float, float]:
+        """(stage forward time, p2p hop) for a serving census.
+
+        Forward-only: TP collectives keep the training overlap discount,
+        but p2p hops stay fully exposed — a lone autoregressive token has
+        no other microbatch to hide its hop behind."""
+        t = self._comp_times(census.fwd_comp)
+        c = self._comm_times(census.fwd_comm)
+        if s.tp_comm_overlap:
+            c *= 1.0 - _OVERLAP_EFFICIENCY * 0.5
+        h = self._p2p_time(census.device, census.p2p_bytes)
+        return t + c, h
+
+    def simulate_serving(
+        self,
+        arch: ModelArch,
+        s: ParallelStrategy,
+        *,
+        inference,
+        global_batch: int,
+    ) -> SimResult:
+        """Batched-serving reference: prefill as one dense forward at the
+        prompt length, decode as per-token steps at the mean KV context,
+        mix-weighted over the request-arrival batch mix."""
+        from repro.core.costmodel import (
+            build_serving_stage_census,
+            serving_decode_context,
+        )
+
+        context = serving_decode_context(
+            inference.prefill_len, inference.decode_len
+        )
+        if s.hetero is not None:
+            stage_args = [
+                (i, dev, n)
+                for i, (dev, n) in enumerate(s.hetero.stage_sequence())
+            ]
+        else:
+            stage_args = [
+                (i, None, None) for i in range(s.pipeline_parallel)
+            ]
+        entries = []
+        for b, w in inference.mix(global_batch):
+            pre_stages, dec_stages = [], []
+            for i, dev, n in stage_args:
+                pre, dec = build_serving_stage_census(
+                    arch, s, i, prefill=inference.prefill_len,
+                    context=context, batch=b, device=dev, layers_in_stage=n,
+                )
+                pre_stages.append(self._serving_stage_time(pre, s))
+                dec_stages.append(self._serving_stage_time(dec, s))
+            entries.append((b, w, pre_stages, dec_stages))
+        return compose_serving_result(
+            s, entries, decode_len=inference.decode_len
+        )
+
+    def simulate_serving_batch(
+        self,
+        arch: ModelArch,
+        strategies: Sequence[ParallelStrategy],
+        *,
+        inference,
+        global_batch: int,
+    ) -> list[SimResult]:
+        return [
+            self.simulate_serving(
+                arch, s, inference=inference, global_batch=global_batch
+            )
+            for s in strategies
+        ]
+
     @staticmethod
     def _money_per_hour(s: ParallelStrategy) -> float:
         return strategy_money_per_hour(s)
@@ -257,6 +331,65 @@ def compose_sim_result(
         optimizer_time=opt_time,
         stage_times=t_i,
         stage_p2p=h_i,
+        money_per_hour=money_per_hour,
+        money_per_step=money_per_hour / 3600.0 * step_time,
+    )
+
+
+def compose_serving_result(
+    s: ParallelStrategy,
+    entries: Sequence[tuple],
+    *,
+    decode_len: int,
+) -> SimResult:
+    """Serving composition shared by the scalar and batched engines.
+
+    ``entries`` holds one ``(batch, weight, prefill, decode)`` tuple per
+    request-mix entry, where ``prefill`` / ``decode`` are per-stage
+    ``(t_i, h_i)`` sequences. The SimResult maps serving onto the training
+    fields so collectors, objectives and the wire format apply unchanged:
+
+    * ``step_time``       — mix-weighted per-token decode latency (the
+                            quantity a per-token SLO bounds);
+    * ``pipeline_time``   — mix-weighted time-to-first-token (the prompt
+                            traverses every stage once);
+    * ``throughput_tokens`` — generated tokens/s across the ``dp``
+                            replica groups (each serves its own requests);
+    * ``throughput_samples`` — completed requests/s.
+
+    A decode token crosses every pipeline stage serially (it cannot
+    pipeline with itself), so per-token latency is the *sum* of stage
+    times — deep PP hurts serving latency, TP helps, exactly the tradeoff
+    the search should surface. ``money_per_hour`` stays the Eq. 32 rate,
+    so assignment-time price rescales remain linear for serving cells too.
+    """
+    dp = float(s.data_parallel)
+    step_time = ttft = tok_s = req_s = 0.0
+    n_stages = len(entries[0][2])
+    stage_t = [0.0] * n_stages
+    stage_h = [0.0] * n_stages
+    for b, w, pre, dec in entries:
+        ttft_b = sum(t + h for t, h in pre)
+        tok_b = sum(t + h for t, h in dec)
+        request = ttft_b + decode_len * tok_b
+        step_time += w * tok_b
+        ttft += w * ttft_b
+        tok_s += w * (b * decode_len / request)
+        req_s += w * (b / request)
+        for i, (t, h) in enumerate(dec):
+            stage_t[i] += w * t
+            stage_h[i] += w * h
+    money_per_hour = strategy_money_per_hour(s)
+    return SimResult(
+        step_time=step_time,
+        throughput_samples=dp * req_s,
+        throughput_tokens=dp * tok_s,
+        pipeline_time=ttft,
+        bubble_time=0.0,
+        dp_exposed_time=0.0,
+        optimizer_time=0.0,
+        stage_times=stage_t,
+        stage_p2p=stage_h,
         money_per_hour=money_per_hour,
         money_per_step=money_per_hour / 3600.0 * step_time,
     )

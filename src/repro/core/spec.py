@@ -22,12 +22,77 @@ from repro.core.hetero import HeteroPool
 
 
 @dataclasses.dataclass(frozen=True)
+class InferenceShape:
+    """The serving shape of a :class:`Workload` (absent for training).
+
+    ``prefill_len`` is the dense prompt forward, ``decode_len`` the number
+    of autoregressive per-token steps scored per request. ``batch_mix`` is
+    the request-arrival mix as ``(batch_size, weight)`` pairs — empty means
+    one batch at ``Workload.global_batch`` with weight 1. ``slo_per_token``
+    is the per-token decode-latency SLO in seconds; when set it is the
+    default bound for :meth:`ObjectiveSpec.latency`.
+    """
+
+    prefill_len: int
+    decode_len: int
+    batch_mix: tuple[tuple[int, float], ...] = ()
+    slo_per_token: Optional[float] = None
+
+    def __post_init__(self):
+        if self.prefill_len < 1:
+            raise ValueError(
+                f"prefill_len must be >= 1, got {self.prefill_len}"
+            )
+        if self.decode_len < 1:
+            raise ValueError(f"decode_len must be >= 1, got {self.decode_len}")
+        for b, w in self.batch_mix:
+            if b < 1:
+                raise ValueError(f"batch_mix batch sizes must be >= 1, got {b}")
+            if w <= 0:
+                raise ValueError(f"batch_mix weights must be > 0, got {w}")
+        if self.slo_per_token is not None and self.slo_per_token <= 0:
+            raise ValueError(
+                f"slo_per_token must be positive, got {self.slo_per_token}"
+            )
+
+    def mix(self, global_batch: int) -> tuple[tuple[int, float], ...]:
+        """The effective request mix: ``batch_mix`` normalized to sum to 1,
+        or a single entry at ``global_batch`` when no mix was given."""
+        if not self.batch_mix:
+            return ((int(global_batch), 1.0),)
+        total = sum(w for _, w in self.batch_mix)
+        return tuple((int(b), w / total) for b, w in self.batch_mix)
+
+    def to_dict(self) -> dict:
+        d = {"prefill_len": self.prefill_len, "decode_len": self.decode_len}
+        # sparse: defaults stay off the wire, like limits.fleet
+        if self.batch_mix:
+            d["batch_mix"] = [[int(b), float(w)] for b, w in self.batch_mix]
+        if self.slo_per_token is not None:
+            d["slo_per_token"] = self.slo_per_token
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "InferenceShape":
+        return cls(
+            prefill_len=int(d["prefill_len"]),
+            decode_len=int(d["decode_len"]),
+            batch_mix=tuple(
+                (int(b), float(w)) for b, w in d.get("batch_mix") or ()
+            ),
+            slo_per_token=d.get("slo_per_token"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class Workload:
-    """The training workload a strategy is scored on."""
+    """The workload a strategy is scored on: a training step by default,
+    or batched serving when ``inference`` is set."""
 
     global_batch: int
     seq: int
     train_tokens: float = 1e9  # token budget for the Eq. 32 money cost
+    inference: Optional[InferenceShape] = None
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +152,19 @@ class DeviceSweep:
     min_devices: int = 2
 
     kind = "sweep"
+
+    def __post_init__(self):
+        # min_devices=0 would spin counts() forever (0 *= 2 stays 0) and
+        # min > max would silently sweep nothing — both are spec errors
+        if self.min_devices < 1:
+            raise ValueError(
+                f"min_devices must be >= 1, got {self.min_devices}"
+            )
+        if self.min_devices > self.max_devices:
+            raise ValueError(
+                f"min_devices ({self.min_devices}) must be <= "
+                f"max_devices ({self.max_devices})"
+            )
 
     def counts(self) -> list[int]:
         out, n = [], self.min_devices
@@ -243,11 +321,17 @@ class SearchSpec:
             limits_d.pop("fleet", None)
         else:
             limits_d["fleet"] = list(limits_d["fleet"])
+        workload_d = dataclasses.asdict(self.workload)
+        if self.workload.inference is None:
+            # sparse: training-only specs keep their pre-serving wire bytes
+            workload_d.pop("inference", None)
+        else:
+            workload_d["inference"] = self.workload.inference.to_dict()
         return {
             "version": 1,
             "arch": dataclasses.asdict(self.arch),
             "pool": pool_d,
-            "workload": dataclasses.asdict(self.workload),
+            "workload": workload_d,
             "objective": dataclasses.asdict(self.objective),
             "space": self.space,
             "hetero_base": self.hetero_base,
@@ -277,10 +361,14 @@ class SearchSpec:
         if pool_cls is DeviceSweep:
             pool_d["devices"] = tuple(pool_d["devices"])
         pool = pool_cls(**pool_d)
+        workload_d = dict(d["workload"])
+        inference_d = workload_d.pop("inference", None)
+        if inference_d is not None:
+            workload_d["inference"] = InferenceShape.from_dict(inference_d)
         return cls(
             arch=ModelArch(**d["arch"]),
             pool=pool,
-            workload=Workload(**d["workload"]),
+            workload=Workload(**workload_d),
             objective=ObjectiveSpec(**(d.get("objective") or {})),
             space=d.get("space"),
             hetero_base=d.get("hetero_base"),
@@ -323,6 +411,16 @@ class SearchSpec:
         result cache (see :class:`repro.serve.search_service.SearchService`)
         keys a :class:`~repro.core.api.SearchReport` on."""
         return hashlib.sha256(self.canonical_json().encode()).hexdigest()
+
+    def family_key(self) -> str:
+        """Stable content hash of the spec *minus its pool*: two specs that
+        differ only in pool shape/size share a family. Elastic re-search
+        (``POST /v1/search?elastic=1``) uses this to find the prior report
+        of the same search when the device pool shrank or grew."""
+        d = self.canonicalize()
+        d.pop("pool", None)
+        text = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(text.encode()).hexdigest()
 
 
 def _limits_from_dict(d: Optional[dict]) -> Limits:

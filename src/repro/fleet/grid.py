@@ -42,15 +42,20 @@ class GridCell:
 def cell_spec(w: FleetWorkload, pool: GpuPool, *, limits=None) -> SearchSpec:
     """Lower one grid cell to a search spec.
 
-    The sweep's power-of-two counts start at 2 (the library default), so a
-    capacity-1 pool yields an empty frontier — a single device has no
-    parallel strategy to search.
+    The sweep's power-of-two counts start at 2 (the library default),
+    clamped down to the pool capacity so a capacity-1 pool lowers to a
+    valid (single-count) sweep instead of tripping ``DeviceSweep``'s
+    min<=max validation; ``assign.build_options`` still filters by
+    capacity, so the frontier stays admissible.
     """
     from repro.core.spec import Limits, ObjectiveSpec
 
     return SearchSpec(
         arch=w.arch,
-        pool=DeviceSweep((pool.device,), max_devices=pool.capacity),
+        pool=DeviceSweep(
+            (pool.device,), max_devices=pool.capacity,
+            min_devices=min(2, pool.capacity),
+        ),
         workload=Workload(
             global_batch=w.global_batch, seq=w.seq, train_tokens=w.train_tokens
         ),
@@ -74,7 +79,7 @@ def grid_cells(
 
 
 def search_grid(
-    service, fspec: FleetSpec
+    service, fspec: FleetSpec, *, elastic: bool = False
 ) -> tuple[list[GridCell], int, SearchCounts]:
     """Search every grid cell through ``service`` (a
     :class:`~repro.serve.search_service.SearchService`).
@@ -90,6 +95,10 @@ def search_grid(
     quota — the plan that spawned them is the metered unit. A cell search
     that fails fails the whole grid (a plan over a partial grid would
     silently mis-assign).
+
+    ``elastic`` is the re-plan path: a cell whose pool resized since the
+    last plan warm-starts from that family's prior cell report (see
+    :meth:`SearchService.search_json`); unchanged cells stay warm hits.
     """
     triples = grid_cells(fspec)
     # dedupe by cache key: duplicate cells ride the first one's result
@@ -106,7 +115,9 @@ def search_grid(
 
     def run(key: str, spec: SearchSpec) -> None:
         try:
-            _, text, cached = service.search_json(spec.to_json())
+            _, text, cached = service.search_json(
+                spec.to_json(), elastic=elastic
+            )
             with lock:
                 results[key] = (text, cached)
         except BaseException as e:

@@ -23,9 +23,14 @@ class GenerateResult:
     prompt_len: int
     # measured wall time per decode step (seconds, one per generated token;
     # each step materializes its sampled token, so step i's time covers the
-    # device work it waited on). The first entry absorbs jit compilation —
-    # the raw material for a source="serve" calibration StepTrace
+    # device work it waited on) — the raw material for a source="serve"
+    # calibration StepTrace
     step_times: tuple = ()
+    # how many leading step_times entries absorbed jit compilation (1 on the
+    # first generate at a given batch shape, 0 once the engine is warm).
+    # Trace emitters must drop these — a compile-polluted step skews drift
+    # scoring toward spurious refits
+    warmup_steps: int = 0
 
 
 class ServeEngine:
@@ -39,6 +44,10 @@ class ServeEngine:
         self._decode = jax.jit(
             functools.partial(lm.decode_step, arch=arch, cfg=cfg)
         )
+        # batch sizes whose decode step has already compiled: generate()
+        # reports warmup_steps=0 for these (position is traced, so one
+        # executable serves every step at a given batch shape)
+        self._warm_batches: set[int] = set()
 
     def generate(
         self,
@@ -51,6 +60,16 @@ class ServeEngine:
         frontend=None,
     ) -> GenerateResult:
         B, S = prompts.shape
+        frontend_len = frontend.shape[1] if frontend is not None else 0
+        total = S + frontend_len + max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"prompt_len ({S})"
+                + (f" + frontend_len ({frontend_len})" if frontend_len else "")
+                + f" + max_new_tokens ({max_new_tokens}) = {total} exceeds "
+                f"max_len ({self.max_len}); decode positions past the KV "
+                f"cache would clobber it silently"
+            )
         caches = lm.init_caches(
             self.arch, self.cfg, B, self.max_len,
             enc_features=enc_features, params=self.params,
@@ -62,7 +81,8 @@ class ServeEngine:
         key = jax.random.PRNGKey(seed)
         out = [np.asarray(prompts)]
         last = logits[:, -1, :]
-        pos = S + (frontend.shape[1] if frontend is not None else 0)
+        pos = S + frontend_len
+        warmup = 0 if B in self._warm_batches else min(1, max_new_tokens)
         step_times = []
         for i in range(max_new_tokens):
             t0 = time.perf_counter()
@@ -81,7 +101,9 @@ class ServeEngine:
             )
             last = logits[:, -1, :]
             step_times.append(time.perf_counter() - t0)
+        if max_new_tokens > 0:
+            self._warm_batches.add(B)
         return GenerateResult(
             tokens=np.concatenate(out, axis=1), prompt_len=S,
-            step_times=tuple(step_times),
+            step_times=tuple(step_times), warmup_steps=warmup,
         )

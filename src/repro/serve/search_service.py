@@ -24,6 +24,15 @@ that
       POST /v1/search?refresh=stale  -> a warm hit ranked by an outdated
                                         eta model re-searches under the
                                         current one instead of being served
+      POST /v1/search?elastic=1  -> a cold search whose *family* (the spec
+                                    minus its pool) was searched before
+                                    warm-starts from that prior report:
+                                    prior winners still inside the new pool
+                                    are re-simulated and only the
+                                    newly-feasible region streams through
+                                    the funnel (see repro.core.elastic); an
+                                    unchanged pool is an ordinary warm hit
+                                    (byte-identical report, zero searches)
       POST /v1/shard             body = {spec, shard: [i, n]} -> shard payload
       POST /v1/traces            body = StepTrace JSON -> calibration ack
       POST /v1/plan              body = FleetSpec JSON -> fleet plan envelope
@@ -125,6 +134,9 @@ class ServiceStats:
     plans: int = 0  # fleet plans computed (cold /v1/plan requests)
     grid_cells: int = 0  # workload x pool cells planned over
     grid_warm_hits: int = 0  # grid cells served without running a search
+    elastic_searches: int = 0  # requests that asked for ?elastic=1
+    elastic_warm_starts: int = 0  # cold elastic searches warm-started from
+    # a prior same-family report (the rest were warm hits or ran cold)
 
     @property
     def requests(self) -> int:
@@ -155,6 +167,8 @@ class ServiceStats:
             "plans": self.plans,
             "grid_cells": self.grid_cells,
             "grid_warm_hits": self.grid_warm_hits,
+            "elastic_searches": self.elastic_searches,
+            "elastic_warm_starts": self.elastic_warm_starts,
         }
 
 
@@ -248,6 +262,12 @@ class SearchService:
         # completed reports whose store write failed: kept reachable here
         # (bounded) so async pollers aren't stranded by a flaky store
         self._orphans: "OrderedDict[str, str]" = OrderedDict()
+        # elastic re-search memory: family_key -> (cache_key, spec) of the
+        # most recent successful search in that family. Bounded; in-process
+        # only (a restart just means the next ?elastic=1 runs cold)
+        self._families: "OrderedDict[str, tuple[str, SearchSpec]]" = (
+            OrderedDict()
+        )
         self._fills = 0  # bumped whenever a flight completes (see below)
         self._lock = threading.Lock()  # stats + flight bookkeeping
         # bounded executor for cold searches: distinct specs overlap up to
@@ -270,6 +290,7 @@ class SearchService:
         *,
         on_cold: Optional[Callable[[], None]] = None,
         refresh_stale: bool = False,
+        elastic: bool = False,
     ) -> tuple[str, str, bool]:
         """Run (or replay) the search described by ``spec_json``.
 
@@ -281,21 +302,100 @@ class SearchService:
         ``refresh_stale`` turns a warm hit whose ``eta_model_version`` no
         longer matches the calibration loop's live model into a re-search
         (charged as cold); without a calibration loop it is a no-op.
+
+        ``elastic`` is the pool-change fast path (``?elastic=1``): a cold
+        search whose family (the spec minus its pool —
+        :meth:`~repro.core.spec.SearchSpec.family_key`) has a prior report
+        warm-starts from it instead of searching from scratch — prior
+        winners that still fit the new pool are re-simulated and only the
+        newly-feasible region streams through the funnel. An unchanged
+        pool short-circuits earlier as an ordinary warm hit (byte-identical
+        report, zero engine evaluations), and a family never seen (or a
+        warm start the engine declines) runs cold; either way the caller
+        always gets a correct report. Still charged as one cold search.
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
+        if elastic:
+            with self._lock:
+                self.stats.elastic_searches += 1
         hit, flight, leader = self._join_or_lead(
             key, on_cold=on_cold, refresh_stale=refresh_stale
         )
         if hit is not None:
+            self._remember_family(spec, key)
             return key, hit, True
         if leader:
-            self._run_flight(key, flight, lambda: self._search_text(spec))
+            prior = self._family_prior(spec, key) if elastic else None
+            if prior is not None:
+                produce = lambda: self._elastic_text(spec, *prior)  # noqa: E731
+            else:
+                produce = lambda: self._search_text(spec)  # noqa: E731
+            self._run_flight(key, flight, produce)
         else:
             flight.done.wait()
         if flight.error is not None:
             raise flight.error
+        self._remember_family(spec, key)
         return key, flight.report_json, not leader
+
+    # -- elastic re-search -------------------------------------------------
+    def _remember_family(self, spec: SearchSpec, key: str) -> None:
+        """Record ``spec`` as its family's latest successful search so a
+        future ``elastic=True`` miss of the same family can warm-start."""
+        fam = spec.family_key()
+        with self._lock:
+            self._families[fam] = (key, spec)
+            self._families.move_to_end(fam)
+            while len(self._families) > 256:
+                self._families.popitem(last=False)
+
+    def _family_prior(
+        self, spec: SearchSpec, key: str
+    ) -> Optional[tuple[SearchSpec, SearchReport]]:
+        """The prior (spec, report) of ``spec``'s family, if one is still
+        retrievable and actually differs from ``spec`` (same key would be
+        a store hit upstream, never a warm start)."""
+        with self._lock:
+            entry = self._families.get(spec.family_key())
+        if entry is None or entry[0] == key:
+            return None
+        prior_key, prior_spec = entry
+        text = self._store_get(prior_key)
+        if text is None:
+            return None
+        try:
+            return prior_spec, SearchReport.from_json(text)
+        except Exception:
+            return None  # an undecodable prior is just a cold search
+
+    def _elastic_text(
+        self, spec: SearchSpec, prior_spec: SearchSpec, prior: SearchReport
+    ) -> str:
+        """One elastic fill: try the engine's warm start, fall back cold.
+
+        The warm start runs under the bounded executor like any cold
+        search; engines without ``search_elastic`` (or ones that decline —
+        no surviving winner, non-cell pools) degrade to :meth:`_search_text`.
+        """
+        warm = getattr(self.astra, "search_elastic", None)
+        if warm is not None:
+            with self._search_sem:
+                with self._lock:
+                    self.stats.searching += 1
+                    self.stats.peak_searching = max(
+                        self.stats.peak_searching, self.stats.searching
+                    )
+                try:
+                    report = warm(spec, prior_spec, prior)
+                finally:
+                    with self._lock:
+                        self.stats.searching -= 1
+            if report is not None:
+                with self._lock:
+                    self.stats.elastic_warm_starts += 1
+                return report.to_json()
+        return self._search_text(spec)
 
     def search(self, spec: SearchSpec) -> SearchReport:
         """Spec in, report out — always through the wire format."""
@@ -309,6 +409,7 @@ class SearchService:
         *,
         on_cold: Optional[Callable[[], None]] = None,
         refresh_stale: bool = False,
+        elastic: bool = False,
     ) -> tuple[str, str, bool]:
         """Run (or replay) the fleet plan described by ``fleet_json``
         (``POST /v1/plan``; see :mod:`repro.fleet`).
@@ -324,6 +425,12 @@ class SearchService:
         into ``plans``. Like reports, a cached plan stamped by an outdated
         eta model is stale: served (and counted) unless ``refresh_stale``
         forces a re-plan — warm cells keep it cheap.
+
+        ``elastic`` is the fleet *re-plan* hook (``POST /v1/plan?elastic=1``):
+        after a pool shrinks or grows, each changed grid cell warm-starts
+        from its family's prior cell report instead of searching cold
+        (unchanged cells are warm hits as always), so re-planning a resized
+        fleet costs a fraction of the first plan.
         """
         from repro.fleet.spec import FleetSpec
 
@@ -339,7 +446,9 @@ class SearchService:
             # orchestrates; its cells take the semaphore themselves (a plan
             # holding a slot while its cells wait for one would deadlock at
             # search_concurrency=1)
-            self._run_flight(key, flight, lambda: self._plan_text(fspec))
+            self._run_flight(
+                key, flight, lambda: self._plan_text(fspec, elastic=elastic)
+            )
         else:
             flight.done.wait()
         if flight.error is not None:
@@ -353,13 +462,14 @@ class SearchService:
         _, text, _ = self.plan_json(fspec.to_json())
         return FleetPlan.from_json(text)
 
-    def _plan_text(self, fspec) -> str:
+    def _plan_text(self, fspec, *, elastic: bool = False) -> str:
         """Produce one fleet plan: search the grid through this service's
-        own cache, then solve the assignment."""
+        own cache, then solve the assignment. ``elastic`` warm-starts the
+        cold cells from their families' prior reports (the re-plan path)."""
         from repro.fleet.assign import solve
         from repro.fleet.grid import search_grid
 
-        cells, warm, counts = search_grid(self, fspec)
+        cells, warm, counts = search_grid(self, fspec, elastic=elastic)
         with self._lock:
             self.stats.grid_cells += len(cells)
             self.stats.grid_warm_hits += warm
@@ -377,27 +487,41 @@ class SearchService:
         *,
         on_cold: Optional[Callable[[], None]] = None,
         refresh_stale: bool = False,
+        elastic: bool = False,
     ) -> tuple[str, str, Optional[str]]:
         """Async variant: start (or join) the search, return immediately.
 
         Returns ``(cache_key, status, report_json)``: status ``ready`` with
         the cached report (fetched atomically with the lookup, so a TTL
         expiry cannot strand the caller), or ``pending`` with None (running
-        in a background thread; poll :meth:`result_json`).
+        in a background thread; poll :meth:`result_json`). ``elastic`` has
+        :meth:`search_json` semantics — the background fill warm-starts
+        from the family's prior report when one exists.
         """
         spec = SearchSpec.from_json(spec_json)
         key = spec.cache_key()
+        if elastic:
+            with self._lock:
+                self.stats.elastic_searches += 1
         hit, flight, leader = self._join_or_lead(
             key, on_cold=on_cold, refresh_stale=refresh_stale
         )
         if hit is not None:
+            self._remember_family(spec, key)
             return key, "ready", hit
         if leader:
-            threading.Thread(
-                target=self._run_flight,
-                args=(key, flight, lambda: self._search_text(spec)),
-                daemon=True,
-            ).start()
+            prior = self._family_prior(spec, key) if elastic else None
+            if prior is not None:
+                produce = lambda: self._elastic_text(spec, *prior)  # noqa: E731
+            else:
+                produce = lambda: self._search_text(spec)  # noqa: E731
+
+            def fill():
+                self._run_flight(key, flight, produce)
+                if flight.error is None:
+                    self._remember_family(spec, key)
+
+            threading.Thread(target=fill, daemon=True).start()
         return key, "pending", None
 
     def shard_json(self, body_json: str) -> dict:
@@ -700,6 +824,7 @@ _METRIC_COUNTERS = (
     "shards", "shard_errors", "traces", "trace_errors",
     "refits", "stale_hits", "stale_refreshes",
     "plans", "grid_cells", "grid_warm_hits",
+    "elastic_searches", "elastic_warm_starts",
     "evictions", "expirations", "corruptions",
 )
 _METRIC_GAUGES = (
@@ -1016,6 +1141,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         query = urllib.parse.parse_qs(url.query)
         want_async = query.get("async", ["0"])[-1] not in ("0", "", "false")
         refresh_stale = query.get("refresh", [""])[-1] == "stale"
+        elastic = query.get("elastic", ["0"])[-1] not in ("0", "", "false")
         on_cold = (
             self.auth.cold_hook(token)
             if self.auth is not None and token is not None else None
@@ -1023,7 +1149,8 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         try:
             if want_async:
                 key, status, text = self.service.submit_json(
-                    spec_json, on_cold=on_cold, refresh_stale=refresh_stale
+                    spec_json, on_cold=on_cold, refresh_stale=refresh_stale,
+                    elastic=elastic,
                 )
                 if status == "ready":
                     return self._reply(200, {
@@ -1032,7 +1159,8 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                     })
                 return self._reply(202, {"key": key, "status": "pending"})
             key, text, cached = self.service.search_json(
-                spec_json, on_cold=on_cold, refresh_stale=refresh_stale
+                spec_json, on_cold=on_cold, refresh_stale=refresh_stale,
+                elastic=elastic,
             )
             return self._reply(200, {
                 "key": key, "status": "ready", "cached": cached,
@@ -1072,7 +1200,9 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         Shares the auth/request-quota gate; the cold quota is charged once
         per cold *plan*, never per grid cell (see
         :meth:`SearchService.plan_json`). ``?refresh=stale`` re-plans a
-        cached plan stamped by an outdated eta model."""
+        cached plan stamped by an outdated eta model; ``?elastic=1``
+        re-plans a resized fleet with changed cells warm-started from
+        their prior family reports."""
         from repro.fleet.spec import FleetSpec
 
         try:
@@ -1081,13 +1211,15 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             return self._reply(400, {"error": f"bad fleet spec: {e}"})
         query = urllib.parse.parse_qs(url.query)
         refresh_stale = query.get("refresh", [""])[-1] == "stale"
+        elastic = query.get("elastic", ["0"])[-1] not in ("0", "", "false")
         on_cold = (
             self.auth.cold_hook(token)
             if self.auth is not None and token is not None else None
         )
         try:
             key, text, cached = self.service.plan_json(
-                body_json, on_cold=on_cold, refresh_stale=refresh_stale
+                body_json, on_cold=on_cold, refresh_stale=refresh_stale,
+                elastic=elastic,
             )
             return self._reply(200, {
                 "key": key, "status": "ready", "cached": cached,
@@ -1202,15 +1334,19 @@ def post_spec(
     token: Optional[str] = None,
     timeout: float = DEFAULT_SEARCH_TIMEOUT,
     retries: int = DEFAULT_RETRIES,
+    elastic: bool = False,
 ) -> tuple[str, SearchReport, bool]:
     """Client half of the sync endpoint: POST a spec JSON to a running
     service and return ``(cache_key, report, cached)``. The one place that
     understands the response envelope — CLIs and examples share it. Goes
     through the hardened client (:mod:`repro.core.http_client`): a dead
     server fails within ``timeout`` instead of hanging, transient
-    transport faults retry with backoff, HTTP error statuses never do."""
+    transport faults retry with backoff, HTTP error statuses never do.
+    ``elastic`` posts ``?elastic=1`` — warm-start from the family's prior
+    report after a pool resize."""
+    path = "/v1/search?elastic=1" if elastic else "/v1/search"
     status, payload = _http_json(
-        f"{base_url.rstrip('/')}/v1/search", spec_json.encode(),
+        f"{base_url.rstrip('/')}{path}", spec_json.encode(),
         token=token, timeout=timeout, retries=retries,
     )
     if status != 200:
@@ -1232,12 +1368,16 @@ def post_plan(
     token: Optional[str] = None,
     timeout: float = DEFAULT_SEARCH_TIMEOUT,
     retries: int = DEFAULT_RETRIES,
+    elastic: bool = False,
 ) -> tuple[str, "FleetPlan", bool]:  # noqa: F821 (lazy import)
-    """Client half of ``POST /v1/plan``: returns ``(key, plan, cached)``."""
+    """Client half of ``POST /v1/plan``: returns ``(key, plan, cached)``.
+    ``elastic`` posts ``?elastic=1`` — the re-plan path for a resized
+    fleet (changed cells warm-start from their prior family reports)."""
     from repro.fleet.assign import FleetPlan
 
+    path = "/v1/plan?elastic=1" if elastic else "/v1/plan"
     status, payload = _http_json(
-        f"{base_url.rstrip('/')}/v1/plan", fleet_json.encode(),
+        f"{base_url.rstrip('/')}{path}", fleet_json.encode(),
         token=token, timeout=timeout, retries=retries,
     )
     if status != 200:
@@ -1296,8 +1436,9 @@ def _cmd_search(args) -> int:
     SearchSpec.from_json(spec_json)  # fail fast on malformed specs
     base = args.url.rstrip("/")
     if args.async_poll:
+        q = "async=1&elastic=1" if args.elastic else "async=1"
         status, payload = _http_json(
-            f"{base}/v1/search?async=1", spec_json.encode(),
+            f"{base}/v1/search?{q}", spec_json.encode(),
             token=args.token, timeout=args.timeout, retries=args.retries,
         )
         while status == 202:
@@ -1316,6 +1457,7 @@ def _cmd_search(args) -> int:
             key, report, cached = post_spec(
                 base, spec_json, token=args.token,
                 timeout=args.timeout, retries=args.retries,
+                elastic=args.elastic,
             )
         except (RuntimeError, OSError) as e:
             print(e)
@@ -1380,6 +1522,7 @@ def _cmd_plan(args) -> int:
         key, plan, cached = post_plan(
             args.url, fleet_json, token=args.token,
             timeout=args.timeout, retries=args.retries,
+            elastic=args.elastic,
         )
     except (RuntimeError, OSError) as e:
         print(e)
@@ -1474,6 +1617,9 @@ def main(argv=None) -> int:
                    help="bearer token for an auth-enabled service")
     p.add_argument("--async-poll", action="store_true",
                    help="submit with ?async=1 and poll /v1/results/<key>")
+    p.add_argument("--elastic", action="store_true",
+                   help="POST with ?elastic=1: warm-start from the "
+                        "family's prior report after a pool resize")
     p.add_argument("--poll-interval", type=float, default=0.5)
     p.add_argument("--timeout", type=float, default=DEFAULT_SEARCH_TIMEOUT,
                    metavar="SECONDS",
@@ -1503,6 +1649,10 @@ def main(argv=None) -> int:
                        help="POST a FleetSpec file to /v1/plan")
     p.add_argument("--url", required=True)
     p.add_argument("--spec", required=True, metavar="FLEET_JSON")
+    p.add_argument("--elastic", action="store_true",
+                   help="POST with ?elastic=1: re-plan a resized fleet "
+                        "with changed cells warm-started from their "
+                        "prior family reports")
     p.add_argument("--token", default=None,
                    help="bearer token for an auth-enabled service")
     p.add_argument("--timeout", type=float, default=DEFAULT_SEARCH_TIMEOUT,

@@ -1,0 +1,336 @@
+"""Serving-workload search + elastic re-search, and the bug fixes that
+unblock them: DeviceSweep count validation, the ServeEngine KV-overflow
+guard, and warmup-step exclusion in emitted calibration traces.
+
+The elastic assertions here are the PR's contract: an unchanged pool is a
+byte-identical store hit with zero engine calls; a shrunk (or grown) pool
+warm-starts from the prior report, evaluates strictly fewer candidates
+than the cold search it replaces, and agrees with it on the winner.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from harness_service import CountingAstra, http_service, request
+from repro.calibration.fit import AnalyticEtaModel
+from repro.calibration.traces import StepTrace
+from repro.core import (
+    Astra,
+    DeviceSweep,
+    FixedPool,
+    InferenceShape,
+    Limits,
+    ObjectiveSpec,
+    SearchReport,
+    SearchSpec,
+    Workload,
+)
+from repro.core.pareto import CellBest, CostedStrategy
+from repro.core.params import ParallelStrategy
+from repro.core.simulate import SimResult
+from repro.serve.search_service import SearchService
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_device_sweep_rejects_degenerate_min_devices():
+    # min_devices=0 used to spin counts() forever (0 *= 2 stays 0)
+    with pytest.raises(ValueError, match="min_devices"):
+        DeviceSweep(("A800",), max_devices=8, min_devices=0)
+    with pytest.raises(ValueError, match="min_devices"):
+        DeviceSweep(("A800",), max_devices=2, min_devices=4)
+
+
+def test_device_sweep_counts_terminate_and_cover_the_range():
+    assert DeviceSweep(("A800",), 64).counts() == [2, 4, 8, 16, 32, 64]
+    assert DeviceSweep(("A800",), 1, min_devices=1).counts() == [1]
+
+
+def test_serve_engine_kv_overflow_raises(tiny_dense):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.serve import ServeEngine
+
+    cfg = lm.ModelCfg(dtype=jnp.float32, attn_impl="xla", ssm_impl="xla")
+    params = lm.init_params(tiny_dense, jax.random.PRNGKey(0))
+    engine = ServeEngine(tiny_dense, cfg, params, max_len=8)
+    prompts = np.zeros((1, 5), dtype=np.int32)
+    # 5 + 4 > 8: positions past the cache end used to clobber it silently
+    with pytest.raises(ValueError, match="max_len"):
+        engine.generate(prompts, max_new_tokens=4)
+    # frontend features occupy cache slots too and must be accounted
+    with pytest.raises(ValueError, match="frontend_len"):
+        engine.generate(
+            prompts, max_new_tokens=1,
+            frontend=jnp.zeros((1, 3, tiny_dense.hidden)),
+        )
+    # exactly filling the cache is fine
+    result = engine.generate(prompts, max_new_tokens=3)
+    assert result.tokens.shape == (1, 8)
+
+
+def test_serve_engine_reports_warmup_steps_until_batch_is_warm(tiny_dense):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.serve import ServeEngine
+
+    cfg = lm.ModelCfg(dtype=jnp.float32, attn_impl="xla", ssm_impl="xla")
+    params = lm.init_params(tiny_dense, jax.random.PRNGKey(0))
+    engine = ServeEngine(tiny_dense, cfg, params, max_len=16)
+    prompts = np.zeros((2, 4), dtype=np.int32)
+    first = engine.generate(prompts, max_new_tokens=3)
+    assert first.warmup_steps == 1  # the compile landed in step_times[0]
+    again = engine.generate(prompts, max_new_tokens=3)
+    assert again.warmup_steps == 0  # batch shape already compiled
+    # a new batch shape compiles its own executable
+    other = engine.generate(np.zeros((3, 4), dtype=np.int32), max_new_tokens=2)
+    assert other.warmup_steps == 1
+
+
+def test_steptrace_warmup_exclusion_is_sparse_on_the_wire(tiny_dense):
+    base = dict(
+        arch=tiny_dense,
+        strategy=ParallelStrategy(device="A800", num_devices=1),
+        global_batch=8, seq=128, step_times=(0.5, 0.5), source="serve",
+    )
+    clean = StepTrace(**base)
+    assert "warmup_steps_excluded" not in clean.to_dict()  # old bytes intact
+    marked = StepTrace(**base, warmup_steps_excluded=1)
+    assert marked.to_dict()["warmup_steps_excluded"] == 1
+    assert StepTrace.from_dict(marked.to_dict()) == marked
+    with pytest.raises(ValueError, match="warmup_steps_excluded"):
+        StepTrace(**base, warmup_steps_excluded=-1)
+
+
+# ---------------------------------------------------------------------------
+# serving workload: spec wire + search semantics
+# ---------------------------------------------------------------------------
+
+INF = InferenceShape(prefill_len=256, decode_len=64, slo_per_token=0.5)
+
+
+def _serving_spec(llama7b, n=8, inf=INF, objective=None):
+    return SearchSpec(
+        arch=llama7b,
+        pool=DeviceSweep(("A800",), max_devices=n, min_devices=2),
+        workload=Workload(global_batch=32, seq=4096, inference=inf),
+        objective=objective or ObjectiveSpec.latency(),
+        limits=Limits(top_k=5),
+    )
+
+
+def test_serving_spec_wire_roundtrip(llama7b):
+    spec = _serving_spec(llama7b, inf=InferenceShape(
+        prefill_len=256, decode_len=64,
+        batch_mix=((8, 1.0), (32, 3.0)), slo_per_token=0.25,
+    ))
+    assert SearchSpec.from_json(spec.to_json()) == spec
+    assert SearchSpec.from_json(spec.to_json()).cache_key() == spec.cache_key()
+
+
+def test_training_spec_wire_has_no_inference_key(llama7b):
+    # back-compat: a training spec's wire bytes and cache key must be
+    # exactly what they were before InferenceShape existed
+    spec = SearchSpec(
+        arch=llama7b,
+        pool=FixedPool("A800", 8),
+        workload=Workload(global_batch=64, seq=2048),
+    )
+    assert "inference" not in json.dumps(spec.to_dict())
+    assert "inference" not in spec.canonical_json()
+
+
+def test_family_key_ignores_the_pool_and_nothing_else(llama7b):
+    a = _serving_spec(llama7b, n=8)
+    b = _serving_spec(llama7b, n=32)
+    assert a.cache_key() != b.cache_key()
+    assert a.family_key() == b.family_key()
+    other = dataclasses.replace(
+        a, workload=dataclasses.replace(a.workload, global_batch=64)
+    )
+    assert other.family_key() != a.family_key()
+
+
+def test_serving_search_returns_cheapest_meeting_slo(llama7b):
+    report = Astra(AnalyticEtaModel()).search(_serving_spec(llama7b))
+    assert report.best is not None
+    assert report.best_sim.step_time <= INF.slo_per_token
+    # cheapest: the winner is top-ranked and no other SLO-satisfier in the
+    # ranking costs less
+    best_c = report.top[0]
+    assert best_c.strategy == report.best
+    assert all(
+        c.money >= best_c.money
+        for c in report.top[1:] if c.sim.step_time <= INF.slo_per_token
+    )
+    # per-cell champions cover every swept cell that had a valid candidate
+    covered = {(c.strategy.device, c.strategy.num_devices)
+               for c in report.cells}
+    assert covered  # serving sweeps keep their champions
+
+
+def test_serving_search_infeasible_slo_returns_none(llama7b):
+    spec = _serving_spec(llama7b, inf=InferenceShape(
+        prefill_len=256, decode_len=64, slo_per_token=1e-9,
+    ))
+    report = Astra(AnalyticEtaModel()).search(spec)
+    assert report.best is None and report.best_sim is None
+    assert report.evaluated > 0  # it searched; nothing met the SLO
+
+
+# ---------------------------------------------------------------------------
+# elastic re-search
+# ---------------------------------------------------------------------------
+
+def test_elastic_unchanged_pool_is_byte_identical_with_zero_searches(llama7b):
+    counting = CountingAstra()
+    svc = SearchService(counting)
+    spec = _serving_spec(llama7b)
+    _, cold_text, cached = svc.search_json(spec.to_json(), elastic=True)
+    assert not cached and counting.calls == 1
+    _, warm_text, cached = svc.search_json(spec.to_json(), elastic=True)
+    assert cached and counting.calls == 1  # store hit, zero engine calls
+    assert warm_text == cold_text  # byte-identical, not merely equal
+    assert svc.stats_dict()["elastic_searches"] == 2
+    assert svc.stats_dict()["elastic_warm_starts"] == 0
+
+
+def test_elastic_shrink_does_strictly_less_work_and_agrees_on_best(llama7b):
+    svc = SearchService(Astra(AnalyticEtaModel()))
+    svc.search_json(_serving_spec(llama7b, n=16).to_json())
+    shrunk = _serving_spec(llama7b, n=8)
+    _, text, _ = svc.search_json(shrunk.to_json(), elastic=True)
+    elastic = SearchReport.from_json(text)
+    assert svc.stats_dict()["elastic_warm_starts"] == 1
+
+    cold = Astra(AnalyticEtaModel()).search(shrunk)
+    assert elastic.best == cold.best
+    assert elastic.best_sim == cold.best_sim
+    assert elastic.evaluated < cold.evaluated
+    # every funnel rung strictly shrinks: the warm start is auditable
+    for rung in ("generated", "divisible", "after_rules", "after_memory"):
+        assert getattr(elastic.counts, rung) < getattr(cold.counts, rung)
+
+
+def test_elastic_grow_streams_only_the_new_region(llama7b):
+    svc = SearchService(Astra(AnalyticEtaModel()))
+    svc.search_json(_serving_spec(llama7b, n=8).to_json())
+    grown = _serving_spec(llama7b, n=16)
+    _, text, _ = svc.search_json(grown.to_json(), elastic=True)
+    elastic = SearchReport.from_json(text)
+    assert svc.stats_dict()["elastic_warm_starts"] == 1
+
+    cold = Astra(AnalyticEtaModel()).search(grown)
+    assert elastic.best == cold.best
+    assert elastic.evaluated < cold.evaluated
+
+
+def test_elastic_applies_to_training_sweeps_too(llama7b):
+    # elastic is not serving-only: any cell-decomposable pool warm-starts
+    svc = SearchService(Astra(AnalyticEtaModel()))
+    spec16 = SearchSpec(
+        arch=llama7b,
+        pool=DeviceSweep(("A800",), 16),
+        workload=Workload(global_batch=64, seq=2048),
+        objective=ObjectiveSpec.pareto(None),
+    )
+    svc.search_json(spec16.to_json())
+    spec8 = dataclasses.replace(spec16, pool=DeviceSweep(("A800",), 8))
+    _, text, _ = svc.search_json(spec8.to_json(), elastic=True)
+    elastic = SearchReport.from_json(text)
+    assert svc.stats_dict()["elastic_warm_starts"] == 1
+    cold = Astra(AnalyticEtaModel()).search(spec8)
+    assert elastic.best == cold.best
+    assert elastic.evaluated < cold.evaluated
+
+
+def test_elastic_without_a_prior_falls_back_to_cold(llama7b):
+    counting = CountingAstra()
+    svc = SearchService(counting)
+    _, text, cached = svc.search_json(
+        _serving_spec(llama7b).to_json(), elastic=True
+    )
+    assert not cached and counting.calls == 1
+    assert svc.stats_dict()["elastic_warm_starts"] == 0
+    assert SearchReport.from_json(text).best is not None
+
+
+def test_elastic_over_http_query_param(llama7b):
+    svc = SearchService(Astra(AnalyticEtaModel()))
+    small, big = _serving_spec(llama7b, n=8), _serving_spec(llama7b, n=16)
+    with http_service(svc) as url:
+        status, cold = request(
+            f"{url}/v1/search", big.to_json().encode()
+        )
+        assert status == 200
+        status, warm = request(
+            f"{url}/v1/search?elastic=1", small.to_json().encode()
+        )
+        assert status == 200
+        status, stats = request(f"{url}/v1/stats")
+    assert stats["elastic_searches"] == 1
+    assert stats["elastic_warm_starts"] == 1
+    assert warm["report"]["evaluated"] < cold["report"]["evaluated"]
+
+
+# ---------------------------------------------------------------------------
+# per-cell champions (the elastic seed set)
+# ---------------------------------------------------------------------------
+
+def _costed(device, n, money, thr):
+    s = ParallelStrategy(device=device, num_devices=n)
+    sim = SimResult(
+        step_time=1.0, throughput_samples=thr, throughput_tokens=thr,
+        pipeline_time=0.0, bubble_time=0.0, dp_exposed_time=0.0,
+        optimizer_time=0.0, stage_times=[], stage_p2p=[],
+        money_per_hour=money, money_per_step=money,
+    )
+    return CostedStrategy(strategy=s, sim=sim, throughput=thr, money=money)
+
+
+def test_cellbest_keeps_one_champion_per_cell():
+    cb = CellBest()
+    cb.push(_costed("A800", 8, 1.0, 100.0))
+    cb.push(_costed("A800", 8, 1.0, 200.0))  # better throughput, same cell
+    cb.push(_costed("A800", 16, 1.0, 50.0))
+    champs = cb.sorted()
+    assert [(c.strategy.num_devices, c.throughput) for c in champs] == \
+        [(8, 200.0), (16, 50.0)]
+
+
+def test_cellbest_merge_matches_single_pass():
+    cands = [_costed("A800", 4 * (1 + i % 3), float(i % 5), float(i))
+             for i in range(30)]
+    single = CellBest()
+    for c in cands:
+        single.push(c)
+    left, right = CellBest(), CellBest()
+    for i, c in enumerate(cands):
+        (left if i % 2 else right).push(c, seq=(i,))
+    left.merge(right)
+    assert [c for _, c in left.entries()] == [c for _, c in single.entries()]
+
+
+def test_cellbest_ties_break_toward_earlier_stream_position():
+    cb = CellBest()
+    first, second = _costed("A800", 8, 1.0, 10.0), _costed("A800", 8, 1.0, 10.0)
+    cb.push(first, seq=(0,))
+    cb.push(second, seq=(1,))
+    assert cb.sorted()[0] is first  # identical key: earliest seq wins
+
+
+def test_report_cells_survive_the_wire(llama7b):
+    rep = Astra(AnalyticEtaModel()).search(_serving_spec(llama7b))
+    assert rep.cells
+    assert SearchReport.from_json(rep.to_json()) == rep
+    # training reports on a FixedPool carry their single cell too, sparse
+    # on the wire only when empty
+    assert "cells" in rep.to_dict()
