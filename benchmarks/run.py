@@ -62,6 +62,15 @@ def _derived(name: str, rows: list[dict]) -> str:
             if pln:
                 out += (f";planner_replan_speedup={pln[0]['replan_speedup']}x"
                         f";plan_identical={pln[0]['plan_identical']}")
+            fun = [r for r in rows if r["bench"] == "table1-funnel"
+                   and r.get("stage") == "front-half"]
+            if fun:
+                out += (f";funnel_speedup={fun[0]['speedup']}x"
+                        f";funnel_identical={fun[0]['identical']}")
+            forest = [r for r in rows if r["bench"] == "table1-funnel"
+                      and r.get("stage") == "forest-predict"]
+            if forest:
+                out += f";forest_predict_speedup={forest[0]['speedup']}x"
             return out
         if name in ("fig5", "fig6"):
             ratios = [r["ratio"] for r in rows if r.get("ratio")]

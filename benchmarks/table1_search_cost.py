@@ -33,6 +33,14 @@ setting the rows also record the host-independent work partition —
 whose ``partition_speedup`` (serial work / slowest shard) is what a host
 with >= workers free cores realizes.
 
+``table1-funnel`` rows measure the columnar cold-search front half
+(:mod:`repro.core.funnel`): the mode-3 sweep's generate/divisible/rules/
+memory funnel drained with the vectorized block path vs the per-candidate
+scalar reference, survivors and funnel counts asserted identical — plus a
+``forest-predict`` micro-row timing the flat-forest GBT ``predict`` against
+the recursive ``predict_reference`` oracle at 10k rows on a
+300-tree/depth-7 model (the shape the calibrated eta model ships with).
+
 ``table1-planner`` rows put the fleet capacity planner (:mod:`repro.fleet`)
 on the same amortization axis: a 3-job x 2-pool ``FleetSpec`` planned cold
 (every grid cell searched), re-planned from the warm grid after evicting
@@ -70,6 +78,8 @@ import os
 import tempfile
 import time
 
+import numpy as np
+
 from repro.configs import PAPER_MODELS
 from repro.core import (
     Astra,
@@ -87,7 +97,13 @@ from repro.core import (
 from repro.core.backend import FleetBackend, LocalPoolBackend, evaluate_shard
 from repro.core.batch import BatchedCostSimulator
 from repro.core.params import GpuConfig
-from repro.core.search import generate_strategies
+from repro.core.search import (
+    FilterBank,
+    SearchCounts,
+    generate_strategies,
+    iter_valid_strategies,
+)
+from repro.gbt import GradientBoostedTrees
 from repro.serve.search_service import SearchService, make_server
 from repro.serve.store import SqliteStore
 
@@ -291,6 +307,87 @@ def _pool_spinup_rows(eta, model: str, spec: SearchSpec) -> list[dict]:
         "spinup_delta_s": round(cold_s - warm_s, 3),
         "pool_spinups_across_3_searches": spinups,
     }]
+
+
+def funnel_rows(eta=None) -> list[dict]:
+    """Columnar vs scalar cold-search front half on the mode-3 sweep, plus
+    the flat-forest predict micro-benchmark. ``eta`` is unused (the front
+    half stops before simulation) but kept for the harness signature."""
+    _, _, spec = _parallel_settings()[1]  # the mode-3 sweep
+    arch, w, pool = spec.arch, spec.workload, spec.pool
+
+    def front_half(vectorize: bool):
+        # fresh bank per run: each side pays its own memoization warm-up,
+        # exactly as a cold search does
+        bank = FilterBank(arch, w.seq, global_batch=w.global_batch)
+        counts = SearchCounts()
+        survivors = []
+        t0 = time.perf_counter()
+        for dev in pool.devices:
+            gpus = [GpuConfig(dev, n) for n in pool.counts()]
+            survivors.extend(iter_valid_strategies(
+                arch, gpus, w.global_batch, w.seq, counts=counts,
+                filters=bank, indexed=True, vectorize=vectorize,
+            ))
+        return time.perf_counter() - t0, survivors, counts
+
+    front_half(True)  # warm the process-wide layer-census caches
+    t_vec, vec_out, vec_counts = min(
+        (front_half(True) for _ in range(3)), key=lambda r: r[0]
+    )
+    t_scalar, ref_out, ref_counts = min(
+        (front_half(False) for _ in range(2)), key=lambda r: r[0]
+    )
+    identical = (
+        vec_out == ref_out
+        and vec_counts.normalized() == ref_counts.normalized()
+    )
+    assert identical, "vectorized funnel diverged from the scalar reference"
+
+    rows = [{
+        "bench": "table1-funnel",
+        "stage": "front-half",
+        "model": spec.arch.name,
+        "pool": "sweep",
+        "generated": vec_counts.generated,
+        "survivors": len(vec_out),
+        "scalar_s": round(t_scalar, 3),
+        "vectorized_s": round(t_vec, 3),
+        "speedup": round(t_scalar / max(t_vec, 1e-9), 2),
+        "identical": identical,
+    }]
+
+    # flat-forest predict vs the recursive reference at the calibrated eta
+    # model's shape (300 trees, depth 7), best-of-N on 10k query rows
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((2000, 8))
+    y = X[:, 0] * 2.0 - X[:, 1] + 0.25 * np.sin(3.0 * X[:, 2])
+    forest = GradientBoostedTrees(n_estimators=300, max_depth=7).fit(X, y)
+    Xq = rng.standard_normal((10_000, 8))
+    assert np.array_equal(forest.predict(Xq), forest.predict_reference(Xq))
+
+    def best_of(fn, n):
+        times = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn(Xq)
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_flat = best_of(forest.predict, 5)
+    t_ref = best_of(forest.predict_reference, 2)
+    rows.append({
+        "bench": "table1-funnel",
+        "stage": "forest-predict",
+        "trees": 300,
+        "max_depth": 7,
+        "rows": len(Xq),
+        "reference_s": round(t_ref, 4),
+        "flat_s": round(t_flat, 4),
+        "speedup": round(t_ref / max(t_flat, 1e-9), 2),
+        "identical": True,
+    })
+    return rows
 
 
 def serving_elastic_rows(eta) -> list[dict]:
@@ -601,10 +698,13 @@ def run(eta) -> list[dict]:
     # fleet execution over HTTP workers + warm-pool spin-up delta
     flt_rows = fleet_rows(eta)
 
+    # columnar vs scalar funnel front half + flat-forest predict micro-row
+    fun_rows = funnel_rows(eta)
+
     # serving-workload search + elastic re-search saving
     serve_rows = serving_elastic_rows(eta)
 
     # fleet capacity planner: cold grid / warm grid / incremental re-plan
     plan_rows = planner_rows(eta)
     return (rows + engine_rows + service_rows + persist_rows + par_rows
-            + flt_rows + serve_rows + plan_rows)
+            + flt_rows + fun_rows + serve_rows + plan_rows)

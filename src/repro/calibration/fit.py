@@ -206,6 +206,16 @@ class EtaModel:
             out[i] = np.clip(wire / (bw * max(t[i], 1e-12)), 1e-9, 1.0)
         return out
 
+    def prepare(self) -> "EtaModel":
+        """Pre-build both GBTs' flat-forest node arrays (otherwise built
+        lazily on the first predict). The evaluation engines call this at
+        construction so long-lived warm engines — the serial backend's
+        shared pair, each pool worker's private one — pay the flattening
+        cost once, off the search hot path."""
+        self.comp_model.forest()
+        self.comm_model.forest()
+        return self
+
     # -- identity ---------------------------------------------------------
     def to_dict(self) -> dict:
         return {"comp": self.comp_model.to_dict(), "comm": self.comm_model.to_dict()}

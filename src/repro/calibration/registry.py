@@ -99,7 +99,15 @@ class MemoryModelRegistry(EtaModelRegistry):
             item = self._items.get(version)
         if item is None:
             return None
-        return EtaModel.from_dict(json.loads(item[0]))
+        try:
+            return EtaModel.from_dict(json.loads(item[0]))
+        except (ValueError, KeyError, TypeError):
+            # structurally invalid node table (out-of-range child, cycle,
+            # leaf with children): drop + count like any other corrupt row
+            with self._lock:
+                self._items.pop(version, None)
+            self.corruptions += 1
+            return None
 
     def meta(self, version: str) -> Optional[dict]:
         with self._lock:
@@ -245,7 +253,19 @@ class SqliteModelRegistry(EtaModelRegistry):
         row = self._row(version)
         if row is None:
             return None
-        return EtaModel.from_dict(json.loads(row[0]))
+        try:
+            return EtaModel.from_dict(json.loads(row[0]))
+        except (ValueError, KeyError, TypeError):
+            # checksum-valid bytes can still encode a structurally invalid
+            # node table (e.g. written by a buggy producer): delete + count
+            # rather than hand predict a cyclic tree
+            with self._lock:
+                with self._conn:
+                    self._conn.execute(
+                        "DELETE FROM eta_models WHERE version = ?", (version,)
+                    )
+            self.corruptions += 1
+            return None
 
     def meta(self, version: str) -> Optional[dict]:
         row = self._row(version)

@@ -190,7 +190,7 @@ class SearchReport:
             self,
             search_seconds=0.0,
             simulate_seconds=0.0,
-            counts=dataclasses.replace(self.counts, gen_seconds=0.0),
+            counts=self.counts.normalized(),
         ).to_json()
 
 

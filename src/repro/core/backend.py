@@ -50,6 +50,7 @@ import json
 import multiprocessing
 import os
 import threading
+import time
 import warnings
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
@@ -131,6 +132,8 @@ def evaluate_shard(
         engine = _make_engine(eta_model, use_batched)
     w = spec.workload
     evaluated = 0
+    gen0 = plan.counts.gen_seconds
+    t0 = time.perf_counter()
     for si, stream in enumerate(plan.streams):
         pairs = timed(stream.shard(i, n), plan.counts)
         evaluated += stream_evaluate_indexed(
@@ -140,6 +143,10 @@ def evaluate_shard(
             train_tokens=w.train_tokens, chunk_size=chunk_size,
             inference=w.inference,
         )
+    # simulate rung: evaluation wall-time minus this shard's generation time
+    plan.counts.sim_seconds += max(
+        time.perf_counter() - t0 - (plan.counts.gen_seconds - gen0), 0.0
+    )
     return collector, plan.counts, evaluated
 
 
@@ -339,6 +346,8 @@ class SerialBackend(ExecutionBackend):
 
             evaluated = 0
             budget = spec.limits.max_candidates
+            gen0 = plan.counts.gen_seconds
+            t0 = time.perf_counter()
             for stream in plan.streams:
                 it: Iterable[ParallelStrategy] = stream.strategies
                 if budget is not None:
@@ -351,6 +360,10 @@ class SerialBackend(ExecutionBackend):
                     train_tokens=w.train_tokens, chunk_size=chunk_size,
                     inference=w.inference,
                 )
+            plan.counts.sim_seconds += max(
+                time.perf_counter() - t0 - (plan.counts.gen_seconds - gen0),
+                0.0,
+            )
         finally:
             if locked:
                 self._engine_lock.release()

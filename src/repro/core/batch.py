@@ -146,6 +146,13 @@ class BatchedCostSimulator:
 
     def __init__(self, eta_model):
         self.eta = eta_model
+        # eta models with prebuildable inference state (the flat-forest GBT
+        # node arrays) flatten now, at engine construction: warm engines —
+        # the serial backend's shared pair, each pool worker's per-process
+        # one — then serve every search on ready-made forests
+        prepare = getattr(eta_model, "prepare", None)
+        if callable(prepare):
+            prepare()
         self._comp = _OpTimeTable(
             getattr(eta_model, "compute_times", None), eta_model.compute_time
             if hasattr(eta_model, "compute_time") else None,

@@ -111,12 +111,14 @@ def elastic_search(astra, spec: SearchSpec, prior_spec: SearchSpec, prior):
         # 1) re-simulate the survivors (already filter-validated by the
         #    prior search — the filters read arch/seq/strategy, never the
         #    pool, so the verdicts carry over; count them on every rung)
+        t_sim = time.perf_counter()
         evaluated = stream_evaluate(
             engine, spec.arch, survivors, collector.push,
             global_batch=w.global_batch, seq=w.seq,
             train_tokens=w.train_tokens, chunk_size=chunk_size,
             inference=w.inference,
         )
+        counts.sim_seconds += time.perf_counter() - t_sim
         counts.generated += len(survivors)
         counts.divisible += len(survivors)
         counts.after_rules += len(survivors)
@@ -137,11 +139,17 @@ def elastic_search(astra, spec: SearchSpec, prior_spec: SearchSpec, prior):
                 w.global_batch, w.seq, space=spec.space,
                 counts=counts, filters=bank,
             )
+            gen0 = counts.gen_seconds
+            t_sim = time.perf_counter()
             evaluated += stream_evaluate(
                 engine, spec.arch, timed(stream, counts), collector.push,
                 global_batch=w.global_batch, seq=w.seq,
                 train_tokens=w.train_tokens, chunk_size=chunk_size,
                 inference=w.inference,
+            )
+            counts.sim_seconds += max(
+                time.perf_counter() - t_sim - (counts.gen_seconds - gen0),
+                0.0,
             )
     finally:
         if locked:

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.arch import ModelArch
 from repro.core.params import ParallelStrategy
 from repro.hw.catalog import get_device
@@ -215,6 +217,114 @@ class MemoryFilter:
             arch, strategy, stage, seq=self.seq,
             layers_in_stage=layers_in_stage,
         ).total
+
+    def block_valid(
+        self,
+        arch: ModelArch,
+        *,
+        device: str,
+        tp: np.ndarray,
+        pp: np.ndarray,
+        mbs: np.ndarray,
+        ep: np.ndarray,
+        dp: np.ndarray,
+        sp: np.ndarray,
+        flash: np.ndarray,
+        zero: np.ndarray,
+        offload: np.ndarray,
+        rg_full: np.ndarray,
+        rg_sel: np.ndarray,
+    ) -> "np.ndarray | None":
+        """Vectorized :meth:`is_valid` over a block of homogeneous training
+        candidates (one device, ``hetero is None``, ``num_layers % pp == 0``
+        already established by the divisibility rung).
+
+        Every arithmetic step replays :func:`stage_memory` /
+        :func:`activation_bytes_per_layer` with the same float64 operation
+        order, so verdicts are bit-identical to the scalar filter. The
+        per-stage maximum collapses to ``max(stage 0, stage pp-1)``:
+        middle stages hold strictly fewer parameters than stage 0 (no
+        embedding) and fewer in-flight microbatches, so they never set the
+        peak. Returns ``None`` for serving workloads (the scalar filter
+        owns that path).
+        """
+        if self.inference is not None:
+            return None
+        cap = get_device(device).mem_bytes
+        seq = self.seq
+
+        # per-(tp, ep) layer-parameter shard via the *scalar* accumulation
+        # loop (same float add order as stage_parameter_count)
+        per_layer = arch.layer_params()
+
+        def shard_of(t: int, e: int) -> float:
+            n = 0.0
+            for name, count in per_layer.items():
+                if name == "moe_experts":
+                    n += count / (e * t)
+                elif name == "norms":
+                    n += count
+                else:
+                    n += count / t
+            return n
+
+        pair = tp * (int(ep.max()) + 1) + ep
+        uniq, first, inv = np.unique(
+            pair, return_index=True, return_inverse=True
+        )
+        inv = np.asarray(inv).reshape(-1)
+        table = np.empty(len(uniq), dtype=np.float64)
+        for u, i in enumerate(first):
+            table[u] = shard_of(int(tp[i]), int(ep[i]))
+        shard = table.take(inv)
+
+        layers = arch.num_layers // pp
+        base_params = shard * layers
+        vh_t = (arch.vocab * arch.hidden) / tp
+
+        # activation_bytes_per_layer, same op order per lane
+        sbh = float(seq) * mbs * arch.hidden
+        if arch.is_attention_free:
+            score = 0.0
+        else:
+            score = np.where(
+                flash | rg_sel, 0.0, 5.0 * arch.heads * seq / (arch.hidden * tp)
+            )
+        base = np.where(sp, 34.0 / tp, 10.0 + 24.0 / tp)
+        ffn_scale = 1.0
+        if arch.family == "moe":
+            ffn_scale = 1.0 + 0.6 * (arch.top_k - 1)
+        if arch.family in ("ssm", "hybrid"):
+            base = base + 8.0 * arch.ssm_expand / tp
+        act_layer = np.where(rg_full, 2.0 * sbh, sbh * (base * ffn_scale + score))
+        act_per_mb = act_layer * layers
+
+        def stage_total(params: np.ndarray, in_flight) -> np.ndarray:
+            weights = params * BF16
+            grads = params * GRAD_BYTES_PER_PARAM
+            opt = params * OPTIMIZER_BYTES_PER_PARAM
+            opt = np.where(zero, opt / np.maximum(dp, 1), opt)
+            opt = np.where(offload, 0.0, opt)
+            activations = act_per_mb * in_flight
+            return (
+                (weights + grads + opt + activations) * _FRAGMENTATION
+                + 0.0 + _RESERVED_BYTES
+            )
+
+        # stage 0 of a pp>1 pipeline: embedding only
+        t_first = stage_total(base_params + vh_t, pp)
+        # stage pp-1 of a pp>1 pipeline: output embedding + final norm
+        # (tie_embeddings only elides it when pp == 1)
+        t_last = stage_total((base_params + vh_t) + arch.hidden, 1)
+        # pp == 1: the single stage carries both ends
+        tie = arch.tie_embeddings
+        p_single = (
+            (base_params + vh_t) + (0.0 if tie else vh_t)
+        ) + arch.hidden
+        t_single = stage_total(p_single, 1)
+
+        worst = np.where(pp == 1, t_single, np.maximum(t_first, t_last))
+        return worst <= cap
 
     def is_valid(self, arch: ModelArch, strategy: ParallelStrategy) -> bool:
         cap = get_device(strategy.device).mem_bytes

@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import numpy as np
 
 _TOKEN_RE = re.compile(
     r"""
@@ -174,6 +176,184 @@ def _eval(node, env: Mapping[str, Any]):
     raise AssertionError(f"bad node {node!r}")
 
 
+# ---------------------------------------------------------------------------
+# block-mask evaluation (vectorized funnel)
+# ---------------------------------------------------------------------------
+#
+# ``_eval_block`` mirrors ``_eval`` over whole candidate blocks: env values
+# are numpy columns (one entry per candidate), CategoricalColumn for
+# non-numeric parameters, or plain Python scalars for block-constant values
+# (scalar subexpressions then fold through ``_eval``-identical Python
+# arithmetic for free). Any construct whose vectorization could diverge from
+# the per-candidate interpreter — non-numeric arithmetic, ordered comparison
+# of mixed types, a zero divisor anywhere in a block (Python raises, numpy
+# warns-and-continues), a missing variable — raises :class:`MaskCompileError`
+# instead of guessing, and the caller re-runs that rule through the scalar
+# interpreter. The mask path therefore either returns provably identical
+# verdicts or defers; it never silently disagrees.
+
+
+class MaskCompileError(Exception):
+    """A rule (or subexpression) has no faithful block-mask evaluation."""
+
+
+class CategoricalColumn:
+    """A non-numeric strategy column: small unique-value table + int codes.
+
+    Comparisons against a literal evaluate once per unique value (plain
+    Python semantics), then broadcast through the code array — so string
+    parameters cost one gather per rule instead of one compare per candidate.
+    """
+
+    __slots__ = ("values", "codes")
+
+    def __init__(self, values: Sequence[Any], codes: np.ndarray):
+        self.values = tuple(values)
+        self.codes = np.asarray(codes, dtype=np.int64)
+
+    def lut(self, fn: "Callable[[Any], bool]") -> np.ndarray:
+        table = np.fromiter((bool(fn(v)) for v in self.values), bool,
+                            len(self.values))
+        return table.take(self.codes)
+
+
+_NUMERIC_KINDS = "biuf"
+
+
+def _is_numeric_array(v: Any) -> bool:
+    return isinstance(v, np.ndarray) and v.dtype.kind in _NUMERIC_KINDS
+
+
+def _is_plain_scalar(v: Any) -> bool:
+    return not isinstance(v, (np.ndarray, CategoricalColumn))
+
+
+def _truthy_block(v: Any):
+    """Vectorized ``_truthy``: bool array per candidate, or a Python bool."""
+    if isinstance(v, CategoricalColumn):
+        return v.lut(bool)
+    if isinstance(v, np.ndarray):
+        if v.dtype.kind == "b":
+            return v
+        if v.dtype.kind in _NUMERIC_KINDS:
+            return v != 0
+        raise MaskCompileError(f"no truthiness for dtype {v.dtype}")
+    return bool(v)
+
+
+def _as_arith_operand(v: Any):
+    """Coerce for arithmetic: bool arrays widen to int64 so ``true + true``
+    is 2 (Python semantics), not numpy's saturating boolean add."""
+    if isinstance(v, CategoricalColumn):
+        raise MaskCompileError("arithmetic on a non-numeric column")
+    if isinstance(v, np.ndarray):
+        if v.dtype.kind == "b":
+            return v.astype(np.int64)
+        if v.dtype.kind not in _NUMERIC_KINDS:
+            raise MaskCompileError(f"arithmetic on dtype {v.dtype}")
+        return v
+    if isinstance(v, bool):
+        return int(v)
+    if isinstance(v, (int, float)):
+        return v
+    raise MaskCompileError(f"arithmetic on {type(v).__name__}")
+
+
+def _check_divisor(b: Any) -> None:
+    # Python raises ZeroDivisionError where numpy warns and yields 0/inf/nan;
+    # defer so the scalar interpreter reproduces the exact per-candidate error
+    if isinstance(b, np.ndarray):
+        if (b == 0).any():
+            raise MaskCompileError("zero divisor in block")
+    elif b == 0:
+        raise MaskCompileError("zero divisor in block")
+
+
+def _eval_block(node, env: Mapping[str, Any]):
+    kind = node[0]
+    if kind == "lit":
+        return node[1]
+    if kind == "var":
+        name = node[1].replace("-", "_")
+        if name not in env:
+            raise MaskCompileError(f"unknown strategy parameter ${node[1]}")
+        return env[name]
+    if kind in ("or", "and"):
+        a = _truthy_block(_eval_block(node[1], env))
+        if isinstance(a, bool):
+            # block-constant left side: preserve Python's short-circuit
+            if (kind == "or") == a:
+                return a
+            return _truthy_block(_eval_block(node[2], env))
+        # per-candidate left side: the scalar interpreter would skip the
+        # right side for some candidates, so any error there must defer to
+        # the interpreter rather than poison the whole block
+        try:
+            b = _truthy_block(_eval_block(node[2], env))
+        except (ZeroDivisionError, TypeError, KeyError, OverflowError) as e:
+            raise MaskCompileError(f"short-circuit divergence: {e}") from None
+        if kind == "or":
+            return np.logical_or(a, b)
+        return np.logical_and(a, b)
+    if kind == "arith":
+        op = node[1]
+        a = _as_arith_operand(_eval_block(node[2], env))
+        b = _as_arith_operand(_eval_block(node[3], env))
+        if _is_plain_scalar(a) and _is_plain_scalar(b):
+            return _eval(("arith", op, ("lit", a), ("lit", b)), {})
+        if op == "+":
+            return a + b
+        if op == "-":
+            return a - b
+        if op == "*":
+            return a * b
+        if op == "/":
+            _check_divisor(b)
+            return np.true_divide(a, b)
+        _check_divisor(b)
+        return np.mod(a, b)
+    if kind == "cmp":
+        op = node[1]
+        a = _eval_block(node[2], env)
+        b = _eval_block(node[3], env)
+        if _is_plain_scalar(a) and _is_plain_scalar(b):
+            return _eval(("cmp", op, ("lit", a), ("lit", b)), {})
+        for x, y in ((a, b), (b, a)):
+            if isinstance(x, CategoricalColumn):
+                if isinstance(y, (np.ndarray, CategoricalColumn)):
+                    raise MaskCompileError("comparison of two columns")
+                if op == "=":
+                    return x.lut(lambda v: v == y)
+                if op == "!=":
+                    return x.lut(lambda v: v != y)
+                raise MaskCompileError("ordered comparison on categorical")
+        # at least one numeric array remains; the other side is numeric,
+        # or a non-numeric scalar (equality is then type-constant in Python)
+        sides = (a, b)
+        if all(
+            _is_numeric_array(v)
+            or (_is_plain_scalar(v) and isinstance(v, (bool, int, float)))
+            for v in sides
+        ):
+            if op == "=":
+                return np.equal(a, b)
+            if op == "!=":
+                return np.not_equal(a, b)
+            if op == ">":
+                return np.greater(a, b)
+            if op == "<":
+                return np.less(a, b)
+            if op == ">=":
+                return np.greater_equal(a, b)
+            return np.less_equal(a, b)
+        if op == "=":
+            return False  # e.g. int column vs string literal: never equal
+        if op == "!=":
+            return True
+        raise MaskCompileError("ordered comparison of mixed types")
+    raise AssertionError(f"bad node {node!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class Rule:
     text: str
@@ -186,6 +366,22 @@ class Rule:
     def matches(self, env: Mapping[str, Any]) -> bool:
         """True => the strategy hits this forbidden pattern (gets dropped)."""
         return _truthy(_eval(self.ast, env))
+
+    def block_mask(self, env: Mapping[str, Any], n: int) -> np.ndarray:
+        """Per-candidate ``matches`` over a block of ``n`` candidates.
+
+        ``env`` maps parameter names to length-``n`` numpy columns,
+        :class:`CategoricalColumn` code columns, or block-constant Python
+        scalars. Raises :class:`MaskCompileError` whenever a faithful
+        vectorization isn't possible — callers then fall back to
+        :meth:`matches` per candidate.
+        """
+        v = _truthy_block(_eval_block(self.ast, env))
+        if isinstance(v, bool):
+            return np.full(n, v)
+        if v.shape != (n,):
+            v = np.broadcast_to(v, (n,)).copy()
+        return v
 
 
 class RuleFilter:
@@ -202,6 +398,39 @@ class RuleFilter:
             if r.matches(env):
                 return r.text
         return None
+
+    def block_violations(
+        self,
+        env: Mapping[str, Any],
+        n: int,
+        env_at: "Optional[Callable[[int], Mapping[str, Any]]]" = None,
+    ) -> np.ndarray:
+        """Boolean mask of candidates forbidden by *some* rule.
+
+        Rules evaluate in order; a rule that cannot be block-evaluated
+        (:class:`MaskCompileError`) re-runs through the scalar interpreter
+        via ``env_at(i)`` — and only for candidates no earlier rule already
+        forbade, reproducing ``is_valid``'s short-circuit exactly (including
+        which candidates can observe an evaluation error). With no
+        ``env_at`` the compile error propagates.
+        """
+        out = np.zeros(n, dtype=bool)
+        for r in self.rules:
+            try:
+                m = r.block_mask(env, n)
+            except MaskCompileError:
+                if env_at is None:
+                    raise
+                m = np.fromiter(
+                    (
+                        (not out[i]) and bool(r.matches(env_at(i)))
+                        for i in range(n)
+                    ),
+                    bool,
+                    n,
+                )
+            np.logical_or(out, m, out=out)
+        return out
 
 
 # The paper's three example rules (§3.3) as the default rule set. Rule 1 is

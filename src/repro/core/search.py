@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import operator
+import os
 import time
 from typing import Iterable, Optional, Sequence
 
@@ -24,6 +25,13 @@ from repro.core.params import GpuConfig, ParallelStrategy, default_parameter_spa
 from repro.core.rules import DEFAULT_RULES, RuleFilter
 from repro.hw.catalog import get_device
 
+#: SearchCounts wall-time fields beyond ``gen_seconds``: the per-rung split
+#: (enumerate+divisibility / rule filter / memory filter / simulation).
+#: Serialized sparsely — pre-split payloads are byte-identical when zero.
+_TIMING_FIELDS = (
+    "enumerate_seconds", "rules_seconds", "memory_seconds", "sim_seconds",
+)
+
 
 @dataclasses.dataclass
 class SearchCounts:
@@ -32,16 +40,28 @@ class SearchCounts:
     after_rules: int = 0
     after_memory: int = 0
     gen_seconds: float = 0.0
+    # per-rung wall-time split: gen_seconds covers the whole generator
+    # (enumerate + rules + memory ~ its rung sum); sim_seconds is the
+    # evaluator's share of the search wall-time
+    enumerate_seconds: float = 0.0
+    rules_seconds: float = 0.0
+    memory_seconds: float = 0.0
+    sim_seconds: float = 0.0
 
     # -- wire format -------------------------------------------------------
     def to_dict(self) -> dict:
-        return {
+        d = {
             "generated": self.generated,
             "divisible": self.divisible,
             "after_rules": self.after_rules,
             "after_memory": self.after_memory,
             "gen_seconds": wire.dump_float(self.gen_seconds),
         }
+        for name in _TIMING_FIELDS:
+            v = getattr(self, name)
+            if v != 0.0:
+                d[name] = wire.dump_float(v)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "SearchCounts":
@@ -51,19 +71,33 @@ class SearchCounts:
             after_rules=int(d["after_rules"]),
             after_memory=int(d["after_memory"]),
             gen_seconds=wire.load_float(d["gen_seconds"]),
+            **{
+                name: wire.load_float(d[name])
+                for name in _TIMING_FIELDS if name in d
+            },
         )
 
     def merge(self, other: "SearchCounts") -> None:
         """Fold a disjoint shard's funnel counts in. Because round-robin
         shards partition the raw candidate space exactly and each worker
         counts only its own shard, the merged funnel equals the serial one;
-        ``gen_seconds`` sums to total generation CPU time across workers
-        (not wall time)."""
+        ``gen_seconds`` (and the per-rung split) sums to total generation
+        CPU time across workers (not wall time)."""
         self.generated += other.generated
         self.divisible += other.divisible
         self.after_rules += other.after_rules
         self.after_memory += other.after_memory
         self.gen_seconds += other.gen_seconds
+        for name in _TIMING_FIELDS:
+            setattr(self, name, getattr(self, name) + getattr(other, name))
+
+    def normalized(self) -> "SearchCounts":
+        """Copy with every wall-time field zeroed — the comparator for
+        "same funnel" across runs/backends (counts are exact, times vary)."""
+        return dataclasses.replace(
+            self, gen_seconds=0.0,
+            **{name: 0.0 for name in _TIMING_FIELDS},
+        )
 
 
 def strategy_env(arch: ModelArch, s: ParallelStrategy) -> dict:
@@ -327,6 +361,61 @@ def iter_raw_strategies(
         yield s
 
 
+def _scalar_funnel_indexed(
+    arch: ModelArch,
+    gpu: GpuConfig,
+    global_batch: int,
+    bank: FilterBank,
+    counts: SearchCounts,
+    space: Optional[dict[str, list]] = None,
+    shard: tuple[int, int] = (0, 1),
+) -> Iterable[tuple[int, ParallelStrategy]]:
+    """Reference per-candidate funnel for one GPU config (the oracle the
+    columnar path in :mod:`repro.core.funnel` must match byte-for-byte).
+    Accrues the per-rung wall-time split into ``counts``, flushing even
+    when the consumer abandons the generator early."""
+    en = ru = me = 0.0
+    t_mark = time.perf_counter()
+    try:
+        for idx, s in _iter_raw_indexed(
+            arch, gpu, global_batch, space=space, shard=shard
+        ):
+            counts.generated += 1
+            div = s.is_divisible(arch, global_batch)
+            t1 = time.perf_counter()
+            en += t1 - t_mark
+            t_mark = t1
+            if not div:
+                continue
+            counts.divisible += 1
+            ok = bank.rules_ok(s)
+            t1 = time.perf_counter()
+            ru += t1 - t_mark
+            t_mark = t1
+            if not ok:
+                continue
+            counts.after_rules += 1
+            ok = bank.memory_ok(s)
+            t1 = time.perf_counter()
+            me += t1 - t_mark
+            t_mark = t1
+            if not ok:
+                continue
+            counts.after_memory += 1
+            yield idx, s
+            t_mark = time.perf_counter()
+    finally:
+        counts.enumerate_seconds += en
+        counts.rules_seconds += ru
+        counts.memory_seconds += me
+
+
+def _use_vectorized(vectorize: Optional[bool]) -> bool:
+    if vectorize is None:
+        return os.environ.get("ASTRA_SCALAR_FUNNEL", "") != "1"
+    return bool(vectorize)
+
+
 def iter_valid_strategies(
     arch: ModelArch,
     gpus: Sequence[GpuConfig],
@@ -340,6 +429,7 @@ def iter_valid_strategies(
     shard: tuple[int, int] = (0, 1),
     indexed: bool = False,
     inference=None,
+    vectorize: Optional[bool] = None,
 ) -> Iterable[ParallelStrategy]:
     """Streaming S_valid (Eq. 21): yields survivors of the full filter
     funnel while mutating ``counts`` in place. The batched engine consumes
@@ -355,26 +445,40 @@ def iter_valid_strategies(
     then tallies only this shard's funnel, so per-worker counts merged with
     :meth:`SearchCounts.merge` reproduce the serial funnel exactly.
     ``indexed=True`` yields ``((gpu_idx, raw_idx), strategy)`` pairs — the
-    stream position tuple the mergeable collectors tie-break on."""
+    stream position tuple the mergeable collectors tie-break on.
+
+    ``vectorize`` selects the funnel implementation: ``True`` runs the
+    columnar block funnel (:mod:`repro.core.funnel`) wherever it is exact
+    and falls back per GPU config otherwise; ``False`` forces the scalar
+    reference path; ``None`` (default) vectorizes unless the
+    ``ASTRA_SCALAR_FUNNEL=1`` environment knob is set. Both paths produce
+    identical candidates, indices, and counts — the knob trades speed only.
+    A consumer that stops mid-stream (``max_candidates``) must use the
+    scalar path: the columnar funnel tallies counts a whole block at a
+    time."""
+    from repro.core import funnel
+
     bank = filters if filters is not None else FilterBank(
         arch, seq, rules, inference=inference, global_batch=global_batch
     )
     if counts is None:
         counts = SearchCounts()
+    use_vec = _use_vectorized(vectorize)
     for g, gpu in enumerate(gpus):
-        for idx, s in _iter_raw_indexed(
-            arch, gpu, global_batch, space=space, shard=shard
-        ):
-            counts.generated += 1
-            if not s.is_divisible(arch, global_batch):
-                continue
-            counts.divisible += 1
-            if not bank.rules_ok(s):
-                continue
-            counts.after_rules += 1
-            if not bank.memory_ok(s):
-                continue
-            counts.after_memory += 1
+        it = None
+        if use_vec:
+            sp = funnel.resolve_space(arch, gpu, global_batch, space)
+            if funnel.can_vectorize(sp):
+                it = funnel.iter_funnel_indexed(
+                    arch, gpu, global_batch, bank, counts,
+                    space=sp, shard=shard,
+                )
+        if it is None:
+            it = _scalar_funnel_indexed(
+                arch, gpu, global_batch, bank, counts,
+                space=space, shard=shard,
+            )
+        for idx, s in it:
             yield ((g, idx), s) if indexed else s
 
 

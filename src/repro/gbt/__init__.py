@@ -6,7 +6,7 @@ from-scratch implementation: histogram-binned greedy regression trees with
 second-order (Newton) leaf weights and shrinkage — the same algorithm family
 as XGBoost's ``hist`` tree method restricted to squared loss.
 """
-from repro.gbt.tree import RegressionTree
+from repro.gbt.tree import RegressionTree, validate_node_table
 from repro.gbt.boosting import GradientBoostedTrees
 
-__all__ = ["RegressionTree", "GradientBoostedTrees"]
+__all__ = ["RegressionTree", "GradientBoostedTrees", "validate_node_table"]

@@ -26,6 +26,35 @@ class _Node:
     value: float = 0.0
 
 
+def validate_node_table(nodes: "list[_Node]") -> None:
+    """Structural integrity of a node table (used on deserialization).
+
+    The builder's invariant — every child id strictly exceeds its parent's —
+    is what guarantees traversal terminates (ids only move forward), so a
+    table violating it (a corrupt registry row, a truncated file) must be
+    rejected *here* rather than spin ``predict`` forever. Raises
+    ``ValueError`` on: empty table, child index out of range, non-increasing
+    child id (a cycle), or a leaf carrying children.
+    """
+    n = len(nodes)
+    if n == 0:
+        raise ValueError("GBT node table is empty")
+    for i, node in enumerate(nodes):
+        if node.feature < 0:
+            if node.left != -1 or node.right != -1:
+                raise ValueError(f"GBT leaf node {i} has children")
+            continue
+        for child in (node.left, node.right):
+            if not (0 <= child < n):
+                raise ValueError(
+                    f"GBT node {i} child {child} outside table [0, {n})"
+                )
+            if child <= i:
+                raise ValueError(
+                    f"GBT node {i} child {child} does not advance (cycle)"
+                )
+
+
 def quantile_bin_edges(x: np.ndarray, max_bins: int) -> np.ndarray:
     """Candidate thresholds for one feature column (unique quantiles)."""
     qs = np.linspace(0.0, 1.0, max_bins + 1)[1:-1]
@@ -128,7 +157,52 @@ class RegressionTree:
         return best
 
     # -- prediction -----------------------------------------------------
+    def flat_arrays(self) -> tuple[np.ndarray, ...]:
+        """The node table as contiguous SoA arrays
+        ``(feature, threshold, left, right, value)``. Built once per fitted
+        table and cached (nodes never mutate after ``fit``/``from_dict``)."""
+        cached = getattr(self, "_flat", None)
+        if cached is not None and cached[0] == len(self._nodes):
+            return cached[1]
+        n = len(self._nodes)
+        arrays = (
+            np.fromiter((x.feature for x in self._nodes), np.int64, n),
+            np.fromiter((x.threshold for x in self._nodes), np.float64, n),
+            np.fromiter((x.left for x in self._nodes), np.int64, n),
+            np.fromiter((x.right for x in self._nodes), np.int64, n),
+            np.fromiter((x.value for x in self._nodes), np.float64, n),
+        )
+        self._flat = (n, arrays)
+        return arrays
+
     def predict(self, X: np.ndarray) -> np.ndarray:
+        """Level-synchronous gather traversal over the flat node arrays: all
+        samples advance one level per pass, no per-node Python loop. Leaf
+        values are read straight from the table, so the result is bit-exact
+        vs :meth:`predict_reference`."""
+        X = np.asarray(X, dtype=np.float64)
+        m = X.shape[0]
+        feature, threshold, left, right, _value = self.flat_arrays()
+        node = np.zeros(m, dtype=np.int64)
+        rows = np.arange(m)
+        feat = feature[node]
+        internal = feat >= 0
+        # child ids strictly exceed their parent's (builder invariant,
+        # enforced on deserialization), so n_nodes passes always suffice
+        for _ in range(len(self._nodes)):
+            if not internal.any():
+                break
+            go_left = X[rows, np.maximum(feat, 0)] <= threshold[node]
+            node = np.where(
+                internal, np.where(go_left, left[node], right[node]), node
+            )
+            feat = feature[node]
+            internal = feat >= 0
+        return _value[node]
+
+    def predict_reference(self, X: np.ndarray) -> np.ndarray:
+        """Reference oracle: the original per-unique-node traversal. Kept
+        for the parity tests — :meth:`predict` must match it bit-for-bit."""
         X = np.asarray(X, dtype=np.float64)
         out = np.empty(X.shape[0], dtype=np.float64)
         # iterative traversal, vectorized over samples per level

@@ -137,6 +137,12 @@ class ServiceStats:
     elastic_searches: int = 0  # requests that asked for ?elastic=1
     elastic_warm_starts: int = 0  # cold elastic searches warm-started from
     # a prior same-family report (the rest were warm hits or ran cold)
+    # cumulative cold-search funnel wall-time split by rung, accumulated
+    # from each cold report's SearchCounts (seconds; monotonic)
+    funnel_enumerate_seconds: float = 0.0
+    funnel_rules_seconds: float = 0.0
+    funnel_memory_seconds: float = 0.0
+    funnel_simulate_seconds: float = 0.0
 
     @property
     def requests(self) -> int:
@@ -169,6 +175,10 @@ class ServiceStats:
             "grid_warm_hits": self.grid_warm_hits,
             "elastic_searches": self.elastic_searches,
             "elastic_warm_starts": self.elastic_warm_starts,
+            "funnel_enumerate_seconds": round(self.funnel_enumerate_seconds, 6),
+            "funnel_rules_seconds": round(self.funnel_rules_seconds, 6),
+            "funnel_memory_seconds": round(self.funnel_memory_seconds, 6),
+            "funnel_simulate_seconds": round(self.funnel_simulate_seconds, 6),
         }
 
 
@@ -749,6 +759,12 @@ class SearchService:
             finally:
                 with self._lock:
                     self.stats.searching -= 1
+        with self._lock:
+            c = report.counts
+            self.stats.funnel_enumerate_seconds += c.enumerate_seconds
+            self.stats.funnel_rules_seconds += c.rules_seconds
+            self.stats.funnel_memory_seconds += c.memory_seconds
+            self.stats.funnel_simulate_seconds += c.sim_seconds
         return report.to_json()
 
     def _run_flight(
@@ -830,6 +846,8 @@ _METRIC_COUNTERS = (
 _METRIC_GAUGES = (
     "searching", "peak_searching", "inflight", "entries", "hit_rate",
     "search_concurrency",
+    "funnel_enumerate_seconds", "funnel_rules_seconds",
+    "funnel_memory_seconds", "funnel_simulate_seconds",
 )
 
 

@@ -1,0 +1,275 @@
+"""Columnar cold-search funnel: parity with the scalar reference path.
+
+The vectorized funnel (:mod:`repro.core.funnel`) must be *byte-identical*
+to the per-candidate scalar funnel — same survivors, same raw indices,
+same funnel counts — for every pool shape and shard partition. These
+tests pin that contract with deterministic fixtures; the randomized
+property versions live in ``tests/test_funnel_properties.py`` (hypothesis,
+skipped when unavailable).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.arch import ModelArch
+from repro.core import funnel
+from repro.core.params import GpuConfig, default_parameter_space
+from repro.core.search import (
+    FilterBank,
+    SearchCounts,
+    _use_vectorized,
+    iter_raw_strategies,
+    iter_valid_strategies,
+)
+from repro.hw.catalog import get_device
+
+GB = 64
+SEQ = 2048
+
+
+@pytest.fixture(scope="module")
+def tiny_moe() -> ModelArch:
+    return ModelArch(
+        name="tiny-moe", family="moe", num_layers=4, hidden=128,
+        heads=8, kv_heads=4, ffn=512, vocab=256, num_experts=8, top_k=2,
+    )
+
+
+def _collect(arch, gpus, *, vectorize, space=None, shard=None):
+    counts = SearchCounts()
+    if shard is None:
+        out = list(iter_valid_strategies(
+            arch, gpus, GB, SEQ, counts=counts, space=space,
+            indexed=True, vectorize=vectorize,
+        ))
+    else:
+        out = list(iter_valid_strategies(
+            arch, gpus, GB, SEQ, counts=counts, space=space,
+            indexed=True, shard=shard, vectorize=vectorize,
+        ))
+    return out, counts
+
+
+POOLS = {
+    "fixed": [GpuConfig("A100", 8)],
+    "sweep": [GpuConfig("A100", 4), GpuConfig("A100", 8)],
+}
+
+
+@pytest.mark.parametrize("pool", sorted(POOLS))
+def test_vectorized_matches_scalar_dense(tiny_dense, pool):
+    gpus = POOLS[pool]
+    vec, cv = _collect(tiny_dense, gpus, vectorize=True)
+    ref, cs = _collect(tiny_dense, gpus, vectorize=False)
+    assert vec == ref
+    assert len(vec) > 0
+    assert cv.normalized() == cs.normalized()
+
+
+@pytest.mark.parametrize("pool", sorted(POOLS))
+def test_vectorized_matches_scalar_moe(tiny_moe, pool):
+    gpus = POOLS[pool]
+    vec, cv = _collect(tiny_moe, gpus, vectorize=True)
+    ref, cs = _collect(tiny_moe, gpus, vectorize=False)
+    assert vec == ref
+    assert len(vec) > 0
+    assert cv.normalized() == cs.normalized()
+
+
+def test_shard_partition_matches_serial(tiny_dense):
+    """Each shard is byte-identical scalar-vs-vectorized, and the shard
+    union (in seq order) reproduces the serial stream exactly."""
+    gpus = POOLS["sweep"]
+    serial, c_serial = _collect(tiny_dense, gpus, vectorize=True)
+    union = []
+    merged = SearchCounts()
+    for i in range(3):
+        vec, cv = _collect(tiny_dense, gpus, vectorize=True, shard=(i, 3))
+        ref, cs = _collect(tiny_dense, gpus, vectorize=False, shard=(i, 3))
+        assert vec == ref
+        assert cv.normalized() == cs.normalized()
+        union.extend(vec)
+        merged.merge(cv)
+    assert sorted(union, key=lambda p: p[0]) == serial
+    assert merged.normalized() == c_serial.normalized()
+
+
+def test_capped_style_abandonment_flushes_counts(tiny_dense):
+    """Abandoning the stream mid-iteration (as a consumer under a budget
+    does) still leaves the timing split flushed into counts."""
+    counts = SearchCounts()
+    it = iter_valid_strategies(
+        tiny_dense, POOLS["fixed"], GB, SEQ, counts=counts, vectorize=False,
+    )
+    next(it)
+    it.close()
+    assert counts.generated > 0
+    total = (counts.enumerate_seconds + counts.rules_seconds
+             + counts.memory_seconds)
+    assert total >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# can_vectorize gating + scalar fallback
+# ---------------------------------------------------------------------------
+
+
+def _default_space(arch, gpu):
+    spec = get_device(gpu.device)
+    return default_parameter_space(
+        arch, gpu.num_devices, spec.devices_per_node, GB
+    )
+
+
+def test_can_vectorize_default_space(tiny_dense):
+    assert funnel.can_vectorize(_default_space(tiny_dense, POOLS["fixed"][0]))
+
+
+def test_can_vectorize_rejects_unknown_key(tiny_dense):
+    sp = dict(_default_space(tiny_dense, POOLS["fixed"][0]))
+    sp["not_a_strategy_field"] = [1, 2]
+    assert not funnel.can_vectorize(sp)
+
+
+def test_can_vectorize_rejects_nonint_divisor(tiny_dense):
+    sp = dict(_default_space(tiny_dense, POOLS["fixed"][0]))
+    sp["micro_batch_size"] = [1, 2.5]
+    assert not funnel.can_vectorize(sp)
+
+
+def test_can_vectorize_rejects_full_without_pp(tiny_dense):
+    sp = dict(_default_space(tiny_dense, POOLS["fixed"][0]))
+    sp.pop("pipeline_parallel")
+    assert ("full" in sp["recompute_granularity"]) and not funnel.can_vectorize(sp)
+
+
+def test_unvectorizable_space_falls_back_to_scalar(tiny_dense):
+    """A space can_vectorize rejects still streams correctly (scalar
+    fallback inside the vectorize=True dispatch)."""
+    sp = dict(_default_space(tiny_dense, POOLS["fixed"][0]))
+    sp.pop("pipeline_parallel")
+    sp["recompute_granularity"] = ["none", "selective"]
+    vec, cv = _collect(tiny_dense, POOLS["fixed"], vectorize=True, space=sp)
+    ref, cs = _collect(tiny_dense, POOLS["fixed"], vectorize=False, space=sp)
+    assert vec == ref and len(vec) > 0
+    assert cv.normalized() == cs.normalized()
+
+
+def test_env_knob_forces_scalar(monkeypatch):
+    monkeypatch.setenv("ASTRA_SCALAR_FUNNEL", "1")
+    assert not _use_vectorized(None)
+    monkeypatch.delenv("ASTRA_SCALAR_FUNNEL")
+    assert _use_vectorized(None)
+    assert _use_vectorized(False) is False
+    assert _use_vectorized(True) is True
+
+
+# ---------------------------------------------------------------------------
+# MemoryFilter.block_valid vs is_valid
+# ---------------------------------------------------------------------------
+
+
+def _memory_columns(strategies):
+    def col(fn, dtype):
+        return np.array([fn(s) for s in strategies], dtype=dtype)
+
+    return dict(
+        tp=col(lambda s: s.tensor_parallel, np.int64),
+        pp=col(lambda s: s.pipeline_parallel, np.int64),
+        mbs=col(lambda s: s.micro_batch_size, np.int64),
+        ep=col(lambda s: s.expert_parallel, np.int64),
+        dp=col(
+            lambda s: s.num_devices
+            // (s.pipeline_parallel * s.tensor_parallel),
+            np.int64,
+        ),
+        sp=col(lambda s: bool(s.sequence_parallel), bool),
+        flash=col(lambda s: bool(s.use_flash_attn), bool),
+        zero=col(lambda s: bool(s.use_distributed_optimizer), bool),
+        offload=col(lambda s: bool(s.offload_optimizer), bool),
+        rg_full=col(lambda s: s.recompute_granularity == "full", bool),
+        rg_sel=col(lambda s: s.recompute_granularity == "selective", bool),
+    )
+
+
+@pytest.mark.parametrize("arch_name", ["dense", "moe"])
+def test_block_valid_matches_is_valid(tiny_dense, tiny_moe, arch_name):
+    arch = tiny_dense if arch_name == "dense" else tiny_moe
+    gpu = GpuConfig("A100", 8)
+    bank = FilterBank(arch, SEQ)
+    strategies = [
+        s for s in iter_raw_strategies(arch, gpu, GB)
+        if s.is_divisible(arch, GB)
+    ]
+    assert strategies
+    got = bank.mem_filter.block_valid(
+        arch, device=gpu.device, **_memory_columns(strategies)
+    )
+    want = np.array(
+        [bank.mem_filter.is_valid(arch, s) for s in strategies], dtype=bool
+    )
+    assert np.array_equal(got, want)
+
+
+def test_block_valid_defers_on_inference(tiny_dense):
+    """Serving workloads use the KV-cache footprint path, which block_valid
+    does not vectorize — it must return None so callers fall back."""
+    from repro.core.memory import MemoryFilter
+
+    class _Inf:
+        def mix(self, gb):
+            return [(1, 1.0)]
+
+    mf = MemoryFilter(seq=SEQ, inference=_Inf(), batch=1)
+    cols = _memory_columns([
+        s for s in iter_raw_strategies(tiny_dense, GpuConfig("A100", 8), GB)
+        if s.is_divisible(tiny_dense, GB)
+    ][:4])
+    assert mf.block_valid(tiny_dense, device="A100", **cols) is None
+
+
+# ---------------------------------------------------------------------------
+# SearchCounts wire format: sparse timing fields
+# ---------------------------------------------------------------------------
+
+
+def test_counts_wire_sparse_when_zero():
+    c = SearchCounts(generated=10, divisible=8, after_rules=6, after_memory=4)
+    d = c.to_dict()
+    for k in ("enumerate_seconds", "rules_seconds", "memory_seconds",
+              "sim_seconds"):
+        assert k not in d  # pre-split payloads stay byte-identical
+    assert SearchCounts.from_dict(d) == c
+
+
+def test_counts_wire_roundtrip_with_timing():
+    c = SearchCounts(
+        generated=10, divisible=8, after_rules=6, after_memory=4,
+        gen_seconds=0.25, enumerate_seconds=0.1, rules_seconds=0.05,
+        memory_seconds=0.04, sim_seconds=0.5,
+    )
+    assert SearchCounts.from_dict(c.to_dict()) == c
+
+
+def test_counts_merge_sums_timing():
+    a = SearchCounts(generated=1, enumerate_seconds=0.1, sim_seconds=0.2)
+    b = SearchCounts(generated=2, enumerate_seconds=0.3, sim_seconds=0.1)
+    a.merge(b)
+    assert a.generated == 3
+    assert a.enumerate_seconds == pytest.approx(0.4)
+    assert a.sim_seconds == pytest.approx(0.3)
+
+
+def test_normalized_zeroes_every_wall_time_field():
+    c = SearchCounts(
+        generated=1, divisible=1, after_rules=1, after_memory=1,
+        gen_seconds=1.0, enumerate_seconds=1.0, rules_seconds=1.0,
+        memory_seconds=1.0, sim_seconds=1.0,
+    )
+    n = c.normalized()
+    assert (n.gen_seconds, n.enumerate_seconds, n.rules_seconds,
+            n.memory_seconds, n.sim_seconds) == (0.0,) * 5
+    assert dataclasses.replace(c, gen_seconds=0.0, enumerate_seconds=0.0,
+                               rules_seconds=0.0, memory_seconds=0.0,
+                               sim_seconds=0.0) == n

@@ -1,0 +1,176 @@
+"""Property tests for the columnar funnel (hypothesis; module skips when
+hypothesis is unavailable, mirroring tests/test_rules.py).
+
+Three oracles, each randomized:
+
+* compiled rule block-masks == the per-candidate interpreter, including
+  rules that defeat mask compilation (fallback path),
+* flat-forest GBT ``predict`` == ``predict_reference`` bit-for-bit,
+* vectorized funnel == scalar funnel (survivors, raw indices, counts)
+  over randomized sub-spaces of the default parameter space.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arch import ModelArch
+from repro.core.params import GpuConfig, default_parameter_space
+from repro.core.rules import CategoricalColumn, Rule, RuleFilter
+from repro.core.search import SearchCounts, iter_valid_strategies
+from repro.gbt import GradientBoostedTrees
+from repro.hw.catalog import get_device
+
+# ---------------------------------------------------------------------------
+# compiled masks vs interpreter
+# ---------------------------------------------------------------------------
+
+# a rule set spanning the mask compiler's surface: arithmetic, modulo,
+# precedence, categorical equality, truthiness, short-circuits — plus two
+# rules with NO faithful block evaluation (categorical-vs-categorical
+# comparison; ordered comparison on a categorical) that must route through
+# the per-candidate fallback
+_RULES = [
+    "$a % $b = 0",
+    "$g = full && $a > 4",
+    "$flag != none || $c < 2",
+    "$a * 2 + $c >= $b * 3",
+    "$g != none",
+    "$a - $b > $c || $g = selective && $flag = true",
+    "$g = $h",  # MaskCompileError: two categorical columns
+]
+
+_CATS = ("none", "selective", "full")
+
+
+def _columns(rows):
+    def cat(key):
+        vals = sorted({r[key] for r in rows})
+        codes = np.array([vals.index(r[key]) for r in rows], dtype=np.int64)
+        return CategoricalColumn(vals, codes)
+
+    return {
+        "a": np.array([r["a"] for r in rows], dtype=np.int64),
+        "b": np.array([r["b"] for r in rows], dtype=np.int64),
+        "c": np.array([r["c"] for r in rows], dtype=np.int64),
+        "flag": np.array([r["flag"] for r in rows], dtype=bool),
+        "g": cat("g"),
+        "h": cat("h"),
+    }
+
+
+_row = st.fixed_dictionaries({
+    "a": st.integers(0, 16),
+    "b": st.integers(1, 8),  # never 0: both paths would raise on % 0
+    "c": st.integers(-4, 4),
+    "flag": st.booleans(),
+    "g": st.sampled_from(_CATS),
+    "h": st.sampled_from(_CATS),
+})
+
+
+@given(rows=st.lists(_row, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_property_block_masks_match_interpreter(rows):
+    f = RuleFilter(_RULES)
+    env = _columns(rows)
+    got = f.block_violations(env, len(rows), lambda i: rows[i])
+    want = np.array([not f.is_valid(r) for r in rows], dtype=bool)
+    assert np.array_equal(got, want)
+
+
+@given(rows=st.lists(_row, min_size=1, max_size=32), data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_property_single_rule_mask(rows, data):
+    text = data.draw(st.sampled_from(_RULES[:-1]))  # last needs fallback
+    r = Rule.parse(text)
+    env = _columns(rows)
+    got = r.block_mask(env, len(rows))
+    want = np.array([r.matches(row) for row in rows], dtype=bool)
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# flat-forest GBT vs recursive reference
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**16), nan_frac=st.floats(0.0, 0.3))
+@settings(max_examples=10, deadline=None)
+def test_property_flat_forest_bit_identical(seed, nan_frac):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((300, 6))
+    y = X[:, 0] * 2 - X[:, 1] + 0.1 * rng.standard_normal(300)
+    m = GradientBoostedTrees(n_estimators=25, max_depth=4, seed=seed).fit(X, y)
+    Xq = rng.standard_normal((128, 6))
+    mask = rng.uniform(size=Xq.shape) < nan_frac
+    Xq[mask] = np.nan
+    assert np.array_equal(m.predict(Xq), m.predict_reference(Xq))
+    m2 = GradientBoostedTrees.from_dict(m.to_dict())
+    assert np.array_equal(m2.predict(Xq), m.predict(Xq))
+
+
+# ---------------------------------------------------------------------------
+# vectorized funnel vs scalar funnel over randomized sub-spaces
+# ---------------------------------------------------------------------------
+
+_ARCH = ModelArch(
+    name="tiny-prop", family="dense", num_layers=4, hidden=128,
+    heads=8, kv_heads=4, ffn=512, vocab=256,
+)
+_GB, _SEQ = 64, 2048
+
+
+def _subspace(data):
+    gpu = GpuConfig("A100", 8)
+    base = default_parameter_space(
+        _ARCH, gpu.num_devices, get_device(gpu.device).devices_per_node, _GB
+    )
+    space = {}
+    for k, vals in base.items():
+        keep = data.draw(
+            st.lists(st.sampled_from(vals), min_size=1, max_size=len(vals),
+                     unique=True),
+            label=k,
+        )
+        space[k] = sorted(keep, key=vals.index)
+    return gpu, space
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_property_vectorized_funnel_parity(data):
+    gpu, space = _subspace(data)
+    out = {}
+    for vec in (True, False):
+        counts = SearchCounts()
+        out[vec] = (
+            list(iter_valid_strategies(
+                _ARCH, [gpu], _GB, _SEQ, space=space, counts=counts,
+                indexed=True, vectorize=vec,
+            )),
+            counts.normalized(),
+        )
+    assert out[True] == out[False]
+
+
+@given(data=st.data(), n=st.integers(2, 4))
+@settings(max_examples=10, deadline=None)
+def test_property_shard_union_is_serial(data, n):
+    gpu, space = _subspace(data)
+    counts = SearchCounts()
+    serial = list(iter_valid_strategies(
+        _ARCH, [gpu], _GB, _SEQ, space=space, counts=counts,
+        indexed=True, vectorize=True,
+    ))
+    union, merged = [], SearchCounts()
+    for i in range(n):
+        c = SearchCounts()
+        union.extend(iter_valid_strategies(
+            _ARCH, [gpu], _GB, _SEQ, space=space, counts=c,
+            indexed=True, shard=(i, n), vectorize=True,
+        ))
+        merged.merge(c)
+    assert sorted(union, key=lambda p: p[0]) == serial
+    assert merged.normalized() == counts.normalized()

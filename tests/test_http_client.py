@@ -82,7 +82,20 @@ def test_post_and_auth_header_reach_the_server():
 
     def run():
         conn, _ = srv.accept()
-        captured["raw"] = conn.recv(65536)
+        # urllib may send headers and body in separate segments: read until
+        # the Content-Length-declared body has fully arrived
+        raw = b""
+        while b"\r\n\r\n" not in raw:
+            raw += conn.recv(65536)
+        head, _, payload = raw.partition(b"\r\n\r\n")
+        length = next(
+            int(line.split(b":")[1])
+            for line in head.split(b"\r\n")
+            if line.lower().startswith(b"content-length:")
+        )
+        while len(payload) < length:
+            payload += conn.recv(65536)
+        captured["raw"] = head + b"\r\n\r\n" + payload
         body = b'{"ok": true}'
         conn.sendall(
             b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n"
